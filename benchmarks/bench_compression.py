@@ -1,0 +1,61 @@
+"""Bandwidth-budget study (paper §5.1 / Table-free claim): convergence vs
+wire bytes for dense / top-k / random-k gradient channels.
+
+Measures what the paper proposes but never built: "given a fixed bandwidth
+budget, maximize the information transferred per iteration".
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.compression import GradientCompressor, dense_bytes
+from repro.core.reducer import MasterReducer
+from repro.core.simulation import make_cnn_problem
+from repro.data.datasets import synthetic_mnist
+from repro.optim import adagrad
+
+
+def run_channel(method: str, frac: float, *, iters: int = 25,
+                n_train: int = 2000, seed: int = 0) -> Dict:
+    init_p, grad_fn, eval_fn = make_cnn_problem()
+    X, y = synthetic_mnist(n_train, seed=seed)
+    Xt, yt = synthetic_mnist(400, seed=seed + 99)
+    params = init_p(jax.random.PRNGKey(seed))
+    comp = None if method == "dense" else GradientCompressor(method,
+                                                             frac=frac)
+    red = MasterReducer(params, adagrad(lr=0.02), compressor=comp)
+    rng = np.random.RandomState(seed)
+    per_iter_bytes = dense_bytes(params) if comp is None else \
+        comp.wire_bytes(params)
+    for _ in range(iters):
+        msgs = {}
+        for w in range(4):
+            idx = rng.choice(n_train, 256, replace=False)
+            g, _ = grad_fn(red.params, X[idx], y[idx])
+            msgs[f"w{w}"] = (g, 256)
+        red.reduce_and_step(msgs)
+    err = eval_fn(red.params, Xt, yt)
+    return {"method": f"{method}@{frac}", "test_error": float(err),
+            "bytes_per_msg": per_iter_bytes,
+            "bandwidth_saving": dense_bytes(params) / max(per_iter_bytes, 1)}
+
+
+def run(iters: int = 25) -> List[Dict]:
+    out = [run_channel("dense", 1.0, iters=iters)]
+    for method in ("topk", "randk", "blocktopk"):
+        out.append(run_channel(method, 0.01, iters=iters))
+    return out
+
+
+def main():
+    print("channel,test_error,bytes_per_msg,bandwidth_saving")
+    for r in run():
+        print(f"{r['method']},{r['test_error']:.4f},{r['bytes_per_msg']},"
+              f"{r['bandwidth_saving']:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

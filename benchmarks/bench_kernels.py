@@ -1,0 +1,90 @@
+"""Kernel micro-benchmarks.
+
+Wall-clock on this CPU container times the pure-jnp REFERENCE (XLA CPU);
+the Pallas kernels are TPU TARGET and run here in interpret mode, so their
+CPU time is *not* a performance signal — we report ref timings plus the
+kernels' analytic VMEM/FLOP characteristics (what the roofline needs).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6      # us
+
+
+def bench_attention() -> List[Dict]:
+    from repro.kernels.flash_attention.ref import attention_ref
+    rows = []
+    for (B, H, K, S, D) in [(1, 8, 2, 512, 64), (1, 8, 2, 1024, 64)]:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, H, S, D))
+        k = jax.random.normal(ks[1], (B, K, S, D))
+        v = jax.random.normal(ks[2], (B, K, S, D))
+        f = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+        us = _time(f, q, k, v)
+        flops = 4 * B * H * S * S * D
+        rows.append({"name": f"attn_ref_S{S}", "us_per_call": us,
+                     "derived": f"{flops/us/1e3:.1f}GFLOP/s"})
+    # VMEM claim of the pallas kernel at production tile
+    vmem_kb = (128 * 128 + 2 * 128 * 128 + 128 * 128) * 4 / 1024
+    rows.append({"name": "flash_vmem_tile128", "us_per_call": 0,
+                 "derived": f"{vmem_kb:.0f}KiB<16MiB"})
+    return rows
+
+
+def bench_ssd() -> List[Dict]:
+    from repro.kernels.ssd_scan.ref import ssd_ref
+    from repro.models.ssm import ssd_chunked
+    rows = []
+    B, S, nh, hd, N = 1, 2048, 8, 64, 128
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    seq = jax.jit(lambda *a: ssd_ref(*a))
+    rows.append({"name": "ssd_sequential_S2048",
+                 "us_per_call": _time(seq, x, dt, A, Bm, Cm, reps=3),
+                 "derived": "scan-over-time"})
+    ch = jax.jit(lambda x, dt, A, b, c: ssd_chunked(
+        x, dt, A, b[:, :, None, :], c[:, :, None, :], chunk=128)[0])
+    rows.append({"name": "ssd_chunked_S2048",
+                 "us_per_call": _time(ch, x, dt, A, Bm, Cm, reps=3),
+                 "derived": "chunk128-MXU-form"})
+    return rows
+
+
+def bench_topk() -> List[Dict]:
+    from repro.core.compression import GradientCompressor
+    x = {"g": jax.random.normal(jax.random.PRNGKey(0), (1 << 20,))}
+    rows = []
+    for method in ("topk", "blocktopk"):
+        c = GradientCompressor(method, frac=1 / 128)
+        f = jax.jit(lambda g: c.roundtrip(g, None)[0]["g"])
+        us = _time(f, x)
+        rows.append({"name": f"compress_{method}_1M",
+                     "us_per_call": us,
+                     "derived": f"wire={c.wire_bytes(x)}B"})
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for row in bench_attention() + bench_ssd() + bench_topk():
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

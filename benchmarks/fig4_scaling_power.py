@@ -1,0 +1,65 @@
+"""Fig. 4 reproduction: power (vectors/sec) and latency vs node count.
+
+Paper claim: "Power increases linearly up to 64 slave nodes, at which
+point a large increase in latency limits additional power gains" — the
+single master's synchronous gradient ingest is the bottleneck.
+
+Synthetic-compute mode (the paper's slave nodes are i3-2120 workstations
+at ~113 vectors/sec; we sweep 1..96 nodes like the paper's 1,2,4,...,96).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (JoinEvent, MasterEventLoop, MasterReducer,
+                        UploadDataEvent)
+from repro.core.scheduler import AdaptiveScheduler
+from repro.core.simulation import GRID_NODE, NetworkModel, SimulatedCluster
+from repro.optim import sgd
+
+NODE_COUNTS = [1, 2, 4, 8, 16, 32, 64, 96]
+
+
+def measure(n_workers: int, *, T: float = 4.0, iters: int = 8,
+            network: NetworkModel = NetworkModel(), seed: int = 0
+            ) -> Dict[str, float]:
+    red = MasterReducer({"w": np.zeros(1)}, sgd(lr=0.0))
+    cluster = SimulatedCluster(mode="synthetic", network=network, seed=seed)
+    loop = MasterEventLoop(reducer=red, cluster=cluster,
+                           scheduler=AdaptiveScheduler(
+                               T=T, prior_power=GRID_NODE.power_vps))
+    loop.submit(UploadDataEvent(range(60_000)))
+    for i in range(n_workers):
+        w = f"w{i}"
+        cluster.add_worker(w, GRID_NODE)
+        loop.submit(JoinEvent(w, capacity=3000))
+    logs = loop.run(iters)
+    tail = logs[iters // 2:]
+    return {
+        "n": n_workers,
+        "power_vps": float(np.mean([l.power for l in tail])),
+        "latency_ms": float(np.mean([l.mean_latency for l in tail])) * 1e3,
+        "wall_per_iter_s": float(np.mean([l.wall_time for l in tail])),
+    }
+
+
+def run(node_counts: List[int] = NODE_COUNTS, iters: int = 8):
+    rows = [measure(n, iters=iters) for n in node_counts]
+    ideal = rows[0]["power_vps"]
+    for r in rows:
+        r["ideal_power"] = ideal * r["n"]
+        r["efficiency"] = r["power_vps"] / r["ideal_power"]
+    return rows
+
+
+def main():
+    print("n_nodes,power_vps,ideal_vps,efficiency,latency_ms")
+    for r in run():
+        print(f"{r['n']},{r['power_vps']:.0f},{r['ideal_power']:.0f},"
+              f"{r['efficiency']:.3f},{r['latency_ms']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

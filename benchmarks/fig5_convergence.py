@@ -1,0 +1,74 @@
+"""Fig. 5 reproduction: test error at FIXED WALL-CLOCK vs node count.
+
+Paper claims: (1) training is correct at every node count (weighted
+reduce == synchronized SGD); (2) more nodes => lower test error at the
+same wall-clock, partly because the 3000-vector/node cap means more nodes
+cover more of the training set (1 node sees 3/60 of MNIST).
+
+Real-gradient mode on the paper's conv net over synthetic-MNIST.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core import (JoinEvent, MasterEventLoop, MasterReducer,
+                        UploadDataEvent)
+from repro.core.scheduler import AdaptiveScheduler
+from repro.core.simulation import (GRID_NODE, SimulatedCluster,
+                                   make_cnn_problem)
+from repro.data.datasets import synthetic_mnist
+from repro.optim import adagrad
+
+NODE_COUNTS = [1, 2, 4, 8]
+
+
+def measure(n_workers: int, *, wall_budget_s: float = 45.0, T: float = 1.0,
+            n_train: int = 6_400, n_test: int = 500, cap: int = 400,
+            seed: int = 0, noise: float = 4.0):
+    # Calibration: noise=4.0 with a 400-vector/node cap makes single-node
+    # training coverage-limited (the paper's 3000-of-60000 situation) while
+    # 8 nodes cover 3200 vectors -> visibly lower test error at the same
+    # wall-clock. lr=0.02 AdaGrad converges train loss ~0.01-0.07 in 45s.
+    init_p, grad_fn, eval_fn = make_cnn_problem()
+    X, y = synthetic_mnist(n_train, seed=seed, noise=noise)
+    Xt, yt = synthetic_mnist(n_test, seed=seed + 1000, noise=noise)
+    params = init_p(jax.random.PRNGKey(seed))
+    red = MasterReducer(params, adagrad(lr=0.02))
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=seed)
+    loop = MasterEventLoop(reducer=red, cluster=cluster,
+                           scheduler=AdaptiveScheduler(
+                               T=T, prior_power=GRID_NODE.power_vps))
+    loop.submit(UploadDataEvent(range(n_train)))
+    for i in range(n_workers):
+        w = f"w{i}"
+        cluster.add_worker(w, GRID_NODE)
+        loop.submit(JoinEvent(w, capacity=cap))
+    iters = 0
+    while loop.clock < wall_budget_s:
+        loop.iteration()
+        iters += 1
+    err = eval_fn(red.params, Xt, yt)
+    data_covered = sum(len(a.allocated)
+                       for a in loop.allocator.workers.values())
+    return {"n": n_workers, "iters": iters, "test_error": float(err),
+            "data_covered": data_covered,
+            "final_loss": float(loop.history[-1].loss)}
+
+
+def run(node_counts: List[int] = NODE_COUNTS, wall_budget_s: float = 45.0):
+    return [measure(n, wall_budget_s=wall_budget_s) for n in node_counts]
+
+
+def main():
+    print("n_nodes,iters,test_error,data_covered,final_loss")
+    for r in run():
+        print(f"{r['n']},{r['iters']},{r['test_error']:.4f},"
+              f"{r['data_covered']},{r['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

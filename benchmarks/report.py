@@ -1,0 +1,121 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the grid
+JSONL. Run after ``python -m repro.launch.dryrun_all --all``:
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/report.md
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.roofline import ADVICE, RESULTS
+
+ARCH_ORDER = [
+    "llama4-scout-17b-a16e", "arctic-480b", "mamba2-780m", "zamba2-7b",
+    "minitron-8b", "qwen3-4b", "granite-8b", "paligemma-3b",
+    "whisper-large-v3", "command-r-plus-104b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_all(path: str = RESULTS):
+    by_key = {}
+    if not os.path.exists(path):
+        return by_key
+    for line in open(path):
+        try:
+            d = json.loads(line)
+        except Exception:
+            continue
+        by_key[(d.get("arch"), d.get("shape"), d.get("mesh_tag"))] = d
+    return by_key
+
+
+def _gb(x):
+    return f"{x/2**30:.2f}"
+
+
+def dryrun_section(by_key) -> str:
+    out = ["### §Dry-run — lower+compile for every (arch x shape x mesh)",
+           "",
+           "Mesh tags: `1pod-256` = (data=16, model=16); `2pod-512` = "
+           "(pod=2, data=16, model=16). `args GiB` = per-device bytes of "
+           "the sharded inputs (params+opt+cache) from memory_analysis; "
+           "`coll ops` = collective op counts in the partitioned HLO "
+           "(scanned program, per-iteration ops appear once).",
+           "",
+           "| arch | shape | mesh | compile | args GiB/dev | AR/AG/RS/A2A/CP | status |",
+           "|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for tag in ("1pod-256", "2pod-512"):
+                d = by_key.get((arch, shape, tag))
+                if d is None:
+                    if tag == "2pod-512" and by_key.get(
+                            (arch, shape, "1pod-256"), {}).get("skipped"):
+                        continue
+                    out.append(f"| {arch} | {shape} | {tag} | - | - | - | "
+                               f"MISSING |")
+                    continue
+                if d.get("skipped"):
+                    out.append(f"| {arch} | {shape} | {tag} | - | - | - | "
+                               f"SKIP: {d.get('reason','')[:60]} |")
+                    continue
+                m = d.get("memory", {})
+                args_gb = _gb(m.get("argument_bytes", 0))
+                ops = d.get("n_collective_ops", {})
+                opstr = "/".join(str(ops.get(k, 0)) for k in (
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"))
+                out.append(
+                    f"| {arch} | {shape} | {tag} | {d['compile_s']:.0f}s "
+                    f"| {args_gb} | {opstr} | ok |")
+    return "\n".join(out)
+
+
+def roofline_section(by_key) -> str:
+    out = ["### §Roofline — per (arch x shape), single-pod 256 chips",
+           "",
+           "Terms in ms/step per chip (v5e: 197 TF bf16, 819 GB/s HBM, "
+           "50 GB/s ICI). FLOPs/bytes from probe-extrapolated "
+           "cost_analysis (scan bodies corrected); collective bytes from "
+           "the partitioned HLO. `useful` = MODEL_FLOPS (6ND train / 2ND "
+           "serve, N_active for MoE) / HLO_FLOPs.",
+           "",
+           "| arch | shape | compute | memory | collective | dominant | "
+           "useful | next lever |",
+           "|---|---|---|---|---|---|---|---|"]
+    doms = defaultdict(int)
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = by_key.get((arch, shape, "1pod-256"))
+            if d is None:
+                continue
+            if d.get("skipped"):
+                out.append(f"| {arch} | {shape} | - | - | - | SKIP | - | "
+                           f"{d.get('reason','')[:50]} |")
+                continue
+            rl = d["roofline"]
+            doms[rl["dominant"]] += 1
+            adv = ADVICE.get((rl["dominant"], d["kind"]), "")
+            out.append(
+                f"| {arch} | {shape} | {rl['compute_s']*1e3:.1f} "
+                f"| {rl['memory_s']*1e3:.1f} | {rl['collective_s']*1e3:.1f} "
+                f"| **{rl['dominant']}** | {d['useful_flops_ratio']:.2f} "
+                f"| {adv} |")
+    out.append("")
+    out.append("Dominant-term census: " + ", ".join(
+        f"{k}: {v}" for k, v in sorted(doms.items())))
+    return "\n".join(out)
+
+
+def main():
+    by_key = load_all()
+    print(dryrun_section(by_key))
+    print()
+    print(roofline_section(by_key))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Roofline table (deliverable g): reads the dry-run grid JSONL and emits
+per-(arch x shape) compute/memory/collective terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line 'what would move it'.
+
+Single-pod (16x16, 256 chips) per the assignment; multi-pod rows prove the
+pod axis shards and are listed in §Dry-run only.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "dryrun_grid.jsonl")
+
+ADVICE = {
+    ("memory", "train"): "cut remat recompute reads / bf16 opt accumulator",
+    ("memory", "prefill"): "flash-attention kernel removes S^2 score "
+                           "materialization",
+    ("memory", "decode"): "decode is weight-streaming; raise batch or "
+                          "quantize weights",
+    ("collective", "train"): "less TP for small models: remap model axis "
+                             "to data-parallel; overlap FSDP gathers",
+    ("collective", "prefill"): "shard sequence (context parallel) instead "
+                               "of TP for long prompts",
+    ("collective", "decode"): "replicate small weights; batch decode "
+                              "steps to amortize gathers",
+    ("compute", "train"): "near roofline: raise arithmetic intensity via "
+                          "larger per-chip batch",
+    ("compute", "prefill"): "near roofline: fuse attention (Pallas)",
+    ("compute", "decode"): "compute-bound decode is unusual: check "
+                           "dispatch einsum overhead (MoE)",
+}
+
+
+def load(path: str = RESULTS, mesh_tag: str = "1pod-256") -> List[Dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        try:
+            d = json.loads(line)
+        except Exception:
+            continue
+        if d.get("mesh_tag") != mesh_tag:
+            continue
+        rows.append(d)
+    return rows
+
+
+def fmt_row(d: Dict) -> Dict:
+    if d.get("skipped"):
+        return {"arch": d["arch"], "shape": d["shape"], "skipped": True,
+                "reason": d.get("reason", "")}
+    rl = d["roofline"]
+    kind = d["kind"]
+    dom = rl["dominant"]
+    return {
+        "arch": d["arch"], "shape": d["shape"],
+        "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+        "collective_s": rl["collective_s"], "dominant": dom,
+        "model_flops_per_chip": d["model_flops_per_chip"],
+        "hlo_flops_per_chip": d["flops_per_chip"],
+        "useful_ratio": d["useful_flops_ratio"],
+        "advice": ADVICE.get((dom, kind), ""),
+        "skipped": False,
+    }
+
+
+def main():
+    rows = load()
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,advice")
+    for d in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        r = fmt_row(d)
+        if r.get("skipped"):
+            print(f"{r['arch']},{r['shape']},,,,SKIPPED({r['reason'][:40]}),,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.3f},"
+              f"{r['memory_s']:.3f},{r['collective_s']:.3f},"
+              f"{r['dominant']},{r['useful_ratio']:.3f},{r['advice']}")
+
+
+if __name__ == "__main__":
+    main()

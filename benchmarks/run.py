@@ -1,0 +1,67 @@
+"""Benchmark entrypoint — one section per paper figure/claim.
+
+  fig4   power + latency vs node count          (paper Fig. 4)
+  fig5   test error at fixed wall-clock         (paper Fig. 5)
+  comp   bandwidth-budget gradient channels     (paper §5.1 proposal)
+  kern   kernel micro-benchmarks                (paper §5.1 perf challenge)
+  roof   roofline table from the dry-run grid   (deliverable g)
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+Full-size runs: python -m benchmarks.fig4_scaling_power  etc.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def main() -> None:
+    from benchmarks import (bench_compression, bench_kernels,
+                            fig4_scaling_power, fig5_convergence, roofline)
+
+    print("name,us_per_call,derived")
+
+    # --- Fig. 4: scaling power/latency (reduced sweep for CI speed) ---
+    rows = fig4_scaling_power.run(node_counts=[1, 4, 16, 64, 96], iters=6)
+    for r in rows:
+        print(f"fig4_power_n{r['n']},{r['wall_per_iter_s']*1e6:.0f},"
+              f"{r['power_vps']:.0f}vps_eff{r['efficiency']:.2f}"
+              f"_lat{r['latency_ms']:.0f}ms")
+
+    # --- Fig. 5: convergence at fixed wall-clock (full budget — the
+    # coverage effect needs enough optimization to show; see fig5 module) ---
+    for r in fig5_convergence.run(node_counts=[1, 8], wall_budget_s=45.0):
+        print(f"fig5_err_n{r['n']},{r['iters']},"
+              f"err{r['test_error']:.3f}_cover{r['data_covered']}")
+
+    # --- §5.1: compressed gradient channels ---
+    for r in bench_compression.run(iters=12):
+        print(f"comp_{r['method'].replace('@','_')},{r['bytes_per_msg']},"
+              f"err{r['test_error']:.3f}_save{r['bandwidth_saving']:.0f}x")
+
+    # --- kernels ---
+    for row in (bench_kernels.bench_attention() + bench_kernels.bench_ssd()
+                + bench_kernels.bench_topk()):
+        print(f"kern_{row['name']},{row['us_per_call']:.1f},"
+              f"{row['derived']}")
+
+    # --- roofline summary (if the dry-run grid has been run) ---
+    rows = roofline.load()
+    doms = {}
+    for d in rows:
+        if not d.get("skipped"):
+            doms[d["roofline"]["dominant"]] = doms.get(
+                d["roofline"]["dominant"], 0) + 1
+    if rows:
+        print(f"roofline_pairs,{len(rows)},"
+              + "_".join(f"{k}{v}" for k, v in sorted(doms.items())))
+    else:
+        print("roofline_pairs,0,run `python -m repro.launch.dryrun_all "
+              "--all --out benchmarks/results/dryrun_grid.jsonl`")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end training driver (deliverable b): the ~100M-parameter model
+for a few hundred steps through the full production path.
+
+Presets:
+  tiny : reduced qwen3, 30 steps     (~1 min CPU; CI-friendly)
+  100m : mlitb-lm-100m, 300 steps    (CPU-hours; the real run)
+
+    PYTHONPATH=src python examples/train_e2e.py --preset tiny
+    PYTHONPATH=src python examples/train_e2e.py --preset 100m
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.launch import train as train_cli
+
+PRESETS = {
+    "tiny": ["--arch", "qwen3-4b", "--reduced", "--steps", "30",
+             "--batch", "8", "--seq", "64",
+             "--churn", "10:leave:1,20:join:1"],
+    "100m": ["--arch", "mlitb-lm-100m", "--steps", "300",
+             "--batch", "8", "--seq", "256",
+             "--closure-out", "/tmp/mlitb_lm_100m.json"],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="tiny")
+    ap.add_argument("extra", nargs="*")
+    args = ap.parse_args()
+    return train_cli.main(PRESETS[args.preset] + args.extra)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

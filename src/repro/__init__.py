@@ -1,0 +1,11 @@
+"""MLitB-JAX: elastic, heterogeneity-aware distributed SGD on TPU.
+
+Reproduction + extension of "MLitB: Machine Learning in the Browser"
+(Meeds, Hendriks, Al Faraby, Bruntink, Welling — 2014, cs.DC).
+
+Subpackages: core (the paper's runtime), models (assigned architecture
+zoo), kernels (Pallas TPU), distributed (sharding/collectives/roofline),
+optim, data, checkpoint, train, configs, launch.
+"""
+
+__version__ = "1.0.0"

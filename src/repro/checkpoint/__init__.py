@@ -1,0 +1,2 @@
+from repro.checkpoint.io import (load_closure, load_npz,  # noqa: F401
+                                 save_closure, save_npz)

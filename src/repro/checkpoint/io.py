@@ -1,0 +1,69 @@
+"""Checkpoint store: research-closure JSON (universal) + npz fast path.
+
+The JSON closure is the paper-faithful archive ("models saved in
+universally readable formats"); the npz sidecar is the production fast
+path for large parameter trees (same content, binary container).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.closure import (ResearchClosure, config_from_json,
+                                config_to_json)
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> PyTree:
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save_npz(path: str, params: PyTree, *, cfg: Optional[ArchConfig] = None,
+             meta: Optional[Dict[str, Any]] = None) -> None:
+    flat = _flatten(params)
+    header = {"meta": meta or {}}
+    if cfg is not None:
+        header["config"] = config_to_json(cfg)
+    np.savez(path, __header__=json.dumps(header), **flat)
+
+
+def load_npz(path: str) -> Tuple[PyTree, Dict[str, Any]]:
+    with np.load(path, allow_pickle=False) as z:
+        header = json.loads(str(z["__header__"]))
+        flat = {k: z[k] for k in z.files if k != "__header__"}
+    return _unflatten(flat), header
+
+
+def save_closure(path: str, closure: ResearchClosure,
+                 npz_sidecar: bool = True) -> None:
+    closure.save(path)
+    if npz_sidecar:
+        save_npz(path + ".npz", closure.params, cfg=closure.config,
+                 meta={"arch": closure.arch, "step": closure.step})
+
+
+def load_closure(path: str) -> ResearchClosure:
+    return ResearchClosure.load(path)

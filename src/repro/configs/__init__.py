@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_REGISTRY,
+    ArchConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    list_archs,
+    register,
+)
+from repro.configs.shapes import SHAPE_REGISTRY, InputShape, get_shape  # noqa: F401

@@ -1,0 +1,160 @@
+"""Research closures — MLitB §2.3 / §6.4.
+
+"a single object containing model and algorithm configuration plus code,
+along with model parameters that can be executed (and therefore tested and
+analyzed) by other researchers."
+
+A closure is a single JSON document (universally readable, like the paper's
+JSON model downloads) holding:
+  - format tag + schema version
+  - model:     arch id + full ArchConfig fields
+  - algorithm: optimizer name/hparams, iteration duration T, reduce rule,
+               compression settings
+  - params:    the parameter pytree. Two encodings:
+                 "listing" — nested lists (fully human-readable; small models)
+                 "b64"     — base64(raw little-endian bytes) per leaf with
+                             shape/dtype (compact; still standard-tool readable)
+  - metrics:   training history (the paper's tracked statistics)
+  - lineage:   parent closure hash, created-at step
+
+Round-trip fidelity is property-tested in tests/test_closure.py.
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+
+FORMAT = "mlitb.research-closure"
+VERSION = 2
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Param tree <-> JSON
+# ---------------------------------------------------------------------------
+def _encode_leaf(x, encoding: str) -> Dict[str, Any]:
+    arr = np.asarray(x)
+    if encoding == "listing":
+        return {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                "data": arr.tolist()}
+    raw = arr.astype(arr.dtype.newbyteorder("<")).tobytes()
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype),
+            "b64": base64.b64encode(raw).decode("ascii")}
+
+
+def _decode_leaf(d: Dict[str, Any]) -> np.ndarray:
+    dtype = np.dtype(d["dtype"])
+    if "data" in d:
+        return np.asarray(d["data"], dtype=dtype).reshape(d["shape"])
+    raw = base64.b64decode(d["b64"])
+    return np.frombuffer(raw, dtype=dtype.newbyteorder("<")).astype(
+        dtype).reshape(d["shape"])
+
+
+def encode_tree(tree: PyTree, encoding: str = "b64") -> Any:
+    if isinstance(tree, dict):
+        return {k: encode_tree(v, encoding) for k, v in sorted(tree.items())}
+    return _encode_leaf(tree, encoding)
+
+
+def decode_tree(obj: Any) -> PyTree:
+    if isinstance(obj, dict) and ("b64" in obj or "data" in obj):
+        return _decode_leaf(obj)
+    return {k: decode_tree(v) for k, v in obj.items()}
+
+
+# ---------------------------------------------------------------------------
+# Config <-> JSON
+# ---------------------------------------------------------------------------
+def config_to_json(cfg: ArchConfig) -> Dict[str, Any]:
+    d = dataclasses.asdict(cfg)
+    return d
+
+
+def config_from_json(d: Dict[str, Any]) -> ArchConfig:
+    d = dict(d)
+    if d.get("moe"):
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("ssm"):
+        d["ssm"] = SSMConfig(**d["ssm"])
+    return ArchConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ResearchClosure:
+    arch: str
+    config: ArchConfig
+    algorithm: Dict[str, Any]
+    params: PyTree
+    metrics: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    step: int = 0
+    parent: Optional[str] = None
+
+    # ------------------------------------------------------------------
+    def to_json(self, encoding: str = "b64") -> str:
+        body = {
+            "format": FORMAT,
+            "version": VERSION,
+            "model": {"arch": self.arch, "config": config_to_json(self.config)},
+            "algorithm": self.algorithm,
+            "params": encode_tree(self.params, encoding),
+            "metrics": self.metrics,
+            "step": self.step,
+            "parent": self.parent,
+        }
+        return json.dumps(body, sort_keys=True)
+
+    @property
+    def digest(self) -> str:
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]
+
+    @classmethod
+    def from_json(cls, s: str) -> "ResearchClosure":
+        body = json.loads(s)
+        if body.get("format") != FORMAT:
+            raise ValueError(f"not a research closure: {body.get('format')}")
+        if body.get("version", 1) > VERSION:
+            raise ValueError("closure from a newer schema version")
+        return cls(
+            arch=body["model"]["arch"],
+            config=config_from_json(body["model"]["config"]),
+            algorithm=body["algorithm"],
+            params=decode_tree(body["params"]),
+            metrics=body.get("metrics", []),
+            step=body.get("step", 0),
+            parent=body.get("parent"),
+        )
+
+    # ------------------------------------------------------------------
+    def save(self, path: str, encoding: str = "b64") -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(encoding))
+
+    @classmethod
+    def load(cls, path: str) -> "ResearchClosure":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def child(self, params: PyTree, step: int,
+              metrics: Optional[List[Dict[str, Any]]] = None
+              ) -> "ResearchClosure":
+        """Continuation closure (resume lineage, §6.4)."""
+        return ResearchClosure(
+            arch=self.arch, config=self.config, algorithm=self.algorithm,
+            params=params, metrics=metrics or self.metrics, step=step,
+            parent=self.digest)
+
+
+def jaxify(tree: PyTree) -> PyTree:
+    import jax.numpy as jnp
+    return jax.tree.map(jnp.asarray, tree)

@@ -1,0 +1,121 @@
+"""Partial gradient communication — MLitB §5.1 "Communication Overhead".
+
+"given a fixed bandwidth budget, we want to maximize the information
+transferred per iteration. An algorithm could transmit a random subset of
+the weight gradients, or send the most informative."
+
+Implemented as leaf-wise sparsifiers with error feedback (the residual of
+what was not sent is added to the next message, which keeps convergence —
+property-tested in tests/test_compression.py):
+
+  - ``topk``    : keep the k largest-magnitude entries per leaf
+                  ("the most informative")
+  - ``randk``   : keep k random entries per leaf ("a random subset"),
+                  rescaled by size/k for unbiasedness
+  - ``blocktopk``: keep the top-1 entry of every contiguous block of
+                  1/frac entries — the TPU-friendly variant backed by the
+                  kernels/topk_compress Pallas kernel (no global sort).
+
+``roundtrip`` returns the *dense* tensor the master reconstructs, so the
+reducer stays agnostic to the wire format; ``wire_bytes`` reports the
+bandwidth the message would occupy (values + indices).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _topk_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    flat = jnp.abs(x.reshape(-1))
+    if k >= flat.size:
+        return jnp.ones_like(flat, bool).reshape(x.shape)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    mask = flat >= thresh
+    # break ties deterministically: keep first k
+    cum = jnp.cumsum(mask.astype(jnp.int32))
+    mask = mask & (cum <= k)
+    return mask.reshape(x.shape)
+
+
+def _randk_mask(x: jnp.ndarray, k: int, key) -> jnp.ndarray:
+    n = x.size
+    if k >= n:
+        return jnp.ones(x.shape, bool)
+    scores = jax.random.uniform(key, (n,))
+    thresh = jax.lax.top_k(scores, k)[0][-1]
+    return (scores >= thresh).reshape(x.shape)
+
+
+def _block_top1_mask(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    flat = jnp.abs(x.reshape(-1))
+    n = flat.size
+    pad = (-n) % block
+    fp = jnp.pad(flat, (0, pad), constant_values=-1.0).reshape(-1, block)
+    arg = jnp.argmax(fp, axis=1)
+    mask = jax.nn.one_hot(arg, block, dtype=bool)
+    return mask.reshape(-1)[:n].reshape(x.shape)
+
+
+@dataclass(frozen=True)
+class GradientCompressor:
+    method: str = "topk"            # topk | randk | blocktopk
+    frac: float = 0.01              # fraction of entries kept
+    seed: int = 0
+    min_keep: int = 1
+
+    def _mask_leaf(self, x: jnp.ndarray, key) -> jnp.ndarray:
+        k = max(self.min_keep, int(self.frac * x.size))
+        if self.method == "topk":
+            return _topk_mask(x, k)
+        if self.method == "randk":
+            return _randk_mask(x, k, key)
+        if self.method == "blocktopk":
+            block = max(1, int(round(1.0 / self.frac)))
+            return _block_top1_mask(x, block)
+        raise ValueError(self.method)
+
+    def roundtrip(self, grad: PyTree, residual: Optional[PyTree]
+                  ) -> Tuple[PyTree, PyTree]:
+        """(grad, residual) -> (dense reconstruction of the message,
+        new residual). Error feedback: message = mask*(g + r);
+        r' = (g + r) - message."""
+        if residual is None:
+            residual = jax.tree.map(
+                lambda x: jnp.zeros_like(x, jnp.float32), grad)
+        corrected = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grad, residual)
+        leaves = jax.tree.leaves(corrected)
+        keys = jax.random.split(jax.random.PRNGKey(self.seed), len(leaves))
+        kit = iter(keys)
+        masks = jax.tree.map(lambda x: self._mask_leaf(x, next(kit)),
+                             corrected)
+        scale = 1.0
+        if self.method == "randk":
+            scale = 1.0 / max(self.frac, 1e-9)
+
+        def send(c, m):
+            return jnp.where(m, c * scale, 0.0)
+
+        sent = jax.tree.map(send, corrected, masks)
+        # residual excludes what was sent (unscaled payload)
+        new_res = jax.tree.map(
+            lambda c, m: jnp.where(m, 0.0, c), corrected, masks)
+        return sent, new_res
+
+    def wire_bytes(self, grad: PyTree) -> int:
+        """values(4B) + indices(4B) per kept entry."""
+        total = 0
+        for leaf in jax.tree.leaves(grad):
+            k = max(self.min_keep, int(self.frac * leaf.size))
+            total += 8 * min(k, leaf.size)
+        return total
+
+
+def dense_bytes(grad: PyTree, bytes_per_el: int = 4) -> int:
+    return sum(leaf.size * bytes_per_el for leaf in jax.tree.leaves(grad))

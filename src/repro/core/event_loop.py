@@ -1,0 +1,187 @@
+"""The master event loop — MLitB §3.3, the paper's central algorithm.
+
+Each iteration runs the five ordered steps:
+
+  a) new data uploading and allocation
+  b) new client trainer initialization and data allocation (+ lost clients)
+  c) training workers' reduce step (weighted gradient average + AdaGrad)
+  d) latency monitoring and data allocation adjustment
+  e) master broadcasts parameters
+
+The loop is generic over a ``Cluster`` adapter (discrete-event simulator in
+core/simulation.py, or the TPU mesh engine in core/mesh_engine.py) and a
+``Problem`` (model + gradient math). The iteration duration T plays the
+paper's role: workers are budgeted T - latency seconds of compute and
+return gradient sums over however many vectors they managed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+from repro.core.allocator import DataAllocator
+from repro.core.elastic import (EventQueue, JoinEvent, LeaveEvent,
+                                UploadDataEvent, WorkerRegistry)
+from repro.core.reducer import MasterReducer
+from repro.core.scheduler import AdaptiveScheduler
+
+PyTree = Any
+
+
+@dataclass
+class ComputeResult:
+    grad_sum: PyTree
+    n_vectors: int
+    compute_time: float          # seconds the worker actually computed
+    latency: float               # measured round-trip latency
+    loss_sum: float = 0.0
+
+
+class Cluster(Protocol):
+    def compute(self, worker: str, params: PyTree, budget: float,
+                indices: List[int]) -> Optional[ComputeResult]:
+        """Run worker's map step; None if the worker died mid-iteration."""
+        ...
+
+    def broadcast(self, params: PyTree, workers: List[str]) -> float:
+        """Deliver params to workers; returns broadcast wall-time seconds."""
+        ...
+
+
+@dataclass
+class IterationLog:
+    step: int
+    wall_time: float
+    n_workers: int
+    vectors: int
+    power: float                 # vectors / second this iteration
+    mean_latency: float
+    loss: float
+    events: List[str] = field(default_factory=list)
+
+
+class MasterEventLoop:
+    def __init__(self, *, reducer: MasterReducer, cluster: Cluster,
+                 scheduler: Optional[AdaptiveScheduler] = None,
+                 allocator: Optional[DataAllocator] = None,
+                 T: float = 4.0):
+        self.reducer = reducer
+        self.cluster = cluster
+        self.scheduler = scheduler or AdaptiveScheduler(T=T)
+        self.allocator = allocator or DataAllocator()
+        self.registry = WorkerRegistry()
+        self.events = EventQueue()
+        self.clock = 0.0
+        self.step = 0
+        self.history: List[IterationLog] = []
+
+    # ------------------------------------------------------------------
+    # client-triggered events (arrive asynchronously, processed at the
+    # iteration boundary)
+    # ------------------------------------------------------------------
+    def submit(self, ev) -> None:
+        self.events.push(ev)
+
+    def _process_events(self) -> List[str]:
+        notes = []
+        for ev in self.events.drain():
+            if isinstance(ev, UploadDataEvent):                  # step (a)
+                self.allocator.add_data(list(ev.indices))
+                notes.append(f"data+{len(ev.indices)}")
+            elif isinstance(ev, JoinEvent):                      # step (b)
+                if ev.worker in self.registry:
+                    continue
+                self.registry.join(ev.worker, ev.capacity, self.step)
+                self.allocator.add_worker(ev.worker, ev.capacity)
+                self.scheduler.add_worker(ev.worker)
+                notes.append(f"join:{ev.worker}")
+            elif isinstance(ev, LeaveEvent):                     # step (b)
+                if ev.worker not in self.registry:
+                    continue
+                self.registry.leave(ev.worker)
+                orphans = self.allocator.remove_worker(ev.worker)
+                self.scheduler.remove_worker(ev.worker)
+                self.reducer.drop_worker(ev.worker)
+                notes.append(f"leave:{ev.worker}(orphans={len(orphans)})")
+        return notes
+
+    # ------------------------------------------------------------------
+    def iteration(self) -> IterationLog:
+        notes = self._process_events()                           # (a),(b)
+        workers = self.registry.live_workers()
+        if not workers:
+            log = IterationLog(self.step, self.scheduler.T, 0, 0, 0.0, 0.0,
+                               float("nan"), notes)
+            self.clock += self.scheduler.T
+            self.history.append(log)
+            return log
+
+        # ---- map phase: budgeted local gradient accumulation ----
+        messages: Dict[str, Tuple[PyTree, float]] = {}
+        results: Dict[str, ComputeResult] = {}
+        died: List[str] = []
+        for w in workers:
+            budget = self.scheduler.budget(w)                    # (d) output
+            idx = sorted(self.allocator.workers[w].allocated)
+            res = self.cluster.compute(w, self.reducer.params, budget, idx)
+            if res is None:
+                died.append(w)
+                continue
+            results[w] = res
+            if res.n_vectors > 0:
+                messages[w] = (res.grad_sum, res.n_vectors)
+
+        for w in died:                                           # footnote 5
+            self.submit(LeaveEvent(w))
+            notes.append(f"lost:{w}")
+
+        # ---- (c) reduce step ----
+        loss = float("nan")
+        vectors = sum(r.n_vectors for r in results.values())
+        # synthetic-compute clusters send empty gradient trees (throughput
+        # studies): count vectors but skip the parameter update
+        has_grads = any(
+            len(jax.tree.leaves(g)) > 0 for g, _ in messages.values()
+        ) if messages else False
+        if messages and has_grads:
+            self.reducer.reduce_and_step(messages)
+            tot = sum(n for _, n in messages.values())
+            loss = sum(r.loss_sum for r in results.values()) / max(tot, 1)
+
+        # ---- (d) latency monitoring ----
+        for w, r in results.items():
+            self.scheduler.record(w, latency=r.latency,
+                                  vectors=r.n_vectors,
+                                  compute_time=r.compute_time)
+
+        # ---- (e) broadcast ----
+        bc_time = self.cluster.broadcast(self.reducer.params,
+                                         [w for w in workers
+                                          if w not in died])
+
+        wall = max([self.scheduler.T]
+                   + [r.latency + r.compute_time
+                      for r in results.values()]) + bc_time
+        self.clock += wall
+        self.step += 1
+        lat = ([r.latency for r in results.values()] or [0.0])
+        log = IterationLog(
+            step=self.step, wall_time=wall, n_workers=len(results),
+            vectors=vectors, power=vectors / wall,
+            mean_latency=sum(lat) / len(lat), loss=loss, events=notes)
+        self.history.append(log)
+        return log
+
+    # ------------------------------------------------------------------
+    def run(self, n_iterations: int,
+            callback: Optional[Callable[[IterationLog], None]] = None
+            ) -> List[IterationLog]:
+        out = []
+        for _ in range(n_iterations):
+            log = self.iteration()
+            out.append(log)
+            if callback:
+                callback(log)
+        return out

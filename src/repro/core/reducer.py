@@ -1,0 +1,83 @@
+"""Weighted gradient reduction — MLitB §3.3(c) / §3.6 "Training Mode".
+
+"The total gradient and the number of gradients is sent to the master,
+which then in the reduce step computes a weighted average of gradients from
+all workers and takes a gradient step using AdaGrad."
+
+Workers send *gradient sums* g_w = sum_{i in batch_w} grad_i along with
+their sample counts n_w. The reduce is
+
+    g_bar = (sum_w g_w) / (sum_w n_w)
+
+which equals the full-batch mean gradient over the union of worker batches
+— the invariant that makes heterogeneous per-worker batch sizes exact
+rather than approximate (tested in tests/test_reducer.py).
+
+Optionally each worker message passes through a GradientCompressor (the
+paper's §5.1 "partial gradient communication"), with per-worker error-
+feedback residuals held master-side here (in the browser setting they live
+on the client; the math is identical).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import GradientCompressor
+from repro.optim.base import Optimizer
+
+PyTree = Any
+
+
+def weighted_reduce(messages: Sequence[Tuple[PyTree, float]]) -> PyTree:
+    """messages: [(grad_sum_tree, n_samples)] -> mean-gradient tree."""
+    if not messages:
+        raise ValueError("reduce step with no worker messages")
+    total_n = sum(float(n) for _, n in messages)
+    if total_n <= 0:
+        raise ValueError("reduce step with zero samples")
+    acc = jax.tree.map(lambda x: x.astype(jnp.float32), messages[0][0])
+    for g, _ in messages[1:]:
+        acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+    return jax.tree.map(lambda a: a / total_n, acc)
+
+
+class MasterReducer:
+    """Owns optimizer state (the paper's master-held model) and applies the
+    weighted reduce + optimizer step. Per-worker compressors implement the
+    fixed-bandwidth-budget channel of §5.1."""
+
+    def __init__(self, params: PyTree, optimizer: Optimizer,
+                 compressor: Optional[GradientCompressor] = None):
+        self.params = params
+        self.optimizer = optimizer
+        self.opt_state = optimizer.init(params)
+        self.compressor = compressor
+        self._residuals: Dict[str, PyTree] = {}
+        self.step = 0
+
+    def _channel(self, worker: str, grad: PyTree) -> PyTree:
+        """Simulate the worker->master channel (compress + error feedback)."""
+        if self.compressor is None:
+            return grad
+        res = self._residuals.get(worker)
+        sent, new_res = self.compressor.roundtrip(grad, res)
+        self._residuals[worker] = new_res
+        return sent
+
+    def drop_worker(self, worker: str) -> None:
+        self._residuals.pop(worker, None)
+
+    def reduce_and_step(
+            self, messages: Dict[str, Tuple[PyTree, float]]) -> PyTree:
+        """messages: {worker: (grad_sum, n)}. Returns the new params
+        (the broadcast payload of step (e))."""
+        chan = [(self._channel(w, g), n) for w, (g, n) in
+                sorted(messages.items())]
+        g_bar = weighted_reduce(chan)
+        self.params, self.opt_state = self.optimizer.update(
+            self.params, g_bar, self.opt_state)
+        self.step += 1
+        return self.params

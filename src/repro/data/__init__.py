@@ -1,0 +1,1 @@
+from repro.data.datasets import synthetic_lm, synthetic_mnist  # noqa: F401

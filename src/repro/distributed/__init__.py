@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (batch_spec,  # noqa: F401
+                                        cache_specs, param_shardings,
+                                        param_specs, to_shardings,
+                                        train_batch_specs)

@@ -1,0 +1,83 @@
+"""Explicit collectives: the paper's reduce/broadcast as shard_map code.
+
+GSPMD already emits weighted all-reduces from the sharded train step; these
+explicit variants exist for (1) the paper-faithful mapping — each data-
+shard is a browser "worker", the psum is the master's reduce step — and
+(2) the paper's §3.5 scaling fixes as TPU collectives:
+
+  - ``weighted_psum_reduce``: sum-of-gradient-sums / global sample count
+    (the master reduce, step c).
+  - ``hierarchical_reduce``: reduce_scatter inside a pod then all_reduce
+    across pods — the paper's "multiple master processes" fix (§3.5 s.1).
+  - ``compressed_reduce``: block-top-k sparsify per worker before the wire
+    — "partial communication of gradients" (§3.5 s.3) with error feedback
+    carried in the train state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+
+def weighted_psum_reduce(grad_sum: PyTree, n_local: jnp.ndarray,
+                         axis_names: Tuple[str, ...]) -> PyTree:
+    """Inside shard_map: (local gradient SUM, local sample count) ->
+    global mean gradient, exactly the master's weighted average."""
+    n_global = jax.lax.psum(n_local.astype(jnp.float32), axis_names)
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.float32), axis_names)
+        / jnp.maximum(n_global, 1.0), grad_sum)
+
+
+def hierarchical_weighted_reduce(grad_sum: PyTree, n_local: jnp.ndarray,
+                                 intra: str = "data",
+                                 inter: str = "pod") -> PyTree:
+    """Two-level reduce: psum over the intra-pod axis first (ICI), then over
+    the cross-pod axis (DCI). Mathematically identical to a flat psum but
+    lowers to reduce-scatter/all-reduce pairs the DCI schedule can overlap;
+    mirrors the paper's "increase the number of master node processes"."""
+    n1 = jax.lax.psum(n_local.astype(jnp.float32), intra)
+    g1 = jax.tree.map(lambda g: jax.lax.psum(g.astype(jnp.float32), intra),
+                      grad_sum)
+    n2 = jax.lax.psum(n1, inter)
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g, inter) / jnp.maximum(n2, 1.0), g1)
+
+
+def block_topk_sparsify(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Keep the top-1 magnitude entry per contiguous block (dense output
+    with zeros — the wire format would ship values+indices at 8B per kept
+    entry; see core/compression.wire_bytes)."""
+    flat = x.reshape(-1)
+    n = flat.size
+    pad = (-n) % block
+    fp = jnp.pad(flat, (0, pad))
+    mag = jnp.abs(fp).reshape(-1, block)
+    arg = jnp.argmax(mag, axis=1)
+    keep = jax.nn.one_hot(arg, block, dtype=fp.dtype)
+    out = (mag * 0).reshape(-1)  # placeholder not needed; construct directly
+    vals = fp.reshape(-1, block) * keep
+    return vals.reshape(-1)[:n].reshape(x.shape)
+
+
+def compressed_reduce(grad_sum: PyTree, n_local: jnp.ndarray,
+                      residual: PyTree, block: int,
+                      axis_names: Tuple[str, ...]
+                      ) -> Tuple[PyTree, PyTree]:
+    """Error-feedback block-top-k before the psum. Returns
+    (global mean gradient of the SENT payloads, new residual)."""
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grad_sum, residual)
+    sent = jax.tree.map(lambda c: block_topk_sparsify(c, block), corrected)
+    new_res = jax.tree.map(lambda c, s: c - s, corrected, sent)
+    n_global = jax.lax.psum(n_local.astype(jnp.float32), axis_names)
+    reduced = jax.tree.map(
+        lambda s: jax.lax.psum(s, axis_names) / jnp.maximum(n_global, 1.0),
+        sent)
+    return reduced, new_res

@@ -1,0 +1,99 @@
+"""Post-lowering HLO analysis: collective traffic + roofline terms.
+
+``collective_bytes`` parses the compiled (SPMD-partitioned) HLO text and
+sums the result-shape bytes of every communication op. This is the
+"collective_bytes" input to the roofline's third term — cost_analysis()
+does not report it.
+
+Byte accounting per op (result-shape bytes B, mesh axis size n):
+  all-reduce         : ~2B per device (ring: reduce-scatter + all-gather)
+  all-gather         : B * (n-1)/n ~ B received per device
+  reduce-scatter     : B(operand) * (n-1)/n ~ operand bytes
+  all-to-all         : B * (n-1)/n
+  collective-permute : B
+We use the conservative simplification bytes=B for gather-likes and 2B for
+all-reduce; group sizes are not always recoverable from replica_groups
+text, and the factor (n-1)/n ~ 1 at n=16.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# result portion = everything before " = ", op after it
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s*"
+    r"(?P<op>" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(")
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device communication bytes by op kind from HLO text."""
+    out: Dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # async pairs: count -start, skip -done (same tensor)
+        if f"{op}-done(" in line:
+            continue
+        b = shape_bytes(m.group("result"))
+        if op == "all-reduce":
+            b *= 2
+        out[op] += b
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text).values())
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}(?:-start)?\(", hlo_text))
+
+
+# ---------------------------------------------------------------------------
+def roofline_terms(*, flops: float, hbm_bytes: float,
+                   coll_bytes: float, n_chips: int,
+                   peak_flops: float, hbm_bw: float, ici_bw: float
+                   ) -> Dict[str, float]:
+    """Three-term roofline (seconds). flops/hbm_bytes are WHOLE-PROGRAM
+    numbers from cost_analysis on the SPMD module (per-device program);
+    coll_bytes is per-device wire traffic from ``collective_bytes``.
+
+    cost_analysis of an SPMD-partitioned module reports the PER-DEVICE
+    program, so terms divide by per-chip peaks only.
+    """
+    t_compute = flops / peak_flops
+    t_memory = hbm_bytes / hbm_bw
+    t_coll = coll_bytes / ici_bw
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dom[1],
+            "n_chips": n_chips}

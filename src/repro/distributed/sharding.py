@@ -1,0 +1,284 @@
+"""Sharding rules: parameter/activation PartitionSpecs per mesh + mode.
+
+Strategy (DESIGN.md §5):
+  train : FSDP x TP — d_model dims shard over the data(+pod) axes, head/ff/
+          expert/vocab dims shard over ``model``. Optimizer state inherits
+          param sharding automatically (same tree structure).
+  serve : TP only — params replicated across ``data`` (batch) so decode
+          steps never all-gather weights.
+
+GQA caveat: when n_kv_heads < |model| the kv projections are REPLICATED
+over ``model`` (q heads still shard) — cheaper than GSPMD's padded shard.
+Query-head counts that don't divide |model| (llama4 40/16, arctic 56/16,
+whisper 20/16) compile with GSPMD padding; the waste is recorded in the
+roofline notes and is hillclimb material.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+
+def fsdp_axes(mesh: Mesh, layout: frozenset = frozenset()) -> Tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if "fsdp_remap" in layout and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    return axes
+
+
+def batch_axes(mesh: Mesh, layout: frozenset = frozenset()
+               ) -> Tuple[str, ...]:
+    return fsdp_axes(mesh, layout)
+
+
+# Layout features (beyond-paper optimizations, EXPERIMENTS.md §Perf):
+#   fsdp_remap    : train — no tensor parallelism; the `model` axis joins
+#                   the data/FSDP axes (right-sizes small models on the
+#                   fixed 16x16 mesh)
+#   serve_fsdp    : decode — params shard over data x model (train-style
+#                   2D) instead of TP-only replication over `data`
+#   cache_seqshard: decode — KV-cache SEQUENCE dim shards over `model`
+#                   when kv heads cannot (GQA kv < |model|); required for
+#                   32k-cache decode to fit v5e HBM on GQA-8 archs
+#   moe_sort      : MoE dispatch via stable-sort buckets instead of the
+#                   GShard one-hot einsums (identical drop semantics)
+#   ssm_no_tp     : replicate SSM projections over `model` — the packed
+#                   in_proj [z|x|B|C|dt] slices at segment boundaries that
+#                   misalign with a model-sharded last dim, forcing
+#                   resharding gathers (Mamba2 prefill anomaly, §Perf)
+LAYOUT_FEATURES = ("fsdp_remap", "serve_fsdp", "cache_seqshard",
+                   "moe_sort", "ssm_no_tp")
+
+
+def parse_layout(s: str) -> frozenset:
+    if not s or s == "baseline":
+        return frozenset()
+    feats = frozenset(x for x in s.split(",") if x)
+    unknown = feats - set(LAYOUT_FEATURES)
+    if unknown:
+        raise ValueError(f"unknown layout features {sorted(unknown)}")
+    return feats
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+# ---------------------------------------------------------------------------
+def param_spec(path: Tuple[str, ...], ndim: int, cfg: ArchConfig,
+               mesh: Mesh, mode: str,
+               layout: frozenset = frozenset()) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path.
+
+    Leading stacked-layer axes (1 for uniform stacks, 2 for hybrid
+    super-stacks) are never sharded; rules below address the trailing
+    'semantic' dims.
+    """
+    use_fsdp = mode == "train" or (mode == "serve"
+                                   and "serve_fsdp" in layout)
+    fs = fsdp_axes(mesh, layout) if use_fsdp else ()
+    fsdp = fs if fs else None
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    # fsdp_remap retires the tensor-parallel axis entirely
+    remap = "fsdp_remap" in layout
+    msz = 1 if remap else _model_size(mesh)
+    kv_shardable = cfg.n_kv_heads and cfg.n_kv_heads % msz == 0
+    model = None if remap else "model"
+
+    def lead(n_sem: int) -> Tuple[Optional[str], ...]:
+        return (None,) * (ndim - n_sem)
+
+    # ---- embeddings ----
+    if name in ("embed", "lm_head"):
+        return P(model, fsdp)
+    if name == "enc_pos":
+        return P(None, fsdp)
+
+    # ---- attention ----
+    if name == "wq":
+        return P(*lead(3), fsdp, model, None)
+    if name in ("wk", "wv"):
+        if kv_shardable:
+            return P(*lead(3), fsdp, model, None)
+        return P(*lead(3), fsdp, None, None)
+    if name == "wo":
+        return P(*lead(3), model, None, fsdp)
+    if name in ("bq",):
+        return P(*lead(2), model, None)
+    if name in ("bk", "bv"):
+        if kv_shardable:
+            return P(*lead(2), model, None)
+        return P(*lead(2), None, None)
+
+    # ---- dense MLP ----
+    if name in ("w_gate", "w_up") and parent != "moe":
+        return P(*lead(2), fsdp, model)
+    if name == "w_down" and parent != "moe":
+        return P(*lead(2), model, fsdp)
+    if name == "b_up":
+        return P(*lead(1), model)
+
+    # ---- MoE (expert-parallel over `model`) ----
+    if parent == "moe" or (len(path) >= 2 and "moe" in path):
+        # serve (TP-only): split the expert FF dim over `data` so
+        # 480B-class MoE shards over ALL chips. Under serve_fsdp the d
+        # dim already uses `data` (a mesh axis may appear once per spec).
+        ff_ax = "data" if (mode == "serve" and "serve_fsdp" not in layout
+                           and "data" in mesh.axis_names) else None
+        if name == "router":
+            return P(*lead(2), fsdp, None)
+        if name in ("w_gate", "w_up"):
+            return P(*lead(3), model, fsdp, ff_ax)
+        if name == "w_down":
+            return P(*lead(3), model, ff_ax, fsdp)
+
+    # ---- SSM (head/packed-inner dims over `model`) ----
+    ssm_model = None if "ssm_no_tp" in layout else model
+    if name == "in_proj":
+        return P(*lead(2), fsdp, ssm_model)
+    if name == "out_proj":
+        return P(*lead(2), ssm_model, fsdp)
+    if name == "conv_w":
+        return P(*lead(2), None, ssm_model)
+    if name == "conv_b":
+        return P(*lead(1), ssm_model)
+    if name == "scale" and parent == "gate_norm":
+        return P(*lead(1), ssm_model)
+
+    # ---- everything else (norms, scalars, biases) ----
+    return P()
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide evenly — explicit
+    in_shardings reject uneven partitions (e.g. whisper's vocab 51866 % 16,
+    llama4's 40 q heads % 16). The fallback is replication on that dim;
+    every fallback is visible in the dry-run JSON via spec comparison."""
+    if len(spec) > len(shape):
+        return P(*(None,) * len(shape))
+    fixed = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        fixed.append(ax if shape[i] % prod == 0 else None)
+    return P(*fixed)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_specs(params: PyTree, cfg: ArchConfig, mesh: Mesh,
+                mode: str = "train",
+                layout: frozenset = frozenset()) -> PyTree:
+    def rule(path, leaf):
+        spec = param_spec(_path_names(path), len(leaf.shape), cfg, mesh,
+                          mode, layout)
+        return sanitize_spec(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def param_shardings(params: PyTree, cfg: ArchConfig, mesh: Mesh,
+                    mode: str = "train",
+                    layout: frozenset = frozenset()) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, cfg, mesh, mode, layout))
+
+
+# ---------------------------------------------------------------------------
+# Activations / batches / caches
+# ---------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, batch_size: int,
+               layout: frozenset = frozenset()) -> P:
+    """Shard batch over (pod, data[, model if fsdp_remap]) when divisible."""
+    axes = [a for a in batch_axes(mesh, layout)]
+    keep = []
+    prod = 1
+    for a in axes:
+        if batch_size % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+    return P(tuple(keep) if keep else None)
+
+
+def train_batch_specs(mesh: Mesh, batch_size: int) -> Dict[str, P]:
+    b = batch_spec(mesh, batch_size)
+    return {"tokens": P(b[0], None), "labels": P(b[0], None),
+            "mask": P(b[0], None)}
+
+
+def cache_specs(cache: PyTree, cfg: ArchConfig, mesh: Mesh,
+                batch_size: int,
+                layout: frozenset = frozenset()) -> PyTree:
+    """Decode-cache specs. Batch shards over (pod,data) when divisible;
+    for long-context batch=1 the kv SEQUENCE axis shards over `data`
+    (attention archs) and SSM state heads shard over `model`.
+
+    layout `cache_seqshard`: when GQA kv heads cannot shard over `model`
+    the SEQUENCE axis shards over it instead — mandatory for 32k-cache
+    decode to fit v5e HBM on kv=8 archs (see EXPERIMENTS.md §Perf H3)."""
+    bspec = batch_spec(mesh, batch_size)
+    baxis = bspec[0] if len(bspec) else None
+    data_free = baxis is None and "data" in mesh.axis_names
+    msz = _model_size(mesh)
+    kv_shardable = cfg.n_kv_heads and cfg.n_kv_heads % msz == 0
+    seq_axes = []
+    if data_free:
+        seq_axes.append("data")
+    if "cache_seqshard" in layout and not kv_shardable             and "model" in mesh.axis_names:
+        seq_axes.append("model")
+    seq_ax = tuple(seq_axes) if seq_axes else None
+    ssm_heads = cfg.ssm.n_heads(cfg.d_model) if cfg.ssm else 0
+    ssm_shardable = ssm_heads and ssm_heads % msz == 0
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = len(leaf.shape)
+        spec = _cache_rule(name, nd)
+        return sanitize_spec(spec, leaf.shape, mesh)
+
+    def _cache_rule(name, nd):
+        if name in ("k", "v"):
+            # (L[,P], B, T, K, hd)
+            lead = (None,) * (nd - 4)
+            return P(*lead, baxis, seq_ax,
+                     "model" if kv_shardable else None, None)
+        if name == "kpos":
+            lead = (None,) * (nd - 1)
+            return P(*lead, seq_ax)
+        if name == "h":
+            # (L[,P], B, nh, hd, N)
+            lead = (None,) * (nd - 4)
+            return P(*lead, baxis, "model" if ssm_shardable else None,
+                     None, None)
+        if name == "conv":
+            # (L[,P], B, W-1, C)
+            lead = (None,) * (nd - 3)
+            return P(*lead, baxis, None, "model")
+        return P()
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def to_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, specs,
+        is_leaf=lambda x: isinstance(x, P))

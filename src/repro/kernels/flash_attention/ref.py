@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B,H,S,D), k/v: (B,K,T,D) -> (B,H,S,D); f32 math, GQA by head
+    group mapping h -> h // (H//K)."""
+    B, H, S, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, K, G, S, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) * (D ** -0.5)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows -> zero output (matches kernel's l>=eps guard)
+    any_valid = mask.any(axis=-1)[None, None, None, :]
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    o = jnp.where(any_valid[..., None], o, 0.0)
+    return o.reshape(B, H, S, D).astype(q.dtype)

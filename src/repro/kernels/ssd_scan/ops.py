@@ -1,0 +1,36 @@
+"""Jitted wrapper for the SSD scan kernel: chunk padding + interpret
+selection (same conventions as flash_attention.ops)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
+             interpret: bool = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, nh, hd = x.shape
+    ck = min(chunk, S) if S % min(chunk, S) == 0 else min(chunk, S)
+    pad = (-S) % ck
+    if pad:
+        # dt=0 pad steps: no decay delta, no input contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=ck, interpret=interpret)
+    return y[:, :S]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: sequential SSD recurrence (same math as
+repro.models.ssm.ssd_sequential, standalone signature)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,nh,hd), dt: (B,S,nh), A: (nh,), Bm/Cm: (B,S,N) -> (B,S,nh,hd)."""
+    Bsz, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    x, dt = x.astype(f32), dt.astype(f32)
+    Bm, Cm = Bm.astype(f32), Cm.astype(f32)
+    h = jnp.zeros((Bsz, nh, hd, N), f32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * A)
+        h = h * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

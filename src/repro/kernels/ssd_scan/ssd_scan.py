@@ -1,0 +1,91 @@
+"""Mamba2 SSD chunked-scan Pallas kernel — TPU TARGET (interpret-validated).
+
+State-space duality [arXiv:2405.21060]: within a chunk the recurrence is
+computed as a masked quadratic form (two (Q x Q) / (Q x N|hd) MXU matmuls);
+across chunks an O(1)-state recurrence is carried in a VMEM scratch.
+
+Grid: (batch, heads, n_chunks), chunk axis minor-most so the per-(b,h)
+state scratch (hd, N) persists across sequential grid steps. Chunk Q=128
+and state N<=256 tiles keep the working set in VMEM; all math f32.
+
+Inputs (g=1 groups): x (B,S,nh,hd), dt (B,S,nh) post-softplus,
+A (nh,) negative decay rates, Bm/Cm (B,S,N). Output y (B,S,nh,hd) — the
+D-skip, gating and projections stay in the surrounding XLA program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, hd)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    a = a_ref[0].astype(jnp.float32)                   # scalar
+    Bm = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                  # (Q, N)
+
+    dA = dt * a                                        # (Q,), <= 0
+    cum = jnp.cumsum(dA)                               # (Q,)
+
+    # intra-chunk: y_i = sum_{j<=i} (C_i.B_j) exp(cum_i-cum_j) dt_j x_j
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    seg = jnp.minimum(cum[:, None] - cum[None, :], 0.0)  # pre-exp clamp:
+    # masked (i<j) entries are positive and overflow; see models/ssm.py
+    causal = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    y_intra = jax.lax.dot_general(CB * L * dt[None, :], x,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += C_i . h_in * exp(cum_i)
+    h = h_scr[...]                                     # (hd, N)
+    y_inter = jax.lax.dot_general(Cm * jnp.exp(cum)[:, None], h,
+                                  (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h_out = h * exp(cum_Q) + sum_j dt_j exp(cum_Q-cum_j) x_j B_j
+    w = dt * jnp.exp(cum[-1] - cum)                    # (Q,)
+    S_c = jax.lax.dot_general(x * w[:, None], Bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (hd, N)
+    h_scr[...] = h * jnp.exp(cum[-1]) + S_c
+
+
+def ssd_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """x: (B,S,nh,hd), dt: (B,S,nh), A: (nh,), Bm/Cm: (B,S,N) -> y like x.
+    S % chunk == 0 (ops.py pads)."""
+    B, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, nh, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

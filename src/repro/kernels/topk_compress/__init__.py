@@ -1,0 +1,2 @@
+from repro.kernels.topk_compress.ops import block_topk  # noqa: F401
+from repro.kernels.topk_compress.ref import block_topk_ref  # noqa: F401

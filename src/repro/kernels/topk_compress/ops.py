@@ -1,0 +1,42 @@
+"""Jitted wrapper: flatten any tensor to (rows, W) blocks, sparsify,
+restore shape. Used by core.compression (method="blocktopk") and the
+compressed-reduce collective."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_compress.topk_compress import block_topk_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def block_topk(x: jnp.ndarray, *, block_w: int = 128,
+               interpret: bool = None) -> jnp.ndarray:
+    """Keep the top-|.| entry of every contiguous block_w run of x
+    (any shape); zeros elsewhere. Padding entries can never win (they
+    are zero and ties break to the first index)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.size
+    pad = (-n) % block_w
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    rows = flat.reshape(-1, block_w)
+    R = rows.shape[0]
+    tile = 256
+    while R % tile and tile > 1:
+        tile //= 2
+    y = block_topk_pallas(rows, block_w=block_w, rows_per_tile=tile,
+                          interpret=interpret)
+    return y.reshape(-1)[:n].reshape(shape)

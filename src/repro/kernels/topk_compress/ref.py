@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for block-local top-1 sparsification."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_topk_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (R, W) -> keep the first-occurring max-|.| entry per row."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    arg = jnp.argmax(mag, axis=1)                # first max (numpy semantics)
+    keep = jnp.arange(x.shape[1])[None, :] == arg[:, None]
+    return jnp.where(keep, x, jnp.zeros_like(x))

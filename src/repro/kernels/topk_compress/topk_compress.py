@@ -1,0 +1,48 @@
+"""Block-local top-k gradient sparsification Pallas kernel — TPU TARGET.
+
+The paper's §5.1 "partial gradient communication" ("transmit ... the most
+informative [gradients]") as a TPU kernel: keep the single largest-
+magnitude entry of every contiguous W-entry block and zero the rest
+(k = n/W overall). Block-LOCAL selection needs no global sort — each
+(R, W) VMEM tile is reduced independently on the VPU, and the kept-entry
+spacing guarantee (exactly one survivor per W entries) is what lets the
+wire format ship fixed-stride (value, offset) pairs.
+
+Grid: 1-D over row-tiles of the (n/W, W)-reshaped tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(x_ref, y_ref, *, block_w: int):
+    x = x_ref[...].astype(jnp.float32)                  # (R, W)
+    mag = jnp.abs(x)
+    best = jnp.max(mag, axis=1, keepdims=True)          # (R, 1)
+    is_best = mag >= best
+    # break ties: keep only the FIRST max per row
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    first = jnp.min(jnp.where(is_best, idx, block_w), axis=1, keepdims=True)
+    keep = idx == first
+    y_ref[...] = jnp.where(keep, x, 0.0).astype(y_ref.dtype)
+
+
+def block_topk_pallas(x: jnp.ndarray, *, block_w: int = 128,
+                      rows_per_tile: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """x: (n_rows, W) -> same shape, one nonzero per row.
+    n_rows % rows_per_tile == 0 (ops.py pads)."""
+    R, W = x.shape
+    kernel = functools.partial(_topk_kernel, block_w=W)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // rows_per_tile,),
+        in_specs=[pl.BlockSpec((rows_per_tile, W), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows_per_tile, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, W), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,2 @@
+"""Launchers: mesh definitions, multi-pod dry-run, train and serve CLIs."""
+from repro.launch.mesh import make_production_mesh  # noqa: F401

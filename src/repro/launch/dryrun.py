@@ -1,0 +1,393 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) lowers + compiles.
+
+For the requested architecture/input-shape/mesh this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs abstract params (+ optimizer state for train) and abstract
+     inputs (ShapeDtypeStruct — nothing is allocated),
+  3. jits the step with explicit in/out shardings, .lower()s, .compile()s,
+  4. prints memory_analysis (proves fit) + cost_analysis (FLOPs/bytes) +
+     per-op collective bytes parsed from the partitioned HLO,
+  5. emits one JSON line (machine-readable; benchmarks/roofline.py and
+     EXPERIMENTS.md §Dry-run/§Roofline read these).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k [--multi-pod] [--json out.json] [--opt-level N]
+
+Env:
+  REPRO_DRYRUN_DEVICES  host device count (default 512; tests use 8)
+  (must be set before jax initializes — hence the header lines above)
+"""
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.shapes import SHAPE_REGISTRY
+from repro.distributed.hlo_analysis import (collective_bytes, count_ops,
+                                            roofline_terms)
+from repro.distributed.activation_sharding import activation_sharding
+from repro.distributed.sharding import (batch_spec, cache_specs,
+                                        param_specs, parse_layout,
+                                        to_shardings)
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.specs import (effective_config, input_specs,
+                                input_specs_eff, supports)
+from repro.models import transformer as tf
+from repro.optim import adagrad, adam
+from repro.train.step import build_decode_step, build_prefill_step, \
+    build_train_step
+
+
+def build_mesh(args):
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split(","))
+        names = ("pod", "data", "model")[-len(dims):]
+        return jax.make_mesh(dims, names)
+    return make_production_mesh(multi_pod=args.multi_pod)
+
+
+def batch_shardings(batch_tree, mesh, B, layout=frozenset()):
+    bspec = batch_spec(mesh, B, layout)
+    baxis = bspec[0] if len(bspec) else None
+
+    def rule(leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(baxis, *(None,) * (nd - 1)))
+    return jax.tree.map(rule, batch_tree)
+
+
+import dataclasses
+
+
+def probe_config(cfg, units: int):
+    """Reduced-LAYER variant of an effective config (full width/vocab/batch)
+    for the cost probes. Hybrid units are super-blocks; audio units pair one
+    encoder + one decoder layer."""
+    if cfg.arch_type == "hybrid":
+        return dataclasses.replace(
+            cfg, n_layers=cfg.hybrid_attn_period * units)
+    if cfg.arch_type == "audio":
+        return dataclasses.replace(cfg, n_layers=units,
+                                   n_encoder_layers=units)
+    return dataclasses.replace(cfg, n_layers=units)
+
+
+def full_units(cfg) -> int:
+    if cfg.arch_type == "hybrid":
+        return cfg.n_layers // cfg.hybrid_attn_period
+    return cfg.n_layers
+
+
+def _apply_layout_cfg(cfg, layout):
+    if "moe_sort" in layout and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl="sort"))
+    return cfg
+
+
+def _lower_compile(cfg, shape, mesh, optimizer_name, remat, unroll,
+                   layout=frozenset()):
+    """Shared lower+compile path; returns the compiled executable."""
+    cfg = _apply_layout_cfg(cfg, layout)
+    specs = input_specs_eff(cfg, shape)
+    params_abs = tf.abstract_params(cfg)
+    bspec = batch_spec(mesh, shape.global_batch, layout)
+    bax = bspec[0] if len(bspec) else None
+    with mesh, activation_sharding(bax):
+        return _lower_compile_inner(cfg, shape, mesh, optimizer_name,
+                                    remat, unroll, specs, params_abs,
+                                    layout)
+
+
+def _lower_compile_inner(cfg, shape, mesh, optimizer_name, remat, unroll,
+                         specs, params_abs, layout=frozenset()):
+    if shape.kind == "train":
+        opt = {"adagrad": adagrad, "adam": adam}[optimizer_name]()
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        state_abs = {"params": params_abs, "opt": opt_abs}
+        state_sh = to_shardings(
+            param_specs(state_abs, cfg, mesh, "train", layout), mesh)
+        b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch,
+                               layout)
+        step = build_train_step(cfg, opt, remat=remat, unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        return jitted.lower(state_abs, specs["batch"]).compile()
+    if shape.kind == "prefill":
+        p_sh = to_shardings(
+            param_specs(params_abs, cfg, mesh, "serve", layout), mesh)
+        b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch,
+                               layout)
+        step = build_prefill_step(cfg, unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        return jitted.lower(params_abs, specs["batch"]).compile()
+    p_sh = to_shardings(
+        param_specs(params_abs, cfg, mesh, "serve", layout), mesh)
+    cache_abs = specs["cache"]
+    c_sh = to_shardings(
+        cache_specs(cache_abs, cfg, mesh, shape.global_batch, layout), mesh)
+    tok_sh = batch_shardings({"t": specs["token"]}, mesh,
+                             shape.global_batch, layout)["t"]
+    pos_sh = NamedSharding(mesh, P())
+    step = build_decode_step(cfg, unroll=unroll)
+    jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, pos_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(3,))
+    return jitted.lower(params_abs, specs["token"], specs["pos"],
+                        cache_abs).compile()
+
+
+def _costs_of(compiled):
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll, "coll_total": float(sum(coll.values()))}
+
+
+def _combine(c1, c2, scale2, extra=None, extra_scale=0.0):
+    """c1 + scale2*(c2-c1) (+ extra_scale*extra_delta) per cost field."""
+    def comb(f1, f2, fe=0.0):
+        return f1 + scale2 * (f2 - f1) + extra_scale * fe
+    ops = set(c1["coll"]) | set(c2["coll"]) | set(
+        (extra or {}).get("coll", {}) if extra else {})
+    coll = {}
+    for op in ops:
+        coll[op] = comb(c1["coll"].get(op, 0), c2["coll"].get(op, 0),
+                        (extra or {"coll": {}})["coll"].get(op, 0)
+                        if extra else 0.0)
+    out = {"flops": comb(c1["flops"], c2["flops"],
+                         extra["flops"] if extra else 0.0),
+           "hbm_bytes": comb(c1["hbm_bytes"], c2["hbm_bytes"],
+                             extra["hbm_bytes"] if extra else 0.0),
+           "coll": coll}
+    out["coll_total"] = float(sum(coll.values()))
+    return out
+
+
+def probe_costs(cfg, shape, mesh, optimizer_name, remat,
+                layout=frozenset()):
+    """Extrapolated whole-model per-chip costs from 1- and 2-unit unrolled
+    compiles: total = c1 + (U-1) * (c2 - c1) [+ hybrid tail]. Exact for
+    homogeneous stacks; SSD's internal chunk scan is the one residual
+    undercount (negligible FLOPs — state update only)."""
+    c = {}
+    for u in (1, 2):
+        comp = _lower_compile(probe_config(cfg, u), shape, mesh,
+                              optimizer_name, remat, unroll=True,
+                              layout=layout)
+        c[u] = _costs_of(comp)
+    U = full_units(cfg)
+    extra = None
+    extra_scale = 0.0
+    if cfg.arch_type == "hybrid" and cfg.n_layers % cfg.hybrid_attn_period:
+        # tail = pure-SSM layers: marginal cost from an ssm-variant probe
+        sc = {}
+        for u in (1, 2):
+            svar = dataclasses.replace(cfg, arch_type="ssm", n_layers=u,
+                                       hybrid_attn_period=0)
+            comp = _lower_compile(svar, shape, mesh, optimizer_name, remat,
+                                  unroll=True, layout=layout)
+            sc[u] = _costs_of(comp)
+        extra = _combine(sc[2], sc[1], 1.0)  # = sc2 - ... compute delta:
+        extra = {"flops": sc[2]["flops"] - sc[1]["flops"],
+                 "hbm_bytes": sc[2]["hbm_bytes"] - sc[1]["hbm_bytes"],
+                 "coll": {op: sc[2]["coll"].get(op, 0)
+                          - sc[1]["coll"].get(op, 0)
+                          for op in set(sc[1]["coll"]) | set(sc[2]["coll"])}}
+        extra_scale = cfg.n_layers % cfg.hybrid_attn_period
+    return _combine(c[1], c[2], U - 1, extra, extra_scale)
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mesh=None, optimizer_name: str = "adagrad",
+               remat: bool = True, donate: bool = True, probe: bool = True,
+               layout: str = "baseline",
+               extra_tags: Dict[str, Any] = None) -> Dict[str, Any]:
+    lay = parse_layout(layout)
+    cfg0 = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = supports(cfg0, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": reason}
+    cfg = _apply_layout_cfg(effective_config(cfg0, shape), lay)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    specs = input_specs(cfg0, shape)
+    t0 = time.time()
+
+    params_abs = tf.abstract_params(cfg)
+    _bspec = batch_spec(mesh, shape.global_batch, lay)
+    _ctx_ax = _bspec[0] if len(_bspec) else None
+    _ctx = activation_sharding(_ctx_ax)
+    mesh.__enter__()
+    _ctx.__enter__()
+
+    if shape.kind == "train":
+        opt = {"adagrad": adagrad, "adam": adam}[optimizer_name]()
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        state_abs = {"params": params_abs, "opt": opt_abs}
+        state_sh = to_shardings(
+            param_specs(state_abs, cfg, mesh, "train", lay), mesh)
+        b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch,
+                               lay)
+        step = build_train_step(cfg, opt, remat=remat)
+        jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state_abs, specs["batch"])
+    elif shape.kind == "prefill":
+        p_sh = to_shardings(
+            param_specs(params_abs, cfg, mesh, "serve", lay), mesh)
+        b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch,
+                               lay)
+        step = build_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(params_abs, specs["batch"])
+    else:  # decode
+        p_sh = to_shardings(
+            param_specs(params_abs, cfg, mesh, "serve", lay), mesh)
+        cache_abs = specs["cache"]
+        c_sh = to_shardings(
+            cache_specs(cache_abs, cfg, mesh, shape.global_batch, lay),
+            mesh)
+        tok_sh = batch_shardings({"t": specs["token"]}, mesh,
+                                 shape.global_batch, lay)["t"]
+        pos_sh = NamedSharding(mesh, P())
+        step = build_decode_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, pos_sh, c_sh),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(3,) if donate else ())
+        lowered = jitted.lower(params_abs, specs["token"], specs["pos"],
+                               cache_abs)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    _ctx.__exit__(None, None, None)
+    mesh.__exit__(None, None, None)
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        memory = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:                                   # pragma: no cover
+        memory = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    coll_total = sum(coll.values())
+    n_model_params = cfg.n_params()
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else (shape.seq_len if shape.kind ==
+                                         "prefill" else 1))
+    mult = 6 if shape.kind == "train" else 2
+    model_flops_global = mult * n_active * tokens
+    model_flops_per_chip = model_flops_global / n_chips
+
+    # cost extrapolation via 1/2-unit unrolled probes (scan bodies are
+    # counted once by cost_analysis — see probe_costs docstring)
+    if probe:
+        t0 = time.time()
+        ext = probe_costs(cfg, shape, mesh, optimizer_name, remat, lay)
+        t_probe = round(time.time() - t0, 2)
+        flops_x, bytes_x = ext["flops"], ext["hbm_bytes"]
+        coll_x, coll_ops_x = ext["coll_total"], ext["coll"]
+    else:
+        t_probe = 0.0
+        flops_x, bytes_x, coll_x, coll_ops_x = (flops, hbm_bytes,
+                                                coll_total, coll)
+
+    rl = roofline_terms(flops=flops_x, hbm_bytes=bytes_x,
+                        coll_bytes=coll_x, n_chips=n_chips,
+                        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
+                        ici_bw=ICI_BW)
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "axes": list(mesh.axis_names), "n_chips": n_chips,
+        "kind": shape.kind, "optimizer": optimizer_name
+        if shape.kind == "train" else None,
+        "flops_per_chip": flops_x, "hbm_bytes_per_chip": bytes_x,
+        "collective_bytes_per_chip": coll_x, "collectives": coll_ops_x,
+        "raw_scan_counted": {"flops": flops, "hbm_bytes": hbm_bytes,
+                             "collective_bytes": coll_total},
+        "n_collective_ops": {op: count_ops(hlo, op) for op in
+                             ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all", "collective-permute")},
+        "memory": memory,
+        "roofline": rl,
+        "n_params": n_model_params, "n_active_params": n_active,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flops_ratio": (model_flops_per_chip / flops_x)
+        if flops_x else 0,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "probe_s": t_probe, "probed": probe,
+        "layout": layout,
+        "skipped": False,
+    }
+    if extra_tags:
+        out.update(extra_tags)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True,
+                    choices=sorted(SHAPE_REGISTRY))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh dims, e.g. '2,4' or '2,2,2'")
+    ap.add_argument("--optimizer", default="adagrad",
+                    choices=["adagrad", "adam"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the cost-extrapolation probe compiles")
+    ap.add_argument("--layout", default="baseline",
+                    help="comma list of layout features: fsdp_remap,"
+                         "serve_fsdp,cache_seqshard (or 'baseline')")
+    ap.add_argument("--json", default=None, help="append JSON line here")
+    args = ap.parse_args(argv)
+
+    mesh = build_mesh(args)
+    res = run_dryrun(args.arch, args.shape, mesh=mesh,
+                     optimizer_name=args.optimizer,
+                     remat=not args.no_remat, donate=not args.no_donate,
+                     probe=not args.no_probe, layout=args.layout)
+    line = json.dumps(res)
+    print(line)
+    if args.json:
+        with open(args.json, "a") as f:
+            f.write(line + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+"""Grid driver for the multi-pod dry-run deliverable.
+
+Pair mode (one subprocess per (arch, shape) keeps memory bounded):
+    python -m repro.launch.dryrun_all --arch qwen3-4b --shape train_4k \
+        --out results.jsonl
+  runs BOTH meshes: single-pod (16,16) on the first 256 host devices
+  (with cost probes -> roofline numbers) and multi-pod (2,16,16) on all
+  512 (compile proof only), appending two JSON lines.
+
+Grid mode:
+    python -m repro.launch.dryrun_all --all --out results.jsonl
+  spawns a pair-mode subprocess per combination, resuming past completed
+  (arch, shape, mesh) entries already in the output file.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config, get_shape
+from repro.configs.all_configs import ASSIGNED_ARCHS
+from repro.configs.shapes import SHAPE_REGISTRY
+from repro.launch.dryrun import run_dryrun
+from repro.launch.specs import supports
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def pair_main(arch: str, shape: str, out: str, multipod_probe: bool = False):
+    devs = jax.devices()
+    assert len(devs) >= 512, "pair mode needs 512 host devices"
+    results = []
+    mesh1 = jax.make_mesh((16, 16), ("data", "model"),
+                          devices=devs[:256])
+    r1 = run_dryrun(arch, shape, mesh=mesh1, probe=True)
+    r1["mesh_tag"] = "1pod-256"
+    results.append(r1)
+    if not r1.get("skipped"):
+        mesh2 = jax.make_mesh((2, 16, 16), ("pod", "data", "model"),
+                              devices=devs)
+        r2 = run_dryrun(arch, shape, mesh=mesh2, probe=multipod_probe)
+        r2["mesh_tag"] = "2pod-512"
+        results.append(r2)
+    with open(out, "a") as f:
+        for r in results:
+            f.write(json.dumps(r) + "\n")
+    return results
+
+
+def existing_keys(out: str):
+    keys = set()
+    if os.path.exists(out):
+        for line in open(out):
+            try:
+                d = json.loads(line)
+                keys.add((d["arch"], d["shape"], d.get("mesh_tag", "")))
+            except Exception:
+                pass
+    return keys
+
+
+def grid_main(out: str):
+    done = existing_keys(out)
+    todo = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            ok, reason = supports(get_config(arch), get_shape(shape))
+            if not ok:
+                if (arch, shape, "1pod-256") not in done:
+                    with open(out, "a") as f:
+                        f.write(json.dumps(
+                            {"arch": arch, "shape": shape, "skipped": True,
+                             "reason": reason, "mesh_tag": "1pod-256"})
+                            + "\n")
+                continue
+            if (arch, shape, "1pod-256") in done and \
+                    (arch, shape, "2pod-512") in done:
+                continue
+            todo.append((arch, shape))
+    print(f"grid: {len(todo)} pairs to run", flush=True)
+    for i, (arch, shape) in enumerate(todo):
+        t0 = time.time()
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun_all",
+             "--arch", arch, "--shape", shape, "--out", out],
+            capture_output=True, text=True)
+        status = "ok" if r.returncode == 0 else "FAIL"
+        print(f"[{i+1}/{len(todo)}] {arch} {shape}: {status} "
+              f"({time.time()-t0:.0f}s)", flush=True)
+        if r.returncode != 0:
+            tail = (r.stderr or r.stdout)[-1500:]
+            print(tail, flush=True)
+            with open(out, "a") as f:
+                f.write(json.dumps({"arch": arch, "shape": shape,
+                                    "error": tail[-500:],
+                                    "mesh_tag": "error"}) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=sorted(SHAPE_REGISTRY))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args()
+    if args.all:
+        grid_main(args.out)
+    else:
+        pair_main(args.arch, args.shape, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Target hardware: TPU v5e pods, 256 chips each.
+  single-pod : (data=16, model=16)                       = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)                = 512 chips
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init; tests must see
+the default single CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int = 1):
+    """Small host-device mesh for tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=data*model*pod)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/sec per chip
+ICI_BW = 50e9                   # bytes/sec per link (per chip, one direction)
+CHIPS_PER_POD = 256

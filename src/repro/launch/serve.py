@@ -1,0 +1,98 @@
+"""Serving launcher: batched prefill + KV-cache decode.
+
+Loads a research closure (or random-inits a config) and serves a batch of
+token prompts through the production prefill/decode path — the MLitB
+"tracking mode" (execute the latest model) at framework scale.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --closure model.json --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.closure import ResearchClosure, jaxify
+from repro.models import transformer as tf
+from repro.train.step import build_decode_step, build_prefill_step
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+
+
+def serve_batch(params, cfg, prompts: jnp.ndarray, gen: int,
+                prefix=None, frames=None):
+    """prompts: (B, P) int32 -> generated (B, gen) int32."""
+    B, P = prompts.shape
+    prefill = jax.jit(build_prefill_step(cfg))
+    decode = jax.jit(build_decode_step(cfg))
+    batch = {"tokens": prompts}
+    if prefix is not None:
+        batch["prefix"] = prefix
+    if frames is not None:
+        batch["frames"] = frames
+    logits, cache = prefill(params, batch)
+    offset = cfg.n_prefix_tokens if cfg.arch_type == "vlm" else 0
+    tok = greedy_sample(logits)
+    out = [tok]
+    for t in range(gen - 1):
+        pos = jnp.asarray(P + offset + t, jnp.int32)
+        logits, cache = decode(params, tok, pos, cache)
+        tok = greedy_sample(logits)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--closure", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.closure:
+        clo = ResearchClosure.load(args.closure)
+        cfg, params = clo.config, jaxify(clo.params)
+        print(f"loaded closure {args.closure} (arch={clo.arch}, "
+              f"step={clo.step})")
+    else:
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    ks = jax.random.split(jax.random.PRNGKey(args.seed + 1), 2)
+    prompts = jax.random.randint(ks[0], (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    kw = {}
+    if cfg.arch_type == "vlm":
+        kw["prefix"] = jax.random.normal(
+            ks[1], (args.batch, cfg.n_prefix_tokens, cfg.d_model)) * 0.02
+    if cfg.arch_type == "audio":
+        kw["frames"] = jax.random.normal(
+            ks[1], (args.batch, cfg.encoder_seq, cfg.d_model)) * 0.02
+
+    t0 = time.time()
+    gen = serve_batch(params, cfg, prompts, args.gen, **kw)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"generated {gen.shape} in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(gen[0][:12]))
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Abstract input specifications (ShapeDtypeStruct stand-ins) for every
+(architecture x input-shape) workload — the dry-run's batch source.
+
+Also provides ``effective_config`` which applies shape-driven variants:
+``long_500k`` forces the sliding-window attention variant (window 8192) on
+attention-bearing archs so decode state is O(window); SSM archs are
+untouched (native O(1) state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.models import transformer as tf
+from repro.models.layers import dtype_of
+
+SDS = jax.ShapeDtypeStruct
+
+
+def effective_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    if shape.sliding_window and not cfg.attention_free:
+        return cfg.with_sliding_window(shape.sliding_window)
+    return cfg
+
+
+def supports(cfg: ArchConfig, shape: InputShape) -> Tuple[bool, str]:
+    """(supported, reason-if-not) for the assignment's documented skips."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return False, ("enc-dec audio backbone has no 500k-token decode "
+                       "analogue (fixed 1500-frame encoder)")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Returns kwargs trees of ShapeDtypeStructs keyed by step argument.
+
+    train  : {"batch": {tokens, labels, mask[, prefix|frames]}}
+    prefill: {"batch": {tokens[, prefix|frames]}}
+    decode : {"token", "pos", "cache"}
+    """
+    return input_specs_eff(effective_config(cfg, shape), shape)
+
+
+def input_specs_eff(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """As input_specs but for an ALREADY-effective config (dry-run probes
+    pass reduced-layer variants directly)."""
+    B, S = shape.global_batch, shape.seq_len
+    adt = dtype_of(cfg.activ_dtype)
+    tok = lambda s: SDS(s, jnp.int32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok((B, S)), "labels": tok((B, S)),
+                 "mask": SDS((B, S), jnp.float32)}
+        if cfg.arch_type == "vlm":
+            batch["prefix"] = SDS((B, cfg.n_prefix_tokens, cfg.d_model), adt)
+        if cfg.arch_type == "audio":
+            batch["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), adt)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok((B, S))}
+        if cfg.arch_type == "vlm":
+            batch["prefix"] = SDS((B, cfg.n_prefix_tokens, cfg.d_model), adt)
+        if cfg.arch_type == "audio":
+            batch["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), adt)
+        return {"batch": batch}
+
+    if shape.kind == "decode":
+        cache = tf.init_decode_cache(cfg, B, S, abstract=True)
+        return {"token": tok((B, 1)), "pos": SDS((), jnp.int32),
+                "cache": cache}
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,7 @@
+"""Model zoo: every assigned architecture family as pure-functional JAX.
+
+transformer.py assembles dense/moe/ssm/hybrid/vlm/audio stacks from
+attention.py, moe.py, ssm.py, layers.py; cnn.py is the paper's own
+conv-net use-case.
+"""
+from repro.models import transformer  # noqa: F401

@@ -1,0 +1,232 @@
+"""Attention: MHA/GQA/MQA with RoPE, qk-norm, sliding windows and KV caches.
+
+Layouts:
+  q projections    (d, H, hd)        H = query heads
+  k/v projections  (d, K, hd)        K = kv heads (GQA groups G = H/K)
+  out projection   (H, hd, d)
+  activations      (B, S, H, hd)
+
+KV caches store *post-RoPE* keys so decode never re-rotates history. A
+sliding-window cache is a ring buffer of size ``window`` with an absolute-
+position array ``kpos`` for validity/recency masking — this is what makes
+``long_500k`` decode O(window) state instead of O(seq).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rmsnorm
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+def init_attention(key, d: int, n_heads: int, n_kv_heads: int, head_dim: int,
+                   qk_norm: bool = False, bias: bool = False,
+                   dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p: Params = {
+        "wq": (jax.random.normal(ks[0], (d, n_heads, head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, n_kv_heads, head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, n_kv_heads, head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads, head_dim, d))
+               * (n_heads * head_dim) ** -0.5).astype(dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((head_dim,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((head_dim,), dtype)}
+    return p
+
+
+def _project_qkv(p: Params, xq: jnp.ndarray, xkv: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", xkv, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", xkv, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def _out_proj(p: Params, o: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+def grouped_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """q: (B,S,H,hd), k/v: (B,T,K,hd), mask broadcastable to (B,1,1,S,T).
+
+    Returns (B,S,H,hd). GQA via a group axis — no kv repetition in memory.
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    # f32 ACCUMULATION, bf16 operands: casting k/v to f32 materializes a
+    # full-size copy of the KV cache (2x HBM + observed 1GiB/layer
+    # all-gathers in the decode dry-run); preferred_element_type gets the
+    # same numerics from the MXU without the copies.
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return o.reshape(B, S, H, hd)
+
+
+def make_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+              window: int = 0) -> jnp.ndarray:
+    """(B?,S),(B?,T) -> bool (.., 1, 1, S, T) for grouped_attend."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m = m & (kp <= qp)
+    if window:
+        m = m & (kp > qp - window)
+    # insert head/group broadcast axes: (..., S, T) -> (..., 1, 1, S, T)
+    return jnp.expand_dims(jnp.expand_dims(m, -3), -3)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (train / encoder) attention
+# ---------------------------------------------------------------------------
+def attention(p: Params, x: jnp.ndarray, positions: jnp.ndarray, *,
+              causal: bool = True, window: int = 0, use_rope: bool = True,
+              rope_theta: float = 10000.0,
+              xkv: Optional[jnp.ndarray] = None,
+              kv_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Self-attention (xkv=None) or cross-attention (xkv=encoder states)."""
+    xkv = x if xkv is None else xkv
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(p, x, xkv)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, kv_positions, rope_theta)
+    mask = make_mask(positions, kv_positions, causal, window) \
+        if (causal or window) else None
+    o = grouped_attend(q, k, v, mask)
+    return _out_proj(p, o)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache path (prefill + decode)
+# ---------------------------------------------------------------------------
+def init_cache(batch: int, cache_len: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> Params:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        # absolute position held by each slot; NEG -> empty
+        "kpos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def cache_spec(batch: int, cache_len: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree mirroring init_cache (dry-run, no allocation)."""
+    sd = jax.ShapeDtypeStruct
+    return {
+        "k": sd((batch, cache_len, n_kv, head_dim), dtype),
+        "v": sd((batch, cache_len, n_kv, head_dim), dtype),
+        "kpos": sd((cache_len,), jnp.int32),
+    }
+
+
+def attention_prefill(p: Params, x: jnp.ndarray, positions: jnp.ndarray, *,
+                      cache: Params, window: int = 0, use_rope: bool = True,
+                      rope_theta: float = 10000.0
+                      ) -> Tuple[jnp.ndarray, Params]:
+    """Full forward over (B,S) writing post-RoPE k/v into the cache.
+
+    Assumes S <= cache_len and prefill starts at slot 0 (positions 0..S-1).
+    """
+    q, k, v = _project_qkv(p, x, x)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    mask = make_mask(positions, positions, True, window)
+    o = grouped_attend(q, k, v, mask)
+    S = x.shape[1]
+    T = cache["k"].shape[1]
+    if S == T:
+        new_cache = {"k": k.astype(cache["k"].dtype),
+                     "v": v.astype(cache["v"].dtype),
+                     "kpos": positions[0] if positions.ndim > 1 else positions}
+        new_cache["kpos"] = new_cache["kpos"].astype(jnp.int32)
+    else:
+        pos1d = (positions[0] if positions.ndim > 1 else positions).astype(jnp.int32)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            "kpos": jax.lax.dynamic_update_slice(cache["kpos"], pos1d, (0,)),
+        }
+    return _out_proj(p, o), new_cache
+
+
+def attention_decode(p: Params, x: jnp.ndarray, pos: jnp.ndarray, *,
+                     cache: Params, window: int = 0, use_rope: bool = True,
+                     rope_theta: float = 10000.0
+                     ) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. x: (B,1,d); pos: scalar int32 absolute position.
+
+    The cache is a ring buffer when ``window>0`` (cache_len == window);
+    otherwise slot == pos.
+    """
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, x)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    slot = jnp.where(window > 0, pos % T, pos).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(
+        cache["kpos"], jnp.full((1,), pos, jnp.int32), (slot,))
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window:
+        valid = valid & (kpos > pos - window)
+    mask = valid[None, None, None, None, :]                 # (1,1,1,1,T)
+    o = grouped_attend(q, ck, cv, mask)
+    return _out_proj(p, o), {"k": ck, "v": cv, "kpos": kpos}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention KV (whisper decoder): computed once per sequence
+# ---------------------------------------------------------------------------
+def cross_kv(p: Params, enc: jnp.ndarray) -> Params:
+    k = jnp.einsum("btd,dhk->bthk", enc, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return {"k": k, "v": v}
+
+
+def cross_attend(p: Params, x: jnp.ndarray, kv: Params) -> jnp.ndarray:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    o = grouped_attend(q, kv["k"], kv["v"], None)
+    return _out_proj(p, o)

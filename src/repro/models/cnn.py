@@ -1,0 +1,63 @@
+"""The paper's use-case model: a small convolutional NN (MLitB §3.5).
+
+"a 28x28 input layer connected to 16 convolution filters (with pooling),
+followed by a fully connected output layer" — the network the scaling
+experiment (Fig. 4/5) trains on MNIST with distributed SGD + AdaGrad.
+
+Used by the Fig.4/Fig.5 reproduction benchmarks, the elastic-SGD examples,
+and the core-engine tests (it is the cheapest real model in the zoo).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mlitb_cnn import CNN_EXTRAS, CNNExtras
+
+Params = Dict[str, Any]
+
+
+def init_params(key, ex: CNNExtras = CNN_EXTRAS) -> Params:
+    k1, k2 = jax.random.split(key)
+    fan_in = ex.kernel * ex.kernel * ex.channels
+    feat = ex.conv_filters * (ex.image_hw // ex.pool) ** 2
+    return {
+        "conv_w": jax.random.normal(
+            k1, (ex.kernel, ex.kernel, ex.channels, ex.conv_filters))
+        * fan_in ** -0.5,
+        "conv_b": jnp.zeros((ex.conv_filters,)),
+        "fc_w": jax.random.normal(k2, (feat, ex.n_classes)) * feat ** -0.5,
+        "fc_b": jnp.zeros((ex.n_classes,)),
+    }
+
+
+def forward(params: Params, images: jnp.ndarray,
+            ex: CNNExtras = CNN_EXTRAS) -> jnp.ndarray:
+    """images: (B, H, W, C) -> logits (B, n_classes)."""
+    x = jax.lax.conv_general_dilated(
+        images, params["conv_w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.relu(x + params["conv_b"])
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, ex.pool, ex.pool, 1),
+        window_strides=(1, ex.pool, ex.pool, 1), padding="VALID")
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+def loss_and_grad(params: Params, images: jnp.ndarray, labels: jnp.ndarray,
+                  ex: CNNExtras = CNN_EXTRAS
+                  ) -> Tuple[jnp.ndarray, Params, jnp.ndarray]:
+    """Returns (sum_nll, grad of SUM loss, n_correct). Sum (not mean) so the
+    master's weighted reduce (MLitB step c) can divide by the global count."""
+    def f(p):
+        logits = forward(p, images, ex)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        correct = jnp.sum((jnp.argmax(logits, -1) == labels))
+        return jnp.sum(lse - ll), correct
+    (loss, correct), grads = jax.value_and_grad(f, has_aux=True)(params)
+    return loss, grads, correct

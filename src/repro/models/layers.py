@@ -1,0 +1,152 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, embeddings.
+
+All models are pure functions over parameter pytrees (nested dicts of
+jnp arrays). ``init_*`` functions return the param tree; the matching
+``apply`` logic lives beside it. Layer-stacked params carry a leading
+``L`` axis and are consumed through ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(orig)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(orig)
+
+
+def apply_norm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return layernorm(p, x, eps) if "bias" in p else rmsnorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, ff: int, act: str, bias: bool = False,
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = d ** -0.5
+    p: Params = {}
+    if act in ("silu", "gelu_glu"):
+        p["w_gate"] = (jax.random.normal(k1, (d, ff)) * scale).astype(dtype)
+        p["w_up"] = (jax.random.normal(k2, (d, ff)) * scale).astype(dtype)
+        p["w_down"] = (jax.random.normal(k3, (ff, d)) * ff ** -0.5).astype(dtype)
+    else:  # plain 2-matrix MLP (whisper)
+        p["w_up"] = (jax.random.normal(k1, (d, ff)) * scale).astype(dtype)
+        p["w_down"] = (jax.random.normal(k2, (ff, d)) * ff ** -0.5).astype(dtype)
+        if bias:
+            p["b_up"] = jnp.zeros((ff,), dtype)
+            p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if "w_gate" in p:
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)) * u
+        return h @ p["w_down"]
+    h = x @ p["w_up"]
+    if "b_up" in p:
+        h = h + p["b_up"]
+    h = jax.nn.gelu(h, approximate=True)
+    out = h @ p["w_down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """table: (V, d), x: (..., d) -> logits (..., V). fp32 logits."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None):
+    """Token cross-entropy. Returns (sum_loss, n_tokens) so callers can do the
+    paper's weighted reduce (sum over workers / global count).
+
+    The label pick is a one-hot CONTRACTION (not take_along_axis): with
+    vocab-sharded logits a gather would all-gather the (B,S,V) logits,
+    while the contraction reduces over the sharded vocab dim locally and
+    psums a (B,S) scalar field.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.einsum("...v,...v->...", logits, onehot)
+    nll = lse - ll
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)

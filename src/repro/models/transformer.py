@@ -1,0 +1,594 @@
+"""Model assembly: block definitions, layer-stacked scans, train/prefill/
+decode entry points for every assigned architecture family.
+
+Param layout (uniform stacks carry a leading L axis, consumed by lax.scan):
+  dense/moe/vlm : {embed, blocks, final_norm[, lm_head]}
+  ssm           : {embed, blocks, final_norm}
+  hybrid        : {embed, super: {ssm (Ns,P-1,...), attn (Ns,...)},
+                   tail (Nt,...), final_norm}
+  audio(encdec) : {embed, encoder, enc_final_norm, blocks(dec), final_norm}
+
+Decode "cache" trees mirror the block structure with leading L axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.activation_sharding import constrain_batch
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_norm, dtype_of, embed, init_embed,
+                                 init_layernorm, init_mlp, init_rmsnorm, mlp,
+                                 unembed)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+def scan_apply(body, carry, xs, unroll: bool = False):
+    """lax.scan or an unrolled python loop (identical math).
+
+    Unrolling exists for the dry-run's cost probes: XLA's cost_analysis
+    counts a while-loop body ONCE regardless of trip count, so roofline
+    numbers come from small-L unrolled lowers extrapolated linearly
+    (launch/dryrun.py).
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def sinusoidal_pos(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embedding; length-agnostic (adapts the
+    paper-model's learned table, which caps at 448, to assigned shapes)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Per-block init
+# ---------------------------------------------------------------------------
+def _init_norm(cfg: ArchConfig, dtype):
+    return (init_layernorm if cfg.attn_bias else init_rmsnorm)(cfg.d_model, dtype)
+
+
+def init_attn_block(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _init_norm(cfg, dtype),
+        "attn": attn_mod.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qk_norm=cfg.qk_norm, bias=cfg.attn_bias, dtype=dtype),
+        "ln2": _init_norm(cfg, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                        bias=cfg.attn_bias, dtype=dtype),
+    }
+
+
+def init_moe_block(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": _init_norm(cfg, dtype),
+        "attn": attn_mod.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qk_norm=cfg.qk_norm, bias=cfg.attn_bias, dtype=dtype),
+        "ln2": _init_norm(cfg, dtype),
+        "moe": moe_mod.init_moe(k2, cfg.d_model, cfg.moe, dtype),
+    }
+    if cfg.moe.shared_expert:
+        p["shared"] = init_mlp(k3, cfg.d_model, cfg.moe.d_ff_expert,
+                               "silu", dtype=dtype)
+    if cfg.moe.dense_residual:
+        p["dense"] = init_mlp(k4, cfg.d_model, cfg.d_ff, "silu", dtype=dtype)
+    return p
+
+
+def init_ssm_block(key, cfg: ArchConfig, dtype) -> Params:
+    return {
+        "ln": init_rmsnorm(cfg.d_model, dtype),
+        "ssm": ssm_mod.init_ssm(key, cfg.d_model, cfg.ssm, dtype),
+    }
+
+
+def init_decoder_xblock(key, cfg: ArchConfig, dtype) -> Params:
+    """Enc-dec decoder block: self-attn + cross-attn + MLP (whisper)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": _init_norm(cfg, dtype),
+        "self_attn": attn_mod.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            bias=cfg.attn_bias, dtype=dtype),
+        "ln2": _init_norm(cfg, dtype),
+        "cross_attn": attn_mod.init_attention(
+            k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            bias=cfg.attn_bias, dtype=dtype),
+        "ln3": _init_norm(cfg, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                        bias=cfg.attn_bias, dtype=dtype),
+    }
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": init_embed(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+                 "final_norm": _init_norm(cfg, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_embed(keys[1], cfg.vocab_size, cfg.d_model, dtype)
+
+    pattern = cfg.block_pattern()
+    if cfg.arch_type in ("dense", "vlm"):
+        p["blocks"] = _stack_init(lambda k: init_attn_block(k, cfg, dtype),
+                                  keys[2], cfg.n_layers)
+    elif cfg.arch_type == "moe":
+        p["blocks"] = _stack_init(lambda k: init_moe_block(k, cfg, dtype),
+                                  keys[2], cfg.n_layers)
+    elif cfg.arch_type == "ssm":
+        p["blocks"] = _stack_init(lambda k: init_ssm_block(k, cfg, dtype),
+                                  keys[2], cfg.n_layers)
+    elif cfg.arch_type == "hybrid":
+        period = cfg.hybrid_attn_period
+        n_super = cfg.n_layers // period
+        n_tail = cfg.n_layers % period
+
+        def init_super(k):
+            ka, kb = jax.random.split(k)
+            return {"ssm": _stack_init(
+                        lambda kk: init_ssm_block(kk, cfg, dtype), ka, period - 1),
+                    "attn": init_attn_block(kb, cfg, dtype)}
+
+        p["super"] = _stack_init(init_super, keys[2], n_super)
+        if n_tail:
+            p["tail"] = _stack_init(lambda k: init_ssm_block(k, cfg, dtype),
+                                    keys[3], n_tail)
+    elif cfg.arch_type == "audio":
+        p["encoder"] = _stack_init(lambda k: init_attn_block(k, cfg, dtype),
+                                   keys[2], cfg.n_encoder_layers)
+        p["enc_final_norm"] = _init_norm(cfg, dtype)
+        p["blocks"] = _stack_init(lambda k: init_decoder_xblock(k, cfg, dtype),
+                                  keys[3], cfg.n_layers)
+    else:
+        raise ValueError(f"unknown arch_type {cfg.arch_type}")
+    del pattern
+    return p
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Block application — full-sequence (train / encoder / prefill-less)
+# ---------------------------------------------------------------------------
+def apply_attn_block(bp: Params, x, positions, cfg: ArchConfig, *,
+                     causal=True) -> jnp.ndarray:
+    h = apply_norm(bp["ln1"], x, cfg.norm_eps)
+    x = x + attn_mod.attention(
+        bp["attn"], h, positions, causal=causal, window=cfg.sliding_window,
+        use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+    h = apply_norm(bp["ln2"], x, cfg.norm_eps)
+    return constrain_batch(x + mlp(bp["mlp"], h, cfg.mlp_act))
+
+
+def apply_moe_block(bp: Params, x, positions, cfg: ArchConfig
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = apply_norm(bp["ln1"], x, cfg.norm_eps)
+    x = x + attn_mod.attention(
+        bp["attn"], h, positions, causal=True, window=cfg.sliding_window,
+        use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+    h = apply_norm(bp["ln2"], x, cfg.norm_eps)
+    moe_fn = moe_mod.moe_ffn_sorted if cfg.moe.impl == "sort" \
+        else moe_mod.moe_ffn
+    y, aux = moe_fn(bp["moe"], h, cfg.moe)
+    if "shared" in bp:
+        y = y + mlp(bp["shared"], h, "silu")
+    if "dense" in bp:
+        y = y + mlp(bp["dense"], h, "silu")
+    return constrain_batch(x + y), aux
+
+
+def apply_ssm_block(bp: Params, x, cfg: ArchConfig) -> jnp.ndarray:
+    h = apply_norm(bp["ln"], x, cfg.norm_eps)
+    return constrain_batch(
+        x + ssm_mod.ssm_forward(bp["ssm"], h, cfg.d_model, cfg.ssm))
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training path) -> (logits, aux_loss)
+# ---------------------------------------------------------------------------
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            prefix: Optional[jnp.ndarray] = None,
+            frames: Optional[jnp.ndarray] = None,
+            remat: bool = True,
+            unroll: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scan = functools.partial(scan_apply, unroll=unroll)
+    adt = dtype_of(cfg.activ_dtype)
+    x = embed(params["embed"], tokens).astype(adt)
+    if cfg.arch_type == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)        # gemma convention
+        assert prefix is not None, "vlm needs patch embeddings"
+        x = jnp.concatenate([prefix.astype(adt), x], axis=1)
+    x = constrain_batch(x)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def maybe_ckpt(fn):
+        return jax.checkpoint(fn) if remat else fn
+
+    if cfg.arch_type == "audio":
+        # ---- encoder over precomputed frame embeddings ----
+        assert frames is not None, "audio needs frame embeddings"
+        F = frames.shape[1]
+        enc = frames.astype(adt) + sinusoidal_pos(
+            jnp.arange(F, dtype=jnp.int32), cfg.d_model).astype(adt)
+
+        @maybe_ckpt
+        def enc_body(h, bp):
+            return apply_attn_block(bp, h, jnp.arange(F, dtype=jnp.int32),
+                                    cfg, causal=False), None
+        enc, _ = scan(enc_body, enc, params["encoder"])
+        enc = apply_norm(params["enc_final_norm"], enc, cfg.norm_eps)
+
+        x = x + sinusoidal_pos(positions, cfg.d_model).astype(adt)
+
+        @maybe_ckpt
+        def dec_body(h, bp):
+            hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+            h = h + attn_mod.attention(
+                bp["self_attn"], hh, positions, causal=True,
+                use_rope=False)
+            hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+            h = h + attn_mod.attention(
+                bp["cross_attn"], hh, positions, causal=False, use_rope=False,
+                xkv=enc, kv_positions=jnp.arange(F, dtype=jnp.int32))
+            hh = apply_norm(bp["ln3"], h, cfg.norm_eps)
+            return constrain_batch(h + mlp(bp["mlp"], hh, cfg.mlp_act)), None
+        x, _ = scan(dec_body, x, params["blocks"])
+
+    elif cfg.arch_type in ("dense", "vlm"):
+        @maybe_ckpt
+        def body(h, bp):
+            return apply_attn_block(bp, h, positions, cfg), None
+        x, _ = scan(body, x, params["blocks"])
+
+    elif cfg.arch_type == "moe":
+        @maybe_ckpt
+        def body(carry, bp):
+            h, aux = carry
+            h, a = apply_moe_block(bp, h, positions, cfg)
+            return (h, aux + a), None
+        (x, aux_total), _ = scan(body, (x, aux_total), params["blocks"])
+
+    elif cfg.arch_type == "ssm":
+        @maybe_ckpt
+        def body(h, bp):
+            return apply_ssm_block(bp, h, cfg), None
+        x, _ = scan(body, x, params["blocks"])
+
+    elif cfg.arch_type == "hybrid":
+        @maybe_ckpt
+        def super_body(h, sp):
+            def inner(hh, bp):
+                return apply_ssm_block(bp, hh, cfg), None
+            h, _ = scan(inner, h, sp["ssm"])
+            return apply_attn_block(sp["attn"], h, positions, cfg), None
+        x, _ = scan(super_body, x, params["super"])
+        if "tail" in params:
+            @maybe_ckpt
+            def tail_body(h, bp):
+                return apply_ssm_block(bp, h, cfg), None
+            x, _ = scan(tail_body, x, params["tail"])
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.arch_type == "vlm":                               # loss on text only
+        x = x[:, -tokens.shape[1]:, :]
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serving path)
+# ---------------------------------------------------------------------------
+def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                      abstract: bool = False) -> Params:
+    """Cache tree with leading per-stack L axes. ``cache_len`` is the KV
+    length; sliding-window archs get a ring of min(window, cache_len)."""
+    adt = dtype_of(cfg.activ_dtype)
+    eff = min(cfg.sliding_window, cache_len) if cfg.sliding_window else cache_len
+    sd = jax.ShapeDtypeStruct
+
+    def attn_cache():
+        return attn_mod.cache_spec(batch, eff, cfg.n_kv_heads, cfg.head_dim, adt)
+
+    def ssm_state():
+        return ssm_mod.ssm_states_spec(batch, cfg.d_model, cfg.ssm, adt)
+
+    def stack(tree, n):
+        return jax.tree.map(lambda s: sd((n,) + s.shape, s.dtype), tree)
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        spec = {"layers": stack(attn_cache(), cfg.n_layers)}
+    elif cfg.arch_type == "ssm":
+        spec = {"layers": stack(ssm_state(), cfg.n_layers)}
+    elif cfg.arch_type == "hybrid":
+        period = cfg.hybrid_attn_period
+        n_super = cfg.n_layers // period
+        n_tail = cfg.n_layers % period
+        spec = {"super": {"ssm": stack(stack(ssm_state(), period - 1), n_super),
+                          "attn": stack(attn_cache(), n_super)}}
+        if n_tail:
+            spec["tail"] = stack(ssm_state(), n_tail)
+    elif cfg.arch_type == "audio":
+        spec = {"self": stack(attn_cache(), cfg.n_layers),
+                "cross": stack({"k": sd((batch, cfg.encoder_seq,
+                                         cfg.n_kv_heads, cfg.head_dim), adt),
+                                "v": sd((batch, cfg.encoder_seq,
+                                         cfg.n_kv_heads, cfg.head_dim), adt)},
+                               cfg.n_layers)}
+    else:
+        raise ValueError(cfg.arch_type)
+    if abstract:
+        return spec
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype) if s.dtype
+                        != jnp.int32 else jnp.full(s.shape, -1, s.dtype), spec)
+
+
+def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
+                pos: jnp.ndarray, cache: Params,
+                frames_enc: Optional[jnp.ndarray] = None,
+                unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """ONE-token decode. token: (B,1) int32; pos: scalar int32 (same for all
+    rows — continuous batching with per-row positions is a serving-layer
+    concern handled by repro.serve). Returns (logits (B,1,V), new cache)."""
+    scan = functools.partial(scan_apply, unroll=unroll)
+    adt = dtype_of(cfg.activ_dtype)
+    x = embed(params["embed"], token).astype(adt)
+    if cfg.arch_type == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)
+    w = cfg.sliding_window
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        is_moe = cfg.arch_type == "moe"
+
+        def body(h, xs):
+            bp, cl = xs
+            hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+            a, new_c = attn_mod.attention_decode(
+                bp["attn"], hh, pos, cache=cl, window=w,
+                use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+            h = h + a
+            hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+            if is_moe:
+                moe_fn = moe_mod.moe_ffn_sorted if cfg.moe.impl == "sort" \
+                    else moe_mod.moe_ffn
+                y, _ = moe_fn(bp["moe"], hh, cfg.moe)
+                if "shared" in bp:
+                    y = y + mlp(bp["shared"], hh, "silu")
+                if "dense" in bp:
+                    y = y + mlp(bp["dense"], hh, "silu")
+            else:
+                y = mlp(bp["mlp"], hh, cfg.mlp_act)
+            return h + y, new_c
+        x, new_layers = scan(body, x, (params["blocks"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    elif cfg.arch_type == "ssm":
+        def body(h, xs):
+            bp, st = xs
+            hh = apply_norm(bp["ln"], h, cfg.norm_eps)
+            y, st2 = ssm_mod.ssm_decode(bp["ssm"], hh, st, cfg.d_model, cfg.ssm)
+            return h + y, st2
+        x, new_layers = scan(body, x, (params["blocks"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    elif cfg.arch_type == "hybrid":
+        def ssm_body(h, xs):
+            bp, st = xs
+            hh = apply_norm(bp["ln"], h, cfg.norm_eps)
+            y, st2 = ssm_mod.ssm_decode(bp["ssm"], hh, st, cfg.d_model, cfg.ssm)
+            return h + y, st2
+
+        def super_body(h, xs):
+            sp, sc = xs
+            h, new_ssm = scan(ssm_body, h, (sp["ssm"], sc["ssm"]))
+            bp = sp["attn"]
+            hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+            a, new_attn = attn_mod.attention_decode(
+                bp["attn"], hh, pos, cache=sc["attn"], window=w,
+                use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+            h = h + a
+            hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+            h = h + mlp(bp["mlp"], hh, cfg.mlp_act)
+            return h, {"ssm": new_ssm, "attn": new_attn}
+        x, new_super = scan(super_body, x,
+                                    (params["super"], cache["super"]))
+        new_cache = {"super": new_super}
+        if "tail" in cache:
+            x, new_tail = scan(ssm_body, x,
+                                       (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+
+    elif cfg.arch_type == "audio":
+        x = x + sinusoidal_pos(jnp.full((1,), pos, jnp.int32),
+                               cfg.d_model).astype(adt)
+
+        def body(h, xs):
+            bp, cl, xkv = xs
+            hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+            a, new_c = attn_mod.attention_decode(
+                bp["self_attn"], hh, pos, cache=cl, window=w, use_rope=False)
+            h = h + a
+            hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+            h = h + attn_mod.cross_attend(bp["cross_attn"], hh, xkv)
+            hh = apply_norm(bp["ln3"], h, cfg.norm_eps)
+            return h + mlp(bp["mlp"], hh, cfg.mlp_act), new_c
+        x, new_self = scan(body, x, (params["blocks"], cache["self"],
+                                             cache["cross"]))
+        new_cache = {"self": new_self, "cross": cache["cross"]}
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x), new_cache
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            prefix: Optional[jnp.ndarray] = None,
+            frames: Optional[jnp.ndarray] = None,
+            cache_len: Optional[int] = None,
+            unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """Forward over the prompt, building a decode cache of ``cache_len``
+    slots (default: prompt + 64 so decode can continue immediately).
+    Returns (last-token logits (B,1,V), cache)."""
+    scan = functools.partial(scan_apply, unroll=unroll)
+    adt = dtype_of(cfg.activ_dtype)
+    x = embed(params["embed"], tokens).astype(adt)
+    if cfg.arch_type == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(adt), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    w = cfg.sliding_window
+    if cache_len is None:
+        cache_len = S + 64
+    if w:
+        assert S <= min(w, cache_len), \
+            "sliding-window prefill longer than the window is unsupported " \
+            "(decode-only shape); prefill chunking is a serving-layer feature"
+    cache = init_decode_cache(cfg, B, cache_len)
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        is_moe = cfg.arch_type == "moe"
+
+        def body(h, xs):
+            bp, cl = xs
+            hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+            a, new_c = attn_mod.attention_prefill(
+                bp["attn"], hh, positions, cache=cl, window=w,
+                use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+            h = h + a
+            hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+            if is_moe:
+                moe_fn = moe_mod.moe_ffn_sorted if cfg.moe.impl == "sort" \
+                    else moe_mod.moe_ffn
+                y, _ = moe_fn(bp["moe"], hh, cfg.moe)
+                if "shared" in bp:
+                    y = y + mlp(bp["shared"], hh, "silu")
+                if "dense" in bp:
+                    y = y + mlp(bp["dense"], hh, "silu")
+            else:
+                y = mlp(bp["mlp"], hh, cfg.mlp_act)
+            return constrain_batch(h + y), new_c
+        x, new_layers = scan(body, x, (params["blocks"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    elif cfg.arch_type == "ssm":
+        def body(h, bp):
+            hh = apply_norm(bp["ln"], h, cfg.norm_eps)
+            y, st = ssm_mod.ssm_prefill(bp["ssm"], hh, cfg.d_model, cfg.ssm)
+            return constrain_batch(h + y), st
+        x, new_layers = scan(body, x, params["blocks"])
+        new_cache = {"layers": new_layers}
+
+    elif cfg.arch_type == "hybrid":
+        def ssm_body(h, bp):
+            hh = apply_norm(bp["ln"], h, cfg.norm_eps)
+            y, st = ssm_mod.ssm_prefill(bp["ssm"], hh, cfg.d_model, cfg.ssm)
+            return h + y, st
+
+        def super_body(h, xs):
+            sp, cl = xs
+            h, new_ssm = scan(ssm_body, h, sp["ssm"])
+            bp = sp["attn"]
+            hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+            a, new_attn = attn_mod.attention_prefill(
+                bp["attn"], hh, positions, cache=cl["attn"], window=w,
+                use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+            h = h + a
+            hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+            h = constrain_batch(h + mlp(bp["mlp"], hh, cfg.mlp_act))
+            return h, {"ssm": new_ssm, "attn": new_attn}
+        x, new_super = scan(super_body, x,
+                                    (params["super"], cache["super"]))
+        new_cache = {"super": new_super}
+        if "tail" in cache:
+            x, new_tail = scan(ssm_body, x, params["tail"])
+            new_cache["tail"] = new_tail
+
+    elif cfg.arch_type == "audio":
+        assert frames is not None
+        F = frames.shape[1]
+        fpos = jnp.arange(F, dtype=jnp.int32)
+        enc = frames.astype(adt) + sinusoidal_pos(fpos, cfg.d_model).astype(adt)
+
+        def enc_body(h, bp):
+            return apply_attn_block(bp, h, fpos, cfg, causal=False), None
+        enc, _ = scan(enc_body, enc, params["encoder"])
+        enc = apply_norm(params["enc_final_norm"], enc, cfg.norm_eps)
+        x = x + sinusoidal_pos(positions, cfg.d_model).astype(adt)
+
+        def body(h, xs):
+            bp, cl = xs
+            hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+            a, new_c = attn_mod.attention_prefill(
+                bp["self_attn"], hh, positions, cache=cl, window=w,
+                use_rope=False)
+            h = h + a
+            hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+            h = h + attn_mod.attention(
+                bp["cross_attn"], hh, positions, causal=False, use_rope=False,
+                xkv=enc, kv_positions=fpos)
+            hh = apply_norm(bp["ln3"], h, cfg.norm_eps)
+            return constrain_batch(h + mlp(bp["mlp"], hh, cfg.mlp_act)), new_c
+        x, new_self = scan(body, x, (params["blocks"], cache["self"]))
+
+        def xkv_body(_, bp):
+            return None, attn_mod.cross_kv(bp["cross_attn"], enc)
+        _, cross = scan(xkv_body, None, params["blocks"])
+        new_cache = {"self": new_self, "cross": cross}
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = apply_norm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x), new_cache

@@ -1,0 +1,8 @@
+from repro.optim.adagrad import adagrad  # noqa: F401
+from repro.optim.adam import adam  # noqa: F401
+from repro.optim.base import Optimizer  # noqa: F401
+from repro.optim.sgd import sgd  # noqa: F401
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adagrad": adagrad, "adam": adam, "sgd": sgd}[name](**kw)

@@ -1,0 +1,42 @@
+"""AdaGrad — the paper's optimizer (MLitB §3.6, citing Duchi et al. [31]).
+
+    G_t  = G_{t-1} + g_t^2
+    w_t  = w_{t-1} - lr * g_t / (sqrt(G_t) + eps)
+
+``accum_dtype`` lets the accumulator be stored in bf16 — a memory-roofline
+lever used by the arctic-480b hillclimb (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adagrad(lr: float = 0.01, eps: float = 1e-8,
+            accum_dtype=None) -> Optimizer:
+    def init(params):
+        return {"accum": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, accum_dtype or jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        def upd(acc, g):
+            g32 = g.astype(jnp.float32)
+            acc32 = acc.astype(jnp.float32) + jnp.square(g32)
+            return acc32
+
+        new_acc32 = jax.tree.map(upd, state["accum"], grads)
+
+        def step(p, g, acc32):
+            g32 = g.astype(jnp.float32)
+            delta = lr * g32 / (jnp.sqrt(acc32) + eps)
+            return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, grads, new_acc32)
+        new_acc = jax.tree.map(
+            lambda a, old: a.astype(old.dtype), new_acc32, state["accum"])
+        return new_params, {"accum": new_acc, "step": state["step"] + 1}
+
+    return Optimizer("adagrad", init, update)

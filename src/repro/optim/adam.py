@@ -1,0 +1,37 @@
+"""Adam — the modern default for the assigned transformer archs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        t = state["step"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        c1 = 1.0 / (1 - b1 ** tf)
+        c2 = 1.0 / (1 - b2 ** tf)
+
+        def step(p, mm, vv):
+            upd = (mm * c1) / (jnp.sqrt(vv * c2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                upd = upd + weight_decay * p32
+            return (p32 - lr * upd).astype(p.dtype)
+
+        return jax.tree.map(step, params, m, v), {"m": m, "v": v, "step": t}
+
+    return Optimizer("adam", init, update)

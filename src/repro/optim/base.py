@@ -1,0 +1,31 @@
+"""Minimal functional optimizer interface (no external deps).
+
+An Optimizer is (init, update):
+  state  = opt.init(params)
+  params, state = opt.update(params, grads, state)
+
+All update rules are elementwise pytree maps, so optimizer state inherits
+whatever sharding the parameters carry (the paper's "master holds the
+parameters" becomes fully-sharded master state for free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    import jax.numpy as jnp
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)

@@ -1,0 +1,34 @@
+"""Plain SGD (+ optional momentum) — baseline the paper compares against
+implicitly (ConvNetJS default) and the cheapest-memory option."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def sgd(lr: float = 0.01, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["vel"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    def update(params, grads, state):
+        if momentum:
+            vel = jax.tree.map(
+                lambda v, g: momentum * v + g.astype(jnp.float32),
+                state["vel"], grads)
+            new_params = jax.tree.map(
+                lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+                params, vel)
+            return new_params, {"vel": vel, "step": state["step"] + 1}
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, {"step": state["step"] + 1}
+
+    return Optimizer("sgd", init, update)

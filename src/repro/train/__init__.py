@@ -1,0 +1,3 @@
+from repro.train.step import (build_decode_step,  # noqa: F401
+                              build_prefill_step, build_train_step,
+                              make_train_state)

@@ -1,0 +1,81 @@
+"""Step builders: train / prefill / decode functions for any ArchConfig.
+
+``build_train_step`` implements the paper's algorithm as ONE sharded
+program: every virtual worker (data-shard) contributes the gradient SUM
+over its masked-in samples, and the division by the GLOBAL masked token
+count is the master's weighted average (MLitB step c). The optimizer
+update (AdaGrad by default) is the master's step, executed on fully-
+sharded state.
+
+The ``mask`` is the elasticity hook: the adaptive scheduler widens or
+zeroes per-worker row ranges without recompiling (see core/mesh_engine).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.layers import softmax_xent
+from repro.optim.base import Optimizer
+
+PyTree = Any
+
+
+def make_train_state(params: PyTree, optimizer: Optimizer) -> PyTree:
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def build_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
+                     remat: bool = True, aux_weight: float = 0.01,
+                     unroll: bool = False
+                     ) -> Callable[[PyTree, Dict[str, jnp.ndarray]],
+                                   Tuple[PyTree, Dict[str, jnp.ndarray]]]:
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.arch_type == "vlm":
+            kw["prefix"] = batch["prefix"]
+        if cfg.arch_type == "audio":
+            kw["frames"] = batch["frames"]
+        logits, aux = tf.forward(params, cfg, batch["tokens"], remat=remat,
+                                 unroll=unroll, **kw)
+        sum_nll, count = softmax_xent(logits, batch["labels"], batch["mask"])
+        # weighted reduce: gradient of (global sum / global count) ==
+        # (sum_w grad_sum_w) / (sum_w n_w) — the master's weighted average.
+        count = jnp.maximum(count, 1.0)
+        loss = sum_nll / count + aux_weight * aux
+        return loss, (sum_nll, count, aux)
+
+    def train_step(state, batch):
+        (loss, (sum_nll, count, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], batch)
+        new_params, new_opt = optimizer.update(state["params"], grads,
+                                               state["opt"])
+        metrics = {"loss": sum_nll / count, "tokens": count,
+                   "aux_loss": aux, "total_loss": loss}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig, unroll: bool = False):
+    def prefill_step(params, batch):
+        kw = {}
+        if cfg.arch_type == "vlm":
+            kw["prefix"] = batch.get("prefix")
+        if cfg.arch_type == "audio":
+            kw["frames"] = batch.get("frames")
+        logits, cache = tf.prefill(params, cfg, batch["tokens"],
+                                   unroll=unroll, **kw)
+        return logits, cache
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig, unroll: bool = False):
+    def decode_step(params, token, pos, cache):
+        return tf.decode_step(params, cfg, token, pos, cache, unroll=unroll)
+    return decode_step

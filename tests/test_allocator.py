@@ -1,0 +1,106 @@
+"""Pie-cutter allocator properties (paper §3.3 a/b) — hypothesis-driven."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import DataAllocator
+
+
+def test_basic_balance():
+    a = DataAllocator()
+    a.add_worker("w0", capacity=100)
+    a.add_worker("w1", capacity=100)
+    a.add_data(range(50))
+    a.check_invariants()
+    counts = a.allocation_counts()
+    assert abs(counts["w0"] - counts["w1"]) <= 1
+    assert sum(counts.values()) == 50
+
+
+def test_pie_cutter_carves_balanced_share():
+    a = DataAllocator()
+    a.add_worker("w0", capacity=1000)
+    a.add_data(range(90))
+    assert a.allocation_counts()["w0"] == 90
+    a.add_worker("w1", capacity=1000)
+    a.check_invariants()
+    counts = a.allocation_counts()
+    assert counts["w1"] >= 90 // 2 - 1     # got its pie slice
+    assert sum(counts.values()) == 90      # nothing lost
+
+
+def test_pie_cutter_prefers_cached_indices():
+    a = DataAllocator()
+    a.add_worker("w0", capacity=1000)
+    a.add_data(range(40))
+    a.add_worker("w1", capacity=1000)
+    # w1 leaves; its share returns to w0 (which cached everything at upload)
+    before = a.transfers
+    a.remove_worker("w1")
+    a.check_invariants()
+    assert a.allocation_counts()["w0"] == 40
+    assert a.transfers == before  # re-allocation hit w0's cache, no transfer
+
+
+def test_capacity_respected():
+    a = DataAllocator()
+    a.add_worker("w0", capacity=10)
+    a.add_data(range(25))
+    a.check_invariants()
+    assert a.allocation_counts()["w0"] == 10
+    assert len(a.unallocated) == 15
+    a.add_worker("w1", capacity=10)
+    a.check_invariants()
+    assert len(a.unallocated) == 5
+
+
+def test_lost_worker_reallocation():
+    a = DataAllocator()
+    for i in range(4):
+        a.add_worker(f"w{i}", capacity=100)
+    a.add_data(range(100))
+    orphans = a.remove_worker("w2")
+    a.check_invariants()
+    assert len(orphans) >= 100 // 4 - 1
+    assert sum(a.allocation_counts().values()) == 100   # all re-homed
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("join"), st.integers(0, 7), st.integers(5, 60)),
+        st.tuples(st.just("leave"), st.integers(0, 7), st.just(0)),
+        st.tuples(st.just("data"), st.integers(1, 40), st.just(0)),
+    ), min_size=1, max_size=25))
+def test_invariants_under_arbitrary_event_sequences(events):
+    """No event order may double-allocate, leak, or overflow capacity."""
+    a = DataAllocator()
+    next_idx = 0
+    live = set()
+    for kind, x, cap in events:
+        if kind == "join" and f"w{x}" not in live:
+            a.add_worker(f"w{x}", capacity=cap)
+            live.add(f"w{x}")
+        elif kind == "leave" and f"w{x}" in live:
+            a.remove_worker(f"w{x}")
+            live.discard(f"w{x}")
+        elif kind == "data":
+            a.add_data(range(next_idx, next_idx + x))
+            next_idx += x
+        a.check_invariants()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_data=st.integers(10, 200), n_workers=st.integers(1, 10))
+def test_balance_property(n_data, n_workers):
+    """With ample capacity, allocation is balanced within 1 after any
+    join order (the pie-cutter's contract)."""
+    a = DataAllocator()
+    a.add_worker("w0", capacity=10_000)
+    a.add_data(range(n_data))
+    for i in range(1, n_workers):
+        a.add_worker(f"w{i}", capacity=10_000)
+    a.check_invariants()
+    counts = list(a.allocation_counts().values())
+    assert sum(counts) == n_data
+    # pie-cutter targets floor(total/n); later joiners may sit one below
+    assert max(counts) - min(counts) <= max(2, n_data // n_workers // 2), \
+        counts

@@ -1,0 +1,43 @@
+"""Checkpoint store: npz round-trip + closure sidecar."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_closure, load_npz, save_closure, save_npz
+from repro.configs import get_config
+from repro.core.closure import ResearchClosure
+from repro.models import cnn
+
+
+def test_npz_roundtrip(tmp_path):
+    params = cnn.init_params(jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt.npz")
+    save_npz(path, params, cfg=get_config("mlitb-cnn"),
+             meta={"step": 42})
+    back, header = load_npz(path)
+    assert header["meta"]["step"] == 42
+    assert header["config"]["name"] == "mlitb-cnn"
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a), b)
+
+
+def test_nested_tree_roundtrip(tmp_path):
+    tree = {"a": {"b": {"c": jnp.arange(4)}}, "d": jnp.ones((2, 2))}
+    path = str(tmp_path / "t.npz")
+    save_npz(path, tree)
+    back, _ = load_npz(path)
+    assert np.array_equal(back["a"]["b"]["c"], np.arange(4))
+    assert np.array_equal(back["d"], np.ones((2, 2)))
+
+
+def test_closure_with_sidecar(tmp_path):
+    params = {"w": jnp.full((3,), 7.0)}
+    clo = ResearchClosure("mlitb-cnn", get_config("mlitb-cnn"),
+                          {"optimizer": "adagrad"}, params)
+    path = str(tmp_path / "clo.json")
+    save_closure(path, clo, npz_sidecar=True)
+    back = load_closure(path)
+    assert np.array_equal(np.asarray(back.params["w"]), [7.0] * 3)
+    npz, header = load_npz(path + ".npz")
+    assert np.array_equal(npz["w"], [7.0] * 3)
+    assert header["meta"]["arch"] == "mlitb-cnn"

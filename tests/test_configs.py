@@ -1,0 +1,93 @@
+"""Assigned-architecture configs: exact spec fields + param-count sanity."""
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.configs.all_configs import ASSIGNED_ARCHS
+
+SPEC = {
+    # name: (L, d_model, H, kv, d_ff, vocab)
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+    "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+    "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+}
+
+# rough total-param expectations (factor-of-~1.3 window)
+PARAM_BANDS = {
+    "llama4-scout-17b-a16e": (90e9, 130e9),
+    "arctic-480b": (430e9, 530e9),
+    "mamba2-780m": (0.6e9, 0.95e9),
+    "zamba2-7b": (5.5e9, 9e9),
+    "minitron-8b": (7e9, 11e9),
+    "qwen3-4b": (3.2e9, 5e9),
+    "granite-8b": (7e9, 10e9),
+    # language backbone only — the SigLIP tower (~400M) is the stub
+    "paligemma-3b": (1.7e9, 3.0e9),
+    "whisper-large-v3": (1.2e9, 2.2e9),
+    "command-r-plus-104b": (95e9, 120e9),
+}
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_spec_fields(name):
+    cfg = get_config(name)
+    L, d, H, kv, ff, V = SPEC[name]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    assert cfg.citation
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_param_counts(name):
+    cfg = get_config(name)
+    lo, hi = PARAM_BANDS[name]
+    n = cfg.n_params()
+    assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+    assert cfg.n_active_params() <= n
+
+
+def test_moe_details():
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.moe.n_experts == 16 and l4.moe.experts_per_token == 1
+    assert l4.moe.shared_expert
+    ar = get_config("arctic-480b")
+    assert ar.moe.n_experts == 128 and ar.moe.experts_per_token == 2
+    assert ar.moe.dense_residual
+    # active params should be far below total for both
+    assert l4.n_active_params() < 0.3 * l4.n_params()
+    assert ar.n_active_params() < 0.1 * ar.n_params()
+
+
+def test_ssm_details():
+    m = get_config("mamba2-780m")
+    assert m.ssm.d_state == 128 and m.attention_free
+    z = get_config("zamba2-7b")
+    assert z.ssm.d_state == 64 and z.hybrid_attn_period == 6
+    pat = z.block_pattern()
+    assert len(pat) == 81 and pat.count("hattn") == 13
+
+
+def test_registry_complete():
+    archs = list_archs()
+    for name in ASSIGNED_ARCHS:
+        assert name in archs
+    assert "mlitb-cnn" in archs  # the paper's own model
+
+
+def test_reduced_variants():
+    for name in ASSIGNED_ARCHS:
+        r = get_config(name).reduced()
+        assert r.d_model <= 512 and r.n_layers <= 4
+        if r.moe:
+            assert r.moe.n_experts <= 4
+        assert r.arch_type == get_config(name).arch_type

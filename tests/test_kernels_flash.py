@@ -1,0 +1,87 @@
+"""Flash attention kernel: shape/dtype sweep + hypothesis vs the pure-jnp
+oracle (interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+CASES = [
+    # B, H, K, S, T, D, window
+    (1, 1, 1, 32, 32, 32, 0),
+    (2, 4, 2, 128, 128, 64, 0),
+    (1, 8, 1, 64, 64, 128, 0),      # MQA, paligemma-style head_dim
+    (2, 4, 4, 96, 96, 64, 0),       # MHA, non-pow2 seq (padding path)
+    (1, 4, 2, 128, 128, 64, 32),    # sliding window
+    (1, 2, 2, 256, 256, 32, 96),
+]
+
+
+def _mk(key, B, H, K, S, T, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, K, T, D), dtype)
+    v = jax.random.normal(ks[2], (B, K, T, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,H,K,S,T,D,win", CASES)
+def test_flash_matches_ref_f32(B, H, K, S, T, D, win):
+    q, k, v = _mk(jax.random.PRNGKey(42), B, H, K, S, T, D, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=win,
+                          block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=win)
+    assert jnp.abs(out - ref).max() < 2e-5
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.bfloat16, 3e-2),
+                                       (jnp.float32, 2e-5)])
+def test_flash_dtypes(dtype, tol):
+    q, k, v = _mk(jax.random.PRNGKey(7), 2, 4, 2, 64, 64, 64, dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v)
+    assert jnp.abs(out.astype(jnp.float32)
+                   - ref.astype(jnp.float32)).max() < tol
+    assert out.dtype == dtype
+
+
+def test_flash_block_shape_independence():
+    """Output must not depend on the BlockSpec tiling."""
+    q, k, v = _mk(jax.random.PRNGKey(3), 1, 2, 2, 128, 128, 32, jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(16, 16), (32, 64), (64, 32), (128, 128)]]
+    for o in outs[1:]:
+        assert jnp.abs(o - outs[0]).max() < 2e-5
+
+
+def test_flash_fully_masked_rows_are_zero():
+    """Numerical-stability edge: with a tiny window some query rows see
+    NO valid keys — the kernel's l>=eps guard must emit zeros, not NaN.
+    (Training uses the XLA attention path; the kernel is the serving/
+    forward hot-spot, so no autodiff contract is required of it.)"""
+    q, k, v = _mk(jax.random.PRNGKey(9), 1, 2, 2, 32, 32, 32, jnp.float32)
+    # causal=False + window=1 leaves rows with only the diagonal; push
+    # further: window=0 with causal over an all-pad region is exercised in
+    # ops.py padding — here assert no NaNs under the tightest window
+    out = flash_attention(q, k, v, causal=True, window=1,
+                          block_q=16, block_k=16, interpret=True)
+    assert bool(jnp.isfinite(out).all())
+    ref = attention_ref(q, k, v, causal=True, window=1)
+    assert jnp.abs(out - ref).max() < 2e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([1, 2, 4]),
+       st.sampled_from([32, 48, 64]), st.sampled_from([32, 64]),
+       st.integers(0, 2))
+def test_flash_property(B, G, S, D, win_sel):
+    K = 2
+    H = K * G
+    win = [0, 16, S][win_sel] if win_sel else 0
+    q, k, v = _mk(jax.random.PRNGKey(B * 101 + S), B, H, K, S, S, D,
+                  jnp.float32)
+    out = flash_attention(q, k, v, window=win, block_q=16, block_k=16,
+                          interpret=True)
+    ref = attention_ref(q, k, v, window=win)
+    assert jnp.abs(out - ref).max() < 3e-5

@@ -1,0 +1,57 @@
+"""Block-top-k kernel: sweep + hypothesis vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.topk_compress import block_topk, block_topk_ref
+
+
+def _ref_any_shape(x, W):
+    flat = np.asarray(x).reshape(-1)
+    n = flat.size
+    pad = (-n) % W
+    rows = np.pad(flat, (0, pad)).reshape(-1, W)
+    out = np.asarray(block_topk_ref(jnp.asarray(rows)))
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+@pytest.mark.parametrize("shape,W", [
+    ((128,), 8), ((1000,), 16), ((64, 33), 128), ((3, 5, 7), 8),
+    ((4096,), 128), ((2, 2), 8),
+])
+def test_matches_oracle(shape, W):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    y = block_topk(x, block_w=W, interpret=True)
+    assert np.array_equal(np.asarray(y), _ref_any_shape(x, W))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(1), (512,), dtype)
+    y = block_topk(x, block_w=32, interpret=True)
+    assert y.dtype == dtype
+    kept = np.asarray(y.astype(jnp.float32)).reshape(-1, 32)
+    assert ((kept != 0).sum(axis=1) == 1).all()
+
+
+def test_kept_value_is_max_magnitude():
+    x = jax.random.normal(jax.random.PRNGKey(2), (256,))
+    y = np.asarray(block_topk(x, block_w=16, interpret=True)).reshape(-1, 16)
+    xr = np.asarray(x).reshape(-1, 16)
+    for r in range(16):
+        nz = np.nonzero(y[r])[0]
+        assert len(nz) == 1
+        assert abs(y[r][nz[0]]) == np.abs(xr[r]).max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2000), W=st.sampled_from([8, 16, 64, 128]),
+       seed=st.integers(0, 50))
+def test_property(n, W, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    y = block_topk(x, block_w=W, interpret=True)
+    assert np.array_equal(np.asarray(y), _ref_any_shape(x, W))
+    # sparsity bound
+    assert int((y != 0).sum()) <= -(-n // W) if n >= W else True

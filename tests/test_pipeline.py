@@ -1,0 +1,59 @@
+"""Sharded pipeline <-> allocator protocol: ownership, churn, masks."""
+import numpy as np
+
+from repro.core.allocator import DataAllocator
+from repro.data.datasets import synthetic_lm, synthetic_mnist
+from repro.data.pipeline import ShardedBatchPipeline, ShardedLMPipeline
+
+
+def test_worker_batches_respect_ownership():
+    X, y = synthetic_mnist(100, seed=0)
+    alloc = DataAllocator()
+    for w in ("a", "b"):
+        alloc.add_worker(w, capacity=100)
+    pipe = ShardedBatchPipeline(X, y, alloc)
+    xa, ya, na = pipe.worker_batch("a", 30)
+    assert na == 30 and xa.shape[0] == 30
+    # a worker owning few indices yields fewer rows (time-budget analogue)
+    alloc.add_worker("c", capacity=5)
+    xc, yc, nc = pipe.worker_batch("c", 30)
+    assert nc == 5
+
+
+def test_global_batch_mask_layout():
+    X, y = synthetic_mnist(40, seed=1)
+    alloc = DataAllocator()
+    alloc.add_worker("w0", capacity=100)
+    alloc.add_worker("w1", capacity=2)      # tiny worker -> masked rows
+    pipe = ShardedBatchPipeline(X, y, alloc)
+    Xb, yb, mask = pipe.global_batch(rows_per_worker=8)
+    assert Xb.shape[0] == 16
+    assert mask[:8].sum() == 8              # w0 fills its slice
+    assert mask[8:].sum() == 2              # w1 contributes only 2 rows
+
+
+def test_churn_reallocates_without_pipeline_changes():
+    X, y = synthetic_mnist(60, seed=2)
+    alloc = DataAllocator()
+    for w in ("a", "b", "c"):
+        alloc.add_worker(w, capacity=60)
+    pipe = ShardedBatchPipeline(X, y, alloc)
+    before = sum(alloc.allocation_counts().values())
+    alloc.remove_worker("b")
+    alloc.check_invariants()
+    Xb, yb, mask = pipe.global_batch(rows_per_worker=10)
+    assert Xb.shape[0] == 20                # 2 live workers
+    assert sum(alloc.allocation_counts().values()) == before
+
+
+def test_lm_pipeline_next_token_labels():
+    toks = synthetic_lm(5000, vocab=64, seed=0)
+    alloc = DataAllocator()
+    alloc.add_worker("w0", capacity=1000)
+    pipe = ShardedLMPipeline(toks, seq_len=32, allocator=alloc)
+    batch = pipe.global_batch(rows_per_worker=4)
+    assert batch["tokens"].shape == (4, 32)
+    # labels are the next-token shift of some window of the stream
+    for r in range(4):
+        x, ylab = batch["tokens"][r], batch["labels"][r]
+        assert (x[1:] == ylab[:-1]).all()

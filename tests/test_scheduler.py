@@ -1,0 +1,61 @@
+"""Adaptive scheduler (paper §3.3 d): latency EWMA, budget shrink/grow,
+power-proportional sample budgets."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import AdaptiveScheduler
+
+
+def test_budget_shrinks_under_latency():
+    s = AdaptiveScheduler(T=4.0, ewma=0.5, prior_latency=0.05)
+    s.add_worker("w")
+    b0 = s.budget("w")
+    for _ in range(6):
+        s.record("w", latency=2.0, vectors=100, compute_time=1.0)
+    b1 = s.budget("w")
+    assert b1 < b0
+    assert abs((4.0 - 2.0) - b1) < 0.2      # converges to T - latency
+
+
+def test_budget_floor():
+    s = AdaptiveScheduler(T=1.0, min_budget=0.1)
+    s.add_worker("w")
+    for _ in range(8):
+        s.record("w", latency=5.0, vectors=1, compute_time=1.0)
+    assert s.budget("w") == 0.1
+
+
+def test_power_tracking():
+    s = AdaptiveScheduler(T=4.0, ewma=0.5, prior_power=100.0)
+    s.add_worker("fast")
+    s.add_worker("slow")
+    for _ in range(8):
+        s.record("fast", latency=0.01, vectors=4000, compute_time=1.0)
+        s.record("slow", latency=0.01, vectors=100, compute_time=1.0)
+    assert s.stats["fast"].power > 30 * s.stats["slow"].power
+    assert s.expected_vectors("fast") > s.expected_vectors("slow")
+
+
+@settings(max_examples=50, deadline=None)
+@given(total=st.integers(1, 10_000), n=st.integers(1, 32),
+       seed=st.integers(0, 1000))
+def test_sample_budgets_sum_exactly(total, n, seed):
+    import random
+    rnd = random.Random(seed)
+    s = AdaptiveScheduler(T=1.0)
+    for i in range(n):
+        s.add_worker(f"w{i}")
+        s.record(f"w{i}", latency=0.01,
+                 vectors=rnd.randint(1, 10_000), compute_time=1.0)
+    budgets = s.sample_budgets(total)
+    assert sum(budgets.values()) == total
+    assert all(v >= 0 for v in budgets.values())
+
+
+def test_sample_budgets_proportional():
+    s = AdaptiveScheduler(T=1.0, ewma=1.0)
+    s.add_worker("a")
+    s.add_worker("b")
+    s.record("a", latency=0, vectors=300, compute_time=1.0)
+    s.record("b", latency=0, vectors=100, compute_time=1.0)
+    budgets = s.sample_budgets(400)
+    assert budgets["a"] == 300 and budgets["b"] == 100

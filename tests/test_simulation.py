@@ -1,0 +1,80 @@
+"""Simulator fidelity vs the paper's §3.5 observations."""
+import numpy as np
+
+from repro.core.simulation import (GRID_NODE, NetworkModel, SimulatedCluster)
+from repro.core import (JoinEvent, MasterEventLoop, MasterReducer,
+                        UploadDataEvent)
+from repro.core.scheduler import AdaptiveScheduler
+from repro.optim import sgd
+
+
+def _power_at(n_workers: int, T=4.0, iters=6) -> tuple:
+    """Synthetic-compute sweep: returns (vectors/sec, mean latency)."""
+    red = MasterReducer({"w": np.zeros(1)}, sgd(lr=0.0))
+    cluster = SimulatedCluster(mode="synthetic", seed=1)
+    loop = MasterEventLoop(reducer=red, cluster=cluster,
+                           scheduler=AdaptiveScheduler(
+                               T=T, prior_power=GRID_NODE.power_vps))
+    loop.submit(UploadDataEvent(range(60_000)))
+    for i in range(n_workers):
+        w = f"w{i}"
+        cluster.add_worker(w, GRID_NODE)
+        loop.submit(JoinEvent(w, capacity=3000))
+    logs = loop.run(iters)
+    tail = logs[2:]
+    return (float(np.mean([l.power for l in tail])),
+            float(np.mean([l.mean_latency for l in tail])))
+
+
+def test_power_scales_linearly_small_n():
+    p1, _ = _power_at(1)
+    p8, _ = _power_at(8)
+    assert 6.0 < p8 / p1 <= 8.5, p8 / p1
+
+
+def test_latency_jump_at_large_n():
+    """Paper Fig. 4: latency explodes past ~64 nodes as messages queue at
+    the single master."""
+    _, l4 = _power_at(4)
+    _, l96 = _power_at(96)
+    assert l96 > 10 * l4
+    assert l96 > 0.5          # the paper's ~1s regime
+
+
+def test_scaling_efficiency_drops_past_64():
+    p32, _ = _power_at(32)
+    p96, _ = _power_at(96)
+    per32 = p32 / 32
+    per96 = p96 / 96
+    assert per96 < 0.85 * per32     # sub-linear tail, as in Fig. 4
+
+
+def test_worker_capacity_bounds_data():
+    """Paper: '1 slave node trains on 3/60 of the full training set' —
+    3000-vector cap."""
+    red = MasterReducer({"w": np.zeros(1)}, sgd(lr=0.0))
+    cluster = SimulatedCluster(mode="synthetic", seed=0)
+    loop = MasterEventLoop(reducer=red, cluster=cluster,
+                           scheduler=AdaptiveScheduler(T=4.0))
+    loop.submit(UploadDataEvent(range(60_000)))
+    cluster.add_worker("w0", GRID_NODE)
+    loop.submit(JoinEvent("w0", capacity=3000))
+    loop.run(1)
+    assert loop.allocator.allocation_counts()["w0"] == 3000
+    assert len(loop.allocator.unallocated) == 57_000
+
+
+def test_unreliable_worker_detected():
+    from repro.core.simulation import DeviceProfile
+    flaky = DeviceProfile("flaky", 100.0, 0.01, 0.1, reliability=0.0)
+    red = MasterReducer({"w": np.zeros(1)}, sgd(lr=0.0))
+    cluster = SimulatedCluster(mode="synthetic", seed=0)
+    loop = MasterEventLoop(reducer=red, cluster=cluster,
+                           scheduler=AdaptiveScheduler(T=1.0))
+    loop.submit(UploadDataEvent(range(100)))
+    cluster.add_worker("w0", flaky)
+    loop.submit(JoinEvent("w0", capacity=100))
+    loop.iteration()          # worker dies mid-iteration -> LeaveEvent
+    loop.iteration()          # event processed at boundary
+    assert "w0" not in loop.registry
+    loop.allocator.check_invariants()

@@ -1,0 +1,77 @@
+"""End-to-end system test: the paper's full workflow — specify a model,
+train it with elastic distributed SGD under churn, archive it as a
+research closure, reload, and keep training (reproducibility)."""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (JoinEvent, LeaveEvent, MasterEventLoop,
+                        MasterReducer, ResearchClosure, UploadDataEvent)
+from repro.core.closure import jaxify
+from repro.core.scheduler import AdaptiveScheduler
+from repro.core.simulation import (GRID_NODE, SimulatedCluster,
+                                   make_cnn_problem)
+from repro.data.datasets import synthetic_mnist
+from repro.optim import adagrad
+
+
+def test_full_paper_workflow(tmp_path):
+    # (1) researcher sets up a learning problem
+    init_p, grad_fn, eval_fn = make_cnn_problem()
+    X, y = synthetic_mnist(3000, seed=0)
+    Xt, yt = synthetic_mnist(300, seed=5)
+    params = init_p(jax.random.PRNGKey(0))
+
+    red = MasterReducer(params, adagrad(lr=0.02))
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real")
+    loop = MasterEventLoop(reducer=red, cluster=cluster,
+                           scheduler=AdaptiveScheduler(T=1.0,
+                                                       prior_power=113))
+    loop.submit(UploadDataEvent(range(3000)))
+
+    # (2) grid machines contribute computation
+    for i in range(3):
+        cluster.add_worker(f"grid{i}", GRID_NODE)
+        loop.submit(JoinEvent(f"grid{i}", capacity=3000))
+    loop.run(4)
+
+    # (3) heterogeneous churn mid-training
+    loop.submit(LeaveEvent("grid1"))
+    cluster.add_worker("phone0", GRID_NODE)
+    loop.submit(JoinEvent("phone0", capacity=500))
+    loop.run(4)
+    loop.allocator.check_invariants()
+
+    err_mid = eval_fn(red.params, Xt, yt)
+
+    # (4) archive as research closure (universally readable JSON)
+    clo = ResearchClosure(
+        arch="mlitb-cnn", config=get_config("mlitb-cnn"),
+        algorithm={"optimizer": "adagrad", "lr": 0.02, "T": 1.0,
+                   "reduce": "weighted-mean"},
+        params=red.params, step=loop.step,
+        metrics=[{"step": l.step, "loss": float(l.loss)}
+                 for l in loop.history])
+    path = str(tmp_path / "model.json")
+    clo.save(path)
+
+    # (5) another researcher loads it and continues training
+    clo2 = ResearchClosure.load(path)
+    params2 = jaxify(clo2.params)
+    err_loaded = eval_fn(params2, Xt, yt)
+    assert abs(err_loaded - err_mid) < 1e-6     # bit-exact reproduction
+
+    red2 = MasterReducer(params2, adagrad(lr=0.02))
+    cluster2 = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real")
+    loop2 = MasterEventLoop(reducer=red2, cluster=cluster2,
+                            scheduler=AdaptiveScheduler(T=1.0,
+                                                        prior_power=113))
+    loop2.submit(UploadDataEvent(range(3000)))
+    for i in range(4):
+        cluster2.add_worker(f"w{i}", GRID_NODE)
+        loop2.submit(JoinEvent(f"w{i}", capacity=3000))
+    loop2.run(6)
+    err_final = eval_fn(red2.params, Xt, yt)
+    assert err_final <= err_mid + 0.02
+    assert err_final < 0.2
+    assert np.isfinite(loop2.history[-1].loss)

@@ -1,0 +1,109 @@
+"""Vision-section features: tracking mode (§3.6), power-aware minibursts
+(§2.2), gossip averaging (§3.3 outlook)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (JoinEvent, MasterEventLoop, MasterReducer,
+                        UploadDataEvent)
+from repro.core.gossip import gossip_round, gossip_sgd, replica_spread
+from repro.core.power import (DeviceState, PowerAwareScheduler, PowerPolicy)
+from repro.core.scheduler import AdaptiveScheduler
+from repro.core.simulation import (GRID_NODE, SimulatedCluster,
+                                   make_cnn_problem)
+from repro.core.tracking import (ExecutorTracker, StatTracker,
+                                 attach_trackers)
+from repro.data.datasets import synthetic_mnist
+from repro.optim import adagrad
+
+
+# ---------------------------------------------------------------------------
+# tracking mode
+# ---------------------------------------------------------------------------
+def test_stat_tracker_follows_training():
+    init_p, grad_fn, eval_fn = make_cnn_problem()
+    X, y = synthetic_mnist(2000, seed=0)
+    Xt, yt = synthetic_mnist(300, seed=9)
+    red = MasterReducer(init_p(jax.random.PRNGKey(0)), adagrad(lr=0.02))
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real")
+    loop = MasterEventLoop(reducer=red, cluster=cluster,
+                           scheduler=AdaptiveScheduler(T=1.0,
+                                                       prior_power=113))
+    loop.submit(UploadDataEvent(range(2000)))
+    for i in range(3):
+        cluster.add_worker(f"w{i}", GRID_NODE)
+        loop.submit(JoinEvent(f"w{i}", capacity=3000))
+
+    tracker = StatTracker("test_error", lambda p: eval_fn(p, Xt, yt))
+    execer = ExecutorTracker(lambda p, x: None)
+    loop.run(6, callback=attach_trackers(loop, [tracker, execer]))
+
+    assert len(tracker.history) == 6
+    assert tracker.history[-1].value < tracker.history[0].value
+    assert execer.params_step == 6           # executor holds latest params
+
+
+def test_tracker_eval_cadence():
+    """A slow tracker skips iterations while busy (paper: next evaluation
+    starts only after the previous completes, on the freshest params)."""
+    t = StatTracker("x", lambda p: 0.0, eval_cost_s=10.0)
+    for step, clock in [(1, 1.0), (2, 2.0), (3, 12.0)]:
+        t.observe({}, step, clock)
+    assert [p.step for p in t.history] == [1, 3]
+
+
+# ---------------------------------------------------------------------------
+# power-aware minibursts
+# ---------------------------------------------------------------------------
+def test_duty_cycle_policy():
+    pol = PowerPolicy()
+    assert pol.duty(DeviceState()) == 1.0
+    assert pol.duty(DeviceState(plugged=False, battery_frac=0.1)) == \
+        pol.min_duty
+    assert pol.duty(DeviceState(temperature_c=70.0)) == pol.min_duty
+    assert pol.duty(DeviceState(user_active=True)) == pol.user_active_duty
+    mid = pol.duty(DeviceState(plugged=False, battery_frac=0.6))
+    assert pol.min_duty < mid < 1.0
+
+
+def test_power_aware_budgets_are_minibursts():
+    s = PowerAwareScheduler(T=4.0, min_budget=0.05)
+    s.add_worker("desk")
+    s.add_worker("phone")
+    s.report_state("desk", DeviceState())
+    s.report_state("phone", DeviceState(plugged=False, battery_frac=0.5,
+                                        user_active=True))
+    assert s.budget("desk") > 3.0
+    b = s.budget("phone")
+    assert 0.05 <= b < 1.1                   # short burst, never starved
+
+
+# ---------------------------------------------------------------------------
+# gossip
+# ---------------------------------------------------------------------------
+def test_gossip_preserves_mean_and_contracts_spread():
+    rng = np.random.RandomState(0)
+    reps = [{"w": jnp.asarray(rng.randn(16))} for _ in range(8)]
+    mean0 = np.mean([np.asarray(r["w"]) for r in reps], axis=0)
+    spread0 = replica_spread(reps)
+    grng = np.random.RandomState(1)
+    for _ in range(12):
+        reps = gossip_round(reps, grng)
+    mean1 = np.mean([np.asarray(r["w"]) for r in reps], axis=0)
+    assert np.abs(mean0 - mean1).max() < 1e-5          # conservation
+    assert replica_spread(reps) < 0.05 * spread0        # consensus
+
+
+def test_gossip_sgd_converges_decentralized():
+    target = jnp.asarray(np.random.RandomState(2).randn(8))
+    reps = [{"w": jnp.zeros(8)} for _ in range(6)]
+    noise = np.random.RandomState(3)
+
+    def local_step(p, i, r):
+        g = p["w"] - target + 0.05 * jnp.asarray(noise.randn(8))
+        return {"w": p["w"] - 0.3 * g}
+
+    reps = gossip_sgd(reps, local_step, n_rounds=60, gossip_every=2)
+    err = max(float(jnp.abs(r["w"] - target).max()) for r in reps)
+    assert err < 0.15, err
+    assert replica_spread(reps) < 0.15
