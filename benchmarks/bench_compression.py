@@ -17,6 +17,8 @@ from repro.core.simulation import make_cnn_problem
 from repro.data.datasets import synthetic_mnist
 from repro.optim import adagrad
 
+N_WORKERS = 4
+
 
 def run_channel(method: str, frac: float, *, iters: int = 25,
                 n_train: int = 2000, seed: int = 0) -> Dict:
@@ -28,19 +30,21 @@ def run_channel(method: str, frac: float, *, iters: int = 25,
                                                              frac=frac)
     red = MasterReducer(params, adagrad(lr=0.02), compressor=comp)
     rng = np.random.RandomState(seed)
-    per_iter_bytes = dense_bytes(params) if comp is None else \
-        comp.wire_bytes(params)
     for _ in range(iters):
         msgs = {}
-        for w in range(4):
+        for w in range(N_WORKERS):
             idx = rng.choice(n_train, 256, replace=False)
             g, _ = grad_fn(red.params, X[idx], y[idx])
             msgs[f"w{w}"] = (g, 256)
         red.reduce_and_step(msgs)
     err = eval_fn(red.params, Xt, yt)
+    # actual bytes the fused packed channel put on the wire last step
+    per_msg_bytes = red.last_wire_bytes // N_WORKERS
+    if comp is not None:
+        assert per_msg_bytes == comp.packed_wire_bytes(red.flat_params.size)
     return {"method": f"{method}@{frac}", "test_error": float(err),
-            "bytes_per_msg": per_iter_bytes,
-            "bandwidth_saving": dense_bytes(params) / max(per_iter_bytes, 1)}
+            "bytes_per_msg": per_msg_bytes,
+            "bandwidth_saving": dense_bytes(params) / max(per_msg_bytes, 1)}
 
 
 def run(iters: int = 25) -> List[Dict]:

@@ -1,0 +1,103 @@
+"""Hot-path benchmark: the worker->master reduce step (MLitB §3.3 c).
+
+Times ``MasterReducer.reduce_and_step`` at 4 workers on the `mlitb_cnn`
+problem (the paper's model) in CPU interpret mode, seed path vs fused:
+
+  - seed per-worker dense path (``fused=False``): un-jitted leaf-by-leaf
+    compression + a Python loop of ``jax.tree.map`` accumulations —
+    O(workers x leaves) dispatches per iteration;
+  - fused flat-buffer path (``fused=True``): one jitted pipeline —
+    stacked channel, scatter-add segment-sum, optimizer step.
+
+The acceptance gate for the fused rewrite: >=5x wall-clock speedup, and
+the packed wire bytes must match the compressor's accounting.
+
+    PYTHONPATH=src python benchmarks/bench_reduce.py
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.compression import GradientCompressor
+from repro.core.reducer import MasterReducer
+from repro.core.simulation import make_cnn_problem
+from repro.data.datasets import synthetic_mnist
+
+N_WORKERS = 4
+BATCH = 128
+
+
+def _make_messages(grad_fn, params, n_train=1024, seed=0):
+    X, y = synthetic_mnist(n_train, seed=seed)
+    rng = np.random.RandomState(seed)
+    msgs = {}
+    for w in range(N_WORKERS):
+        idx = rng.choice(n_train, BATCH, replace=False)
+        g, _ = grad_fn(params, X[idx], y[idx])
+        msgs[f"w{w}"] = (g, BATCH)
+    return msgs
+
+
+def _time_reducer(red: MasterReducer, msgs, *, warmup=3, reps=15) -> float:
+    """Best-of-reps seconds per reduce_and_step call (min is the standard
+    microbenchmark statistic — immune to scheduler noise)."""
+    for _ in range(warmup):
+        jax.block_until_ready(jax.tree.leaves(red.reduce_and_step(msgs)))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(red.reduce_and_step(msgs)))
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times))
+
+
+def run(reps: int = 10) -> List[Dict]:
+    from repro.optim import adagrad
+    init_p, grad_fn, _ = make_cnn_problem()
+    params = init_p(jax.random.PRNGKey(0))
+    msgs = _make_messages(grad_fn, params)
+    rows = []
+    for channel, comp in [
+            ("dense", None),
+            ("blocktopk@1/128", GradientCompressor("blocktopk",
+                                                   frac=1 / 128))]:
+        timings = {}
+        for fused in (False, True):
+            red = MasterReducer(params, adagrad(lr=0.02), compressor=comp,
+                                fused=fused)
+            timings[fused] = _time_reducer(red, msgs, reps=reps)
+            if fused and comp is not None:
+                n = int(red.flat_params.size)
+                expected = N_WORKERS * comp.packed_wire_bytes(n)
+                assert red.last_wire_bytes == expected, (
+                    f"wire accounting mismatch: sent {red.last_wire_bytes}B"
+                    f" != predicted {expected}B")
+        rows.append({
+            "channel": channel,
+            "dense_path_ms": timings[False] * 1e3,
+            "fused_ms": timings[True] * 1e3,
+            "speedup": timings[False] / timings[True],
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("channel,dense_path_ms,fused_ms,speedup")
+    for r in rows:
+        print(f"{r['channel']},{r['dense_path_ms']:.2f},"
+              f"{r['fused_ms']:.2f},{r['speedup']:.1f}x")
+    # acceptance gate: the compressed-reduce hot path must be >=5x the
+    # seed per-worker dense path (dense channel speedup is informational)
+    gated = [r for r in rows if r["channel"] != "dense"]
+    worst = min(r["speedup"] for r in gated)
+    assert worst >= 5.0, f"fused reduce_and_step speedup {worst:.1f}x < 5x"
+    print(f"OK: fused compressed-reduce >= 5x (worst {worst:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

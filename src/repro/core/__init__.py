@@ -3,9 +3,11 @@ runtime (event loop, scheduler, allocator, reducer, closures, compression,
 simulation, mesh engine)."""
 from repro.core.allocator import DataAllocator  # noqa: F401
 from repro.core.closure import ResearchClosure  # noqa: F401
-from repro.core.compression import GradientCompressor  # noqa: F401
+from repro.core.compression import (CompressedMessage,  # noqa: F401
+                                    GradientCompressor, decompress_flat)
 from repro.core.elastic import (JoinEvent, LeaveEvent,  # noqa: F401
                                 UploadDataEvent)
 from repro.core.event_loop import MasterEventLoop  # noqa: F401
+from repro.core.flatbuf import FlatSpec, flat_spec  # noqa: F401
 from repro.core.reducer import MasterReducer, weighted_reduce  # noqa: F401
 from repro.core.scheduler import AdaptiveScheduler  # noqa: F401

@@ -4,29 +4,48 @@
 transferred per iteration. An algorithm could transmit a random subset of
 the weight gradients, or send the most informative."
 
-Implemented as leaf-wise sparsifiers with error feedback (the residual of
-what was not sent is added to the next message, which keeps convergence —
-property-tested in tests/test_compression.py):
+Two implementations of the same channel:
 
-  - ``topk``    : keep the k largest-magnitude entries per leaf
-                  ("the most informative")
-  - ``randk``   : keep k random entries per leaf ("a random subset"),
-                  rescaled by size/k for unbiasedness
-  - ``blocktopk``: keep the top-1 entry of every contiguous block of
-                  1/frac entries — the TPU-friendly variant backed by the
-                  kernels/topk_compress Pallas kernel (no global sort).
+1. **Flat packed path (the hot path).** ``compress_flat`` operates on the
+   single contiguous fp32 buffer produced by ``core.flatbuf`` and returns
+   the packed ``CompressedMessage`` wire format — ``(values, indices)``
+   pairs addressing the whole model with one int32 index space — plus the
+   new error-feedback residual, all inside one jitted computation:
 
-``roundtrip`` returns the *dense* tensor the master reconstructs, so the
-reducer stays agnostic to the wire format; ``wire_bytes`` reports the
-bandwidth the message would occupy (values + indices).
+     - ``topk``    : one global top-|.| over the buffer
+     - ``randk``   : k uniform positions, re-drawn EVERY step (the key
+                     folds in the step counter)
+     - ``blocktopk``: top-k per contiguous ``block_w`` entries via the
+                     fused kernels/topk_compress Pallas kernel (error-
+                     feedback add + select + residual + packed emission
+                     in a single VMEM pass, no global sort)
+
+   ``decompress_flat`` scatter-adds a message back to the dense buffer;
+   the pair round-trips exactly (tests/test_fused_reduce.py).
+
+2. **Dense leaf-wise path (reference/compat).** ``roundtrip`` keeps the
+   original per-leaf mask semantics and returns the dense reconstruction;
+   the reducer's ``fused=False`` mode and older tests use it.
+
+Error feedback in both: message = select(g + r); r' = (g + r) - message,
+which keeps convergence — property-tested in tests/test_compression.py.
+NOTE: randk ships the UNSCALED payload. The classical n/k rescaling makes
+plain (no-feedback) rand-k unbiased, but combined with error feedback it
+amplifies total delivered mass by n/k (the unsent mass re-enters the next
+message and is rescaled again), which provably diverges under SGD; with a
+residual in the loop the selection shrinkage is exactly what the feedback
+corrects, so no rescaling is wanted.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.topk_compress import fused_block_topk
 
 PyTree = Any
 
@@ -62,13 +81,81 @@ def _block_top1_mask(x: jnp.ndarray, block: int) -> jnp.ndarray:
     return mask.reshape(-1)[:n].reshape(x.shape)
 
 
+@dataclass(frozen=True, eq=False)   # eq=False: jnp fields break ==/hash
+class CompressedMessage:
+    """The packed wire format: ``values[i]`` belongs at flat-buffer
+    position ``indices[i]``. Entries with value 0.0 are padding (scatter
+    no-ops); indices >= n can occur only on such padding and are dropped
+    by the reconstruction scatter."""
+    values: jnp.ndarray          # fp32, any shape (flattened on the wire)
+    indices: jnp.ndarray         # int32, same shape as values
+    n: int                       # flat-buffer length being addressed
+
+    def wire_bytes(self) -> int:
+        """4B value + 4B index per kept entry."""
+        return 8 * int(self.values.size)
+
+    def dense(self) -> jnp.ndarray:
+        return decompress_flat(self.values, self.indices, n=self.n)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def decompress_flat(values: jnp.ndarray, indices: jnp.ndarray, *,
+                    n: int) -> jnp.ndarray:
+    """Packed message -> dense (n,) fp32 buffer (the master's view)."""
+    return jnp.zeros((n,), jnp.float32).at[indices.reshape(-1)].add(
+        values.reshape(-1), mode="drop")
+
+
 @dataclass(frozen=True)
 class GradientCompressor:
     method: str = "topk"            # topk | randk | blocktopk
     frac: float = 0.01              # fraction of entries kept
     seed: int = 0
     min_keep: int = 1
+    block_w: int = 128              # flat-path block width (blocktopk)
 
+    # ------------------------------------------------------------------
+    # flat packed path (hot): one buffer, one jitted dispatch
+    # ------------------------------------------------------------------
+    def flat_k(self, n: int) -> int:
+        """Kept entries for an (n,)-buffer message (incl. packing pads)."""
+        if self.method == "blocktopk":
+            rows = -(-n // self.block_w)
+            return rows * self._block_k()
+        return min(n, max(self.min_keep, int(self.frac * n)))
+
+    def _block_k(self) -> int:
+        return min(self.block_w,
+                   max(self.min_keep, int(round(self.frac * self.block_w))))
+
+    def packed_wire_bytes(self, n: int) -> int:
+        """Exact bytes ``compress_flat`` puts on the wire for an
+        (n,)-buffer — matches ``CompressedMessage.wire_bytes()``."""
+        return 8 * self.flat_k(n)
+
+    def flat_key(self, step: int) -> jnp.ndarray:
+        """randk's subset key for iteration ``step`` — folding the step
+        counter in makes consecutive masks differ (tested)."""
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+
+    def compress_flat(self, grad_flat: jnp.ndarray,
+                      residual_flat: Optional[jnp.ndarray],
+                      step: int = 0
+                      ) -> Tuple[CompressedMessage, jnp.ndarray]:
+        """(g, r, step) -> (packed message, new residual). The step
+        counter feeds randk's PRNG key, so the random subset differs
+        every iteration."""
+        n = int(grad_flat.size)
+        if residual_flat is None:
+            residual_flat = jnp.zeros((n,), jnp.float32)
+        vals, idx, res = _flat_compress(self, n)(
+            grad_flat, residual_flat, self.flat_key(step))
+        return CompressedMessage(vals, idx, n), res
+
+    # ------------------------------------------------------------------
+    # dense leaf-wise path (reference/compat)
+    # ------------------------------------------------------------------
     def _mask_leaf(self, x: jnp.ndarray, key) -> jnp.ndarray:
         k = max(self.min_keep, int(self.frac * x.size))
         if self.method == "topk":
@@ -80,41 +167,81 @@ class GradientCompressor:
             return _block_top1_mask(x, block)
         raise ValueError(self.method)
 
-    def roundtrip(self, grad: PyTree, residual: Optional[PyTree]
-                  ) -> Tuple[PyTree, PyTree]:
+    def roundtrip(self, grad: PyTree, residual: Optional[PyTree],
+                  step: int = 0) -> Tuple[PyTree, PyTree]:
         """(grad, residual) -> (dense reconstruction of the message,
         new residual). Error feedback: message = mask*(g + r);
-        r' = (g + r) - message."""
+        r' = (g + r) - message. ``step`` seeds randk's subset draw."""
         if residual is None:
             residual = jax.tree.map(
                 lambda x: jnp.zeros_like(x, jnp.float32), grad)
         corrected = jax.tree.map(
             lambda g, r: g.astype(jnp.float32) + r, grad, residual)
         leaves = jax.tree.leaves(corrected)
-        keys = jax.random.split(jax.random.PRNGKey(self.seed), len(leaves))
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        keys = jax.random.split(base, len(leaves))
         kit = iter(keys)
         masks = jax.tree.map(lambda x: self._mask_leaf(x, next(kit)),
                              corrected)
-        scale = 1.0
-        if self.method == "randk":
-            scale = 1.0 / max(self.frac, 1e-9)
-
-        def send(c, m):
-            return jnp.where(m, c * scale, 0.0)
-
-        sent = jax.tree.map(send, corrected, masks)
-        # residual excludes what was sent (unscaled payload)
+        sent = jax.tree.map(
+            lambda c, m: jnp.where(m, c, 0.0), corrected, masks)
+        # residual excludes what was sent
         new_res = jax.tree.map(
             lambda c, m: jnp.where(m, 0.0, c), corrected, masks)
         return sent, new_res
 
     def wire_bytes(self, grad: PyTree) -> int:
-        """values(4B) + indices(4B) per kept entry."""
+        """values(4B) + indices(4B) per kept entry (leaf-wise path)."""
         total = 0
         for leaf in jax.tree.leaves(grad):
             k = max(self.min_keep, int(self.frac * leaf.size))
             total += 8 * min(k, leaf.size)
         return total
+
+
+def flat_compress_core(comp: GradientCompressor, n: int):
+    """Un-jitted flat compressor core: fn(g (n,), r (n,), key) ->
+    (values, indices int32, new_residual (n,)). topk/randk are vmappable
+    over a worker axis; blocktopk stacks should use
+    ``fused_block_topk_batched`` directly (one pallas_call, no vmap)."""
+    method = comp.method
+    if method == "blocktopk":
+        k_blk = comp._block_k()
+        block_w = comp.block_w
+
+        def fn(g, r, key):
+            return fused_block_topk(g, r, k=k_blk, block_w=block_w)
+
+        return fn
+
+    k = comp.flat_k(n)
+    if method == "topk":
+
+        def fn(g, r, key):
+            c = g.astype(jnp.float32) + r
+            _, idx = jax.lax.top_k(jnp.abs(c), k)
+            idx = idx.astype(jnp.int32)
+            return c[idx], idx, c.at[idx].set(0.0)
+
+        return fn
+
+    if method == "randk":
+
+        def fn(g, r, key):
+            c = g.astype(jnp.float32) + r
+            scores = jax.random.uniform(key, (n,))
+            _, idx = jax.lax.top_k(scores, k)
+            idx = idx.astype(jnp.int32)
+            return c[idx], idx, c.at[idx].set(0.0)
+
+        return fn
+
+    raise ValueError(method)
+
+
+@functools.lru_cache(maxsize=128)
+def _flat_compress(comp: GradientCompressor, n: int):
+    return jax.jit(flat_compress_core(comp, n))
 
 
 def dense_bytes(grad: PyTree, bytes_per_el: int = 4) -> int:

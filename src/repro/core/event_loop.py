@@ -60,6 +60,8 @@ class IterationLog:
     mean_latency: float
     loss: float
     events: List[str] = field(default_factory=list)
+    wire_bytes: int = 0          # reduce-step upstream bytes (packed if
+                                 # the reducer's channel compresses)
 
 
 class MasterEventLoop:
@@ -139,6 +141,7 @@ class MasterEventLoop:
 
         # ---- (c) reduce step ----
         loss = float("nan")
+        wire_bytes = 0
         vectors = sum(r.n_vectors for r in results.values())
         # synthetic-compute clusters send empty gradient trees (throughput
         # studies): count vectors but skip the parameter update
@@ -147,6 +150,7 @@ class MasterEventLoop:
         ) if messages else False
         if messages and has_grads:
             self.reducer.reduce_and_step(messages)
+            wire_bytes = self.reducer.last_wire_bytes
             tot = sum(n for _, n in messages.values())
             loss = sum(r.loss_sum for r in results.values()) / max(tot, 1)
 
@@ -170,7 +174,8 @@ class MasterEventLoop:
         log = IterationLog(
             step=self.step, wall_time=wall, n_workers=len(results),
             vectors=vectors, power=vectors / wall,
-            mean_latency=sum(lat) / len(lat), loss=loss, events=notes)
+            mean_latency=sum(lat) / len(lat), loss=loss, events=notes,
+            wire_bytes=wire_bytes)
         self.history.append(log)
         return log
 

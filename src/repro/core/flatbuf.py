@@ -1,0 +1,89 @@
+"""Flat-buffer layout for gradient/parameter pytrees.
+
+The worker->master channel operates on ONE contiguous fp32 buffer per
+message instead of leaf-by-leaf tensors: the structure (treedef, shapes,
+dtypes, offsets) is resolved once per tree layout and cached, so the hot
+path is a single ``concatenate`` on send and static slices on receive —
+no per-leaf dispatches, and the packed (values, indices) wire format can
+address the whole model with one int32 index space.
+
+Layout contract (documented in docs/compressed_reduce.md):
+  - leaves appear in ``jax.tree.leaves`` order (sorted dict keys);
+  - each leaf is raveled C-order and cast to fp32;
+  - leaf i occupies ``[offsets[i], offsets[i] + sizes[i])``;
+  - total length ``n = sum(sizes)``; no padding inside the buffer
+    (block padding is the kernel wrapper's business, not the layout's).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    """Cached ravel/unravel recipe for one pytree layout."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...] = field(init=False)
+    offsets: Tuple[int, ...] = field(init=False)
+    n: int = field(init=False)
+
+    def __post_init__(self):
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1
+                      for s in self.shapes)
+        offsets = tuple(np.cumsum((0,) + sizes[:-1]).tolist())
+        object.__setattr__(self, "sizes", sizes)
+        object.__setattr__(self, "offsets", offsets)
+        object.__setattr__(self, "n", int(sum(sizes)))
+
+    # -- hot path ------------------------------------------------------
+    def flatten(self, tree: PyTree) -> jnp.ndarray:
+        """tree -> (n,) fp32 buffer (jit-traceable)."""
+        leaves = jax.tree.leaves(tree)
+        if len(leaves) == 1 and leaves[0].shape == (self.n,):
+            return jnp.asarray(leaves[0], jnp.float32)
+        return jnp.concatenate(
+            [jnp.asarray(x).reshape(-1).astype(jnp.float32)
+             for x in leaves])
+
+    def unflatten(self, flat: jnp.ndarray) -> PyTree:
+        """(n,) buffer -> tree with the original shapes/dtypes
+        (jit-traceable; slices are static)."""
+        leaves = [flat[o:o + s].reshape(shape).astype(dt)
+                  for o, s, shape, dt in
+                  zip(self.offsets, self.sizes, self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def flatten_stacked(self, stacked: PyTree) -> jnp.ndarray:
+        """tree whose leaves carry a leading axis (W, ...) -> (W, n)
+        fp32 buffer; row w is exactly ``flatten(tree_w)``."""
+        leaves = jax.tree.leaves(stacked)
+        W = leaves[0].shape[0]
+        return jnp.concatenate(
+            [jnp.asarray(x).reshape(W, -1).astype(jnp.float32)
+             for x in leaves], axis=1)
+
+
+_CACHE: Dict[Any, FlatSpec] = {}
+
+
+def flat_spec(tree: PyTree) -> FlatSpec:
+    """FlatSpec for ``tree``'s layout, cached on (treedef, shapes,
+    dtypes) so repeated calls on every iteration are dict lookups."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    dtypes = tuple(np.dtype(x.dtype) for x in leaves)
+    key = (treedef, shapes, dtypes)
+    spec = _CACHE.get(key)
+    if spec is None:
+        spec = FlatSpec(treedef, shapes, dtypes)
+        _CACHE[key] = spec
+    return spec

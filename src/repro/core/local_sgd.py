@@ -25,6 +25,7 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.flatbuf import flat_spec
 from repro.optim.base import Optimizer
 
 PyTree = Any
@@ -56,11 +57,10 @@ def build_local_sgd_round(
         ps, ns = jax.vmap(worker_update, in_axes=(None, 0))(params, batches)
         w = ns.astype(jnp.float32)
         w = w / jnp.maximum(w.sum(), 1.0)
-        new_params = jax.tree.map(
-            lambda stacked: jnp.einsum(
-                "w,w...->...", w,
-                stacked.astype(jnp.float32)).astype(stacked.dtype),
-            ps)
+        # weighted average over the flat buffer: one (W,) @ (W, n) matmul
+        # instead of a per-leaf einsum fan-out
+        spec = flat_spec(params)
+        new_params = spec.unflatten(w @ spec.flatten_stacked(ps))
         return new_params, {"samples": ns.sum(), "workers": ns.shape[0],
                             "comm_rounds": jnp.asarray(1, jnp.int32)}
 

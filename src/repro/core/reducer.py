@@ -13,6 +13,24 @@ which equals the full-batch mean gradient over the union of worker batches
 — the invariant that makes heterogeneous per-worker batch sizes exact
 rather than approximate (tested in tests/test_reducer.py).
 
+Two execution paths:
+
+- **fused (default).** Every worker tree is raveled into one contiguous
+  fp32 buffer (core.flatbuf), the per-worker channel (error-feedback add,
+  sparsify, packed emission, residual update) runs over the stacked
+  (num_workers, n) buffer, and the reduce is a single scatter-add
+  segment-sum followed by the optimizer step — ALL inside one jitted
+  function per worker count. O(1) dispatches per iteration instead of
+  O(workers x leaves).
+
+- **dense (``fused=False``).** The original per-worker Python loop over
+  ``jax.tree.map`` with the leaf-wise compressor ``roundtrip`` — kept as
+  the reference/compat path. The regression test pins the fused path to
+  it numerically on the UNCOMPRESSED channel; with a compressor the two
+  paths intentionally differ (flat-buffer-global vs per-leaf selection),
+  and the fused channel is validated by its own oracle + convergence
+  tests instead.
+
 Optionally each worker message passes through a GradientCompressor (the
 paper's §5.1 "partial gradient communication"), with per-worker error-
 feedback residuals held master-side here (in the browser setting they live
@@ -20,12 +38,15 @@ on the client; the math is identical).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.compression import GradientCompressor
+from repro.core.compression import GradientCompressor, flat_compress_core
+from repro.core.flatbuf import flat_spec
+from repro.kernels.topk_compress import fused_block_topk_batched
 from repro.optim.base import Optimizer
 
 PyTree = Any
@@ -50,34 +71,164 @@ class MasterReducer:
     fixed-bandwidth-budget channel of §5.1."""
 
     def __init__(self, params: PyTree, optimizer: Optimizer,
-                 compressor: Optional[GradientCompressor] = None):
-        self.params = params
+                 compressor: Optional[GradientCompressor] = None,
+                 fused: bool = True):
         self.optimizer = optimizer
-        self.opt_state = optimizer.init(params)
         self.compressor = compressor
-        self._residuals: Dict[str, PyTree] = {}
+        self.fused = fused
+        self._residuals: Dict[str, Any] = {}
         self.step = 0
+        self.last_wire_bytes = 0
+        if fused:
+            self._spec = flat_spec(params)
+            self._flat = self._spec.flatten(params)
+            self.opt_state = optimizer.init(self._flat)
+            self._unflatten = jax.jit(self._spec.unflatten)
+            self._params_cache: Optional[PyTree] = None
+            self._step_fns: Dict[Tuple[int, bool], Any] = {}
+        else:
+            self._params = params
+            self.opt_state = optimizer.init(params)
 
+    # ------------------------------------------------------------------
+    @property
+    def params(self) -> PyTree:
+        if not self.fused:
+            return self._params
+        if self._params_cache is None:
+            self._params_cache = self._unflatten(self._flat)
+        return self._params_cache
+
+    @property
+    def flat_params(self) -> jnp.ndarray:
+        """The master's (n,) fp32 parameter buffer (fused path only)."""
+        if not self.fused:
+            return flat_spec(self._params).flatten(self._params)
+        return self._flat
+
+    def drop_worker(self, worker: str) -> None:
+        self._residuals.pop(worker, None)
+
+    # ------------------------------------------------------------------
+    # dense reference path
+    # ------------------------------------------------------------------
     def _channel(self, worker: str, grad: PyTree) -> PyTree:
         """Simulate the worker->master channel (compress + error feedback)."""
         if self.compressor is None:
             return grad
         res = self._residuals.get(worker)
-        sent, new_res = self.compressor.roundtrip(grad, res)
+        sent, new_res = self.compressor.roundtrip(grad, res, step=self.step)
         self._residuals[worker] = new_res
         return sent
 
-    def drop_worker(self, worker: str) -> None:
-        self._residuals.pop(worker, None)
+    def _reduce_and_step_dense(
+            self, messages: Dict[str, Tuple[PyTree, float]]) -> PyTree:
+        chan = [(self._channel(w, g), n) for w, (g, n) in
+                sorted(messages.items())]
+        g_bar = weighted_reduce(chan)
+        self._params, self.opt_state = self.optimizer.update(
+            self._params, g_bar, self.opt_state)
+        self.last_wire_bytes = sum(
+            (self.compressor.wire_bytes(g) if self.compressor else
+             4 * sum(leaf.size for leaf in jax.tree.leaves(g)))
+            for g, _ in chan)
+        self.step += 1
+        return self._params
 
+    # ------------------------------------------------------------------
+    # fused flat-buffer path
+    # ------------------------------------------------------------------
+    def _build_step_fn(self, W: int):
+        """One jitted fn per worker count. EVERYTHING between receiving
+        the worker trees and the new parameter buffer happens inside this
+        single dispatch: per-worker ravel into the flat layout, the
+        compression channel (error-feedback add + sparsify + packed
+        emission + residual update), the scatter-add segment-sum reduce,
+        and the optimizer step."""
+        opt = self.optimizer
+        comp = self.compressor
+        spec = self._spec
+        n = spec.n
+
+        if comp is None:
+
+            @jax.jit
+            def fn(flat, opt_state, gtrees, ns):
+                grads = jnp.stack([spec.flatten(t) for t in gtrees])
+                g_bar = jnp.sum(grads, axis=0) / jnp.sum(ns)
+                new_flat, new_state = opt.update(flat, g_bar, opt_state)
+                return new_flat, new_state
+
+            return fn
+
+        if comp.method == "blocktopk":
+            k_blk = comp._block_k()
+            block_w = comp.block_w
+
+            def channel(grads, res, step):
+                return fused_block_topk_batched(grads, res, k=k_blk,
+                                                block_w=block_w)
+        else:
+            core = flat_compress_core(comp, n)
+            seed = comp.seed
+
+            def channel(grads, res, step):
+                base = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+                return jax.vmap(core)(grads, res,
+                                      jax.random.split(base, W))
+
+        @jax.jit
+        def fn(flat, opt_state, gtrees, res_rows, ns, step):
+            grads = jnp.stack([spec.flatten(t) for t in gtrees])
+            res = jnp.stack(res_rows)
+            vals, idx, new_res = channel(grads, res, step)
+            # segment-sum over the shared index space: one scatter-add
+            # accumulates every worker's packed entries
+            g_bar = jnp.zeros((n,), jnp.float32).at[idx.reshape(-1)].add(
+                vals.reshape(-1), mode="drop") / jnp.sum(ns)
+            new_flat, new_state = opt.update(flat, g_bar, opt_state)
+            return new_flat, new_state, tuple(new_res[i] for i in range(W))
+
+        return fn
+
+    def _reduce_and_step_fused(
+            self, messages: Dict[str, Tuple[PyTree, float]]) -> PyTree:
+        if not messages:
+            raise ValueError("reduce step with no worker messages")
+        names = sorted(messages)
+        total_n = sum(float(messages[w][1]) for w in names)
+        if total_n <= 0:
+            raise ValueError("reduce step with zero samples")
+        n = self._spec.n
+        W = len(names)
+        gtrees = tuple(messages[w][0] for w in names)
+        ns = np.asarray([float(messages[w][1]) for w in names], np.float32)
+        fn = self._step_fns.get(W)
+        if fn is None:
+            fn = self._step_fns[W] = self._build_step_fn(W)
+
+        if self.compressor is None:
+            self._flat, self.opt_state = fn(self._flat, self.opt_state,
+                                            gtrees, ns)
+            self.last_wire_bytes = W * 4 * n
+        else:
+            zeros = jnp.zeros((n,), jnp.float32)
+            res_rows = tuple(self._residuals.get(w, zeros) for w in names)
+            self._flat, self.opt_state, new_res = fn(
+                self._flat, self.opt_state, gtrees, res_rows, ns,
+                np.asarray(self.step, np.int32))
+            for w, r in zip(names, new_res):
+                self._residuals[w] = r
+            self.last_wire_bytes = 8 * W * self.compressor.flat_k(n)
+        self._params_cache = None
+        self.step += 1
+        return self.params
+
+    # ------------------------------------------------------------------
     def reduce_and_step(
             self, messages: Dict[str, Tuple[PyTree, float]]) -> PyTree:
         """messages: {worker: (grad_sum, n)}. Returns the new params
         (the broadcast payload of step (e))."""
-        chan = [(self._channel(w, g), n) for w, (g, n) in
-                sorted(messages.items())]
-        g_bar = weighted_reduce(chan)
-        self.params, self.opt_state = self.optimizer.update(
-            self.params, g_bar, self.opt_state)
-        self.step += 1
-        return self.params
+        if self.fused:
+            return self._reduce_and_step_fused(messages)
+        return self._reduce_and_step_dense(messages)

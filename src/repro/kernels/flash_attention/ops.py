@@ -13,13 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import \
     flash_attention_pallas
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:
-        return False
+from repro.kernels.runtime import default_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -29,8 +23,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = None) -> jnp.ndarray:
     """q: (B,H,S,D), k/v: (B,K,T,D) -> (B,H,S,D)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = default_interpret(interpret)
     B, H, S, D = q.shape
     T = k.shape[2]
     bq = min(block_q, max(8, S))

@@ -1,0 +1,29 @@
+"""Shared kernel runtime helpers.
+
+Single home for the platform probe + interpret-mode default that every
+Pallas wrapper (flash_attention, ssd_scan, topk_compress) needs: kernels
+compile natively on TPU and fall back to the Pallas interpreter anywhere
+else (this CPU container), so tests and benches run the same code path
+everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def default_interpret(interpret=None) -> bool:
+    """Resolve a wrapper's ``interpret`` kwarg: explicit value wins,
+    ``None`` means 'interpret unless we are actually on TPU'."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

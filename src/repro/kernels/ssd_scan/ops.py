@@ -8,21 +8,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:
-        return False
+from repro.kernels.runtime import default_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
              interpret: bool = None) -> jnp.ndarray:
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = default_interpret(interpret)
     B, S, nh, hd = x.shape
     ck = min(chunk, S) if S % min(chunk, S) == 0 else min(chunk, S)
     pad = (-S) % ck

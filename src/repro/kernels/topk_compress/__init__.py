@@ -1,2 +1,5 @@
-from repro.kernels.topk_compress.ops import block_topk  # noqa: F401
-from repro.kernels.topk_compress.ref import block_topk_ref  # noqa: F401
+from repro.kernels.topk_compress.ops import (block_topk,  # noqa: F401
+                                             fused_block_topk,
+                                             fused_block_topk_batched)
+from repro.kernels.topk_compress.ref import (block_topk_ref,  # noqa: F401
+                                             fused_compress_ref)

@@ -1,6 +1,6 @@
-"""Jitted wrapper: flatten any tensor to (rows, W) blocks, sparsify,
-restore shape. Used by core.compression (method="blocktopk") and the
-compressed-reduce collective."""
+"""Jitted wrappers: flatten any tensor to (rows, W) blocks, sparsify,
+restore shape / emit the packed wire format. Used by core.compression
+(method="blocktopk") and the fused compressed-reduce channel."""
 from __future__ import annotations
 
 import functools
@@ -8,14 +8,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.topk_compress.topk_compress import block_topk_pallas
+from repro.kernels.runtime import default_interpret
+from repro.kernels.topk_compress.topk_compress import (block_topk_pallas,
+                                                       fused_compress_pallas)
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:
-        return False
+def _pick_tile(R: int, tile: int = 256) -> int:
+    while R % tile and tile > 1:
+        tile //= 2
+    return tile
 
 
 @functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
@@ -24,8 +25,7 @@ def block_topk(x: jnp.ndarray, *, block_w: int = 128,
     """Keep the top-|.| entry of every contiguous block_w run of x
     (any shape); zeros elsewhere. Padding entries can never win (they
     are zero and ties break to the first index)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = default_interpret(interpret)
     shape = x.shape
     flat = x.reshape(-1)
     n = flat.size
@@ -33,10 +33,71 @@ def block_topk(x: jnp.ndarray, *, block_w: int = 128,
     if pad:
         flat = jnp.pad(flat, (0, pad))
     rows = flat.reshape(-1, block_w)
-    R = rows.shape[0]
-    tile = 256
-    while R % tile and tile > 1:
-        tile //= 2
+    tile = _pick_tile(rows.shape[0])
     y = block_topk_pallas(rows, block_w=block_w, rows_per_tile=tile,
                           interpret=interpret)
     return y.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_w", "interpret"))
+def fused_block_topk(g: jnp.ndarray, r: jnp.ndarray, *, k: int,
+                     block_w: int = 128, interpret: bool = None):
+    """Fused worker->master channel over flat fp32 buffers g, r (shape
+    (n,) each): computes c = g + r, keeps the k largest-|.| entries of
+    every contiguous block_w run, and returns the packed message plus the
+    new error-feedback residual:
+
+        values  (R, k) fp32   kept payloads, selection order
+        indices (R, k) int32  GLOBAL positions into the flat buffer
+        residual (n,)  fp32   c with the kept entries zeroed
+
+    R = ceil(n / block_w). Rows with fewer than k nonzeros pad the packed
+    message with (0.0, idx-of-a-zero) pairs; reconstruction scatter-adds,
+    so those are no-ops. Tail-padding entries (beyond n) are zero and can
+    surface only as such zero-valued pairs, possibly with index >= n —
+    the master's scatter uses mode="drop", so they are ignored.
+    """
+    vals, idx, res = fused_block_topk_batched(
+        g.reshape(1, -1), r.reshape(1, -1), k=k, block_w=block_w,
+        interpret=interpret)
+    return vals[0], idx[0], res[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_w", "interpret"))
+def fused_block_topk_batched(g: jnp.ndarray, r: jnp.ndarray, *, k: int,
+                             block_w: int = 128, interpret: bool = None):
+    """Batched fused channel: g, r are (W, n) stacks of per-worker flat
+    buffers. Because block selection is row-local, the worker axis folds
+    into the row axis — ALL workers are compressed by ONE pallas_call.
+    Returns (values (W, R, k), global indices (W, R, k) int32 — each
+    worker's indices address its own (n,) buffer — and residuals (W, n)).
+    """
+    interpret = default_interpret(interpret)
+    W_, n = g.shape
+    k = min(k, block_w)
+    g = g.astype(jnp.float32)
+    r = r.astype(jnp.float32)
+    pad = (-n) % block_w
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+        r = jnp.pad(r, ((0, 0), (0, pad)))
+    R = (n + pad) // block_w
+    rows = W_ * R
+    rows_g = g.reshape(rows, block_w)
+    rows_r = r.reshape(rows, block_w)
+    # pad the row count up to a tile multiple so the grid stays short —
+    # all-zero pad rows emit only (0.0, 0) no-op pairs, sliced off below
+    tile = 256
+    while tile > rows:
+        tile //= 2
+    tile = max(tile, 1)
+    row_pad = (-rows) % tile
+    if row_pad:
+        rows_g = jnp.pad(rows_g, ((0, row_pad), (0, 0)))
+        rows_r = jnp.pad(rows_r, ((0, row_pad), (0, 0)))
+    vals, offs, res = fused_compress_pallas(
+        rows_g, rows_r, k=k, rows_per_tile=tile, interpret=interpret)
+    idx = (offs[:rows].reshape(W_, R, k)
+           + jnp.arange(R, dtype=jnp.int32)[None, :, None] * block_w)
+    return (vals[:rows].reshape(W_, R, k), idx,
+            res[:rows].reshape(W_, R * block_w)[:, :n])

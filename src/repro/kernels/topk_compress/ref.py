@@ -1,5 +1,7 @@
-"""Pure-jnp oracle for block-local top-1 sparsification."""
+"""Pure-jnp / numpy oracles for block-local top-k sparsification."""
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -11,3 +13,26 @@ def block_topk_ref(x: jnp.ndarray) -> jnp.ndarray:
     arg = jnp.argmax(mag, axis=1)                # first max (numpy semantics)
     keep = jnp.arange(x.shape[1])[None, :] == arg[:, None]
     return jnp.where(keep, x, jnp.zeros_like(x))
+
+
+def fused_compress_ref(g: np.ndarray, r: np.ndarray, k: int
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sequential oracle for the fused kernel: per (R, W) row, iterate
+    first-max selection k times on c = g + r. Returns
+    (values (R, k), offsets (R, k), residual (R, W)) with the kernel's
+    exhausted-row convention: once a row runs out of nonzeros it emits
+    (0.0, 0) pairs."""
+    c = (np.asarray(g, np.float64) + np.asarray(r, np.float64)
+         ).astype(np.float32)
+    R, W = c.shape
+    k = min(k, W)
+    vals = np.zeros((R, k), np.float32)
+    offs = np.zeros((R, k), np.int32)
+    rem = c.copy()
+    for row in range(R):
+        for j in range(k):
+            sel = int(np.argmax(np.abs(rem[row])))   # first max
+            vals[row, j] = rem[row, sel]
+            offs[row, j] = sel
+            rem[row, sel] = 0.0
+    return vals, offs, rem

@@ -46,3 +46,52 @@ def block_topk_pallas(x: jnp.ndarray, *, block_w: int = 128,
         out_shape=jax.ShapeDtypeStruct((R, W), x.dtype),
         interpret=interpret,
     )(x)
+
+
+def _fused_kernel(g_ref, r_ref, v_ref, i_ref, res_ref, *, k: int,
+                  block_w: int):
+    """One VMEM pass of the worker->master channel: error-feedback add,
+    block-local top-k selection (iterated first-max, so ties and the k>1
+    ordering are deterministic), packed (value, offset) emission and the
+    residual update. Rows with fewer than k nonzeros emit (0.0, 0) pairs
+    — additive no-ops for the master's scatter reconstruction."""
+    c = g_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.int32, c.shape, 1)
+    rem = c
+    for j in range(k):
+        mag = jnp.abs(rem)
+        best = jnp.max(mag, axis=1, keepdims=True)
+        first = jnp.min(jnp.where(mag >= best, col, block_w),
+                        axis=1, keepdims=True)
+        keep = col == first
+        v_ref[:, j] = jnp.sum(jnp.where(keep, rem, 0.0), axis=1)
+        i_ref[:, j] = jnp.where(first[:, 0] >= block_w, 0, first[:, 0])
+        rem = jnp.where(keep, 0.0, rem)
+    res_ref[...] = rem
+
+
+def fused_compress_pallas(g: jnp.ndarray, r: jnp.ndarray, *, k: int,
+                          rows_per_tile: int = 256,
+                          interpret: bool = True):
+    """g, r: (n_rows, W) gradient/residual blocks -> packed
+    (values (n_rows, k), offsets (n_rows, k) int32, residual (n_rows, W)).
+    n_rows % rows_per_tile == 0 (ops.py pads)."""
+    R, W = g.shape
+    assert r.shape == (R, W)
+    assert R % rows_per_tile == 0, (R, rows_per_tile)
+    k = min(k, W)
+    kernel = functools.partial(_fused_kernel, k=k, block_w=W)
+    row_spec = pl.BlockSpec((rows_per_tile, W), lambda i: (i, 0))
+    pack_spec = pl.BlockSpec((rows_per_tile, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(R // rows_per_tile,),
+        in_specs=[row_spec, row_spec],
+        out_specs=[pack_spec, pack_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, k), jnp.float32),
+            jax.ShapeDtypeStruct((R, k), jnp.int32),
+            jax.ShapeDtypeStruct((R, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, r)

@@ -1,6 +1,14 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the default single CPU device; multi-device tests spawn subprocesses
 with REPRO_DRYRUN_DEVICES / XLA_FLAGS set explicitly."""
+import os
+import sys
+
+try:                                    # this container has no hypothesis;
+    import hypothesis  # noqa: F401     # fall back to the deterministic
+except ImportError:                     # stub in tests/_stubs
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))
+
 import jax
 import pytest
 

@@ -24,16 +24,22 @@ def test_topk_keeps_largest():
     assert jnp.allclose(sent["x"] + res["x"], x, atol=1e-6)
 
 
-def test_randk_unbiased_scaling():
+def test_randk_unscaled_payload():
+    """randk ships the UNSCALED payload: with error feedback in the loop
+    the classical 1/frac rescaling amplifies delivered mass by 1/frac
+    per unit of input mass and diverges under SGD (regression for that
+    bug — see core/compression.py module docstring)."""
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (4096,))
     c = GradientCompressor("randk", frac=0.25, seed=3)
-    sent, _ = c.roundtrip({"x": x}, None)
+    sent, res = c.roundtrip({"x": x}, None)
     kept = np.asarray(sent["x"])
     nz = kept != 0
     assert abs(nz.mean() - 0.25) < 0.05
-    # kept values are scaled by 1/frac
-    assert np.allclose(kept[nz], np.asarray(x)[nz] * 4.0, atol=1e-5)
+    assert np.allclose(kept[nz], np.asarray(x)[nz], atol=1e-5)
+    # the unsent mass is exactly the residual
+    assert np.allclose(kept + np.asarray(res["x"]), np.asarray(x),
+                       atol=1e-5)
 
 
 def test_blocktopk_one_per_block():
@@ -57,16 +63,41 @@ def test_wire_bytes_budget():
        method=st.sampled_from(["topk", "randk", "blocktopk"]),
        frac=st.sampled_from([0.01, 0.1, 0.5]))
 def test_error_feedback_mass_conservation(seed, method, frac):
-    """residual_t + sent_t(payload) == grad_t + residual_{t-1} for every
-    method (randk's wire scaling excluded from the identity)."""
+    """residual_t + sent_t == grad_t + residual_{t-1} for every method."""
     key = jax.random.PRNGKey(seed)
     tree = _tree(key)
     c = GradientCompressor(method, frac=frac, seed=seed)
     sent, res = c.roundtrip(tree, None)
-    scale = 1.0 / frac if method == "randk" else 1.0
     for k in tree:
-        reconstructed = sent[k] / scale + res[k]
-        assert jnp.allclose(reconstructed, tree[k], atol=1e-5)
+        assert jnp.allclose(sent[k] + res[k], tree[k], atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), frac=st.sampled_from([0.05, 0.1, 0.25]))
+def test_randk_mask_differs_across_steps(seed, frac):
+    """The randk subset must be re-drawn every iteration: the step counter
+    is folded into the PRNG key (the seed-PRNGKey-reuse bug regression)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+    c = GradientCompressor("randk", frac=frac, seed=seed)
+    zero = {"x": jnp.zeros_like(x)}
+    masks = []
+    for step in range(3):
+        sent, _ = c.roundtrip({"x": x}, zero, step=step)
+        masks.append(np.asarray(sent["x"]) != 0)
+        # flat packed path draws the same per-step freshness
+        msg, _ = c.compress_flat(x, None, step=step)
+        flat_sel = np.zeros(512, bool)
+        flat_sel[np.asarray(msg.indices).reshape(-1)] = True
+        assert flat_sel.sum() == c.flat_k(512)
+        masks.append(flat_sel)
+    # consecutive dense masks differ, consecutive packed masks differ
+    assert (masks[0] != masks[2]).any(), "dense randk mask frozen across steps"
+    assert (masks[2] != masks[4]).any()
+    assert (masks[1] != masks[3]).any(), "flat randk mask frozen across steps"
+    assert (masks[3] != masks[5]).any()
+    # same step is reproducible
+    again, _ = c.roundtrip({"x": x}, zero, step=0)
+    assert ((np.asarray(again["x"]) != 0) == masks[0]).all()
 
 
 def test_pallas_blocktopk_matches_compressor():

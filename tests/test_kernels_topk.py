@@ -55,3 +55,74 @@ def test_property(n, W, seed):
     assert np.array_equal(np.asarray(y), _ref_any_shape(x, W))
     # sparsity bound
     assert int((y != 0).sum()) <= -(-n // W) if n >= W else True
+
+
+# ---------------------------------------------------------------------------
+# fused error-feedback top-k kernel (k >= 1 per block, packed emission)
+# ---------------------------------------------------------------------------
+from repro.kernels.topk_compress import (fused_block_topk,  # noqa: E402
+                                         fused_block_topk_batched,
+                                         fused_compress_ref)
+
+
+def _fused_oracle(g, r, k, W):
+    n = g.size
+    pad = (-n) % W
+    gp = np.pad(np.asarray(g), (0, pad)).reshape(-1, W)
+    rp = np.pad(np.asarray(r), (0, pad)).reshape(-1, W)
+    vals, offs, rem = fused_compress_ref(gp, rp, k)
+    R = gp.size // W
+    idx = offs + (np.arange(R, dtype=np.int32)[:, None] * W)
+    return vals, idx, rem.reshape(-1)[:n]
+
+
+@pytest.mark.parametrize("n,W,k", [
+    (128, 8, 1), (1000, 16, 3), (64, 33, 5), (4096, 128, 2),
+    (7, 8, 3), (5, 4, 9),                     # ragged tail / k >= size
+])
+def test_fused_matches_oracle(n, W, k):
+    key = jax.random.split(jax.random.PRNGKey(0), 2)
+    g = jax.random.normal(key[0], (n,))
+    r = jax.random.normal(key[1], (n,)) * 0.3
+    vals, idx, res = fused_block_topk(g, r, k=k, block_w=W, interpret=True)
+    v2, i2, r2 = _fused_oracle(g, r, min(k, W), W)
+    assert np.array_equal(np.asarray(vals), v2)
+    assert np.array_equal(np.asarray(idx), i2)
+    assert np.allclose(np.asarray(res), r2, atol=1e-6)
+
+
+def test_fused_batched_equals_per_worker():
+    key = jax.random.split(jax.random.PRNGKey(3), 6)
+    W_, n = 3, 500
+    g = jnp.stack([jax.random.normal(key[i], (n,)) for i in range(W_)])
+    r = jnp.stack([jax.random.normal(key[3 + i], (n,)) * 0.2
+                   for i in range(W_)])
+    bv, bi, br = fused_block_topk_batched(g, r, k=2, block_w=32,
+                                          interpret=True)
+    for w in range(W_):
+        sv, si, sr = fused_block_topk(g[w], r[w], k=2, block_w=32,
+                                      interpret=True)
+        assert np.array_equal(np.asarray(bv[w]), np.asarray(sv))
+        assert np.array_equal(np.asarray(bi[w]), np.asarray(si))
+        assert np.allclose(np.asarray(br[w]), np.asarray(sr))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 1500), W=st.sampled_from([8, 16, 128]),
+       k=st.integers(1, 6), seed=st.integers(0, 30))
+def test_fused_property(n, W, k, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    g = jax.random.normal(ks[0], (n,))
+    r = jax.random.normal(ks[1], (n,)) * 0.5
+    vals, idx, res = fused_block_topk(g, r, k=k, block_w=W, interpret=True)
+    v2, i2, r2 = _fused_oracle(g, r, min(k, W), W)
+    assert np.array_equal(np.asarray(vals), v2)
+    assert np.array_equal(np.asarray(idx), i2)
+    # conservation: scatter(vals) + residual == g + r
+    dense = np.zeros(n, np.float32)
+    iv = np.asarray(idx).reshape(-1)
+    vv = np.asarray(vals).reshape(-1)
+    keep = iv < n
+    np.add.at(dense, iv[keep], vv[keep])
+    assert np.allclose(dense + np.asarray(res),
+                       np.asarray(g) + np.asarray(r), atol=1e-5)

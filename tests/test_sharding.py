@@ -10,8 +10,8 @@ from repro.distributed.sharding import (batch_spec, param_spec, param_specs,
                                         sanitize_spec)
 from repro.models import transformer as tf
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_sanitize_drops_nondivisible():
