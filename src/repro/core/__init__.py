@@ -1,6 +1,7 @@
 """The paper's primary contribution: the MLitB elastic distributed-SGD
 runtime (event loop, scheduler, allocator, reducer, closures, compression,
 simulation, mesh engine)."""
+from repro.core.adaptive_frac import AdaptiveFracController  # noqa: F401
 from repro.core.allocator import DataAllocator  # noqa: F401
 from repro.core.closure import ResearchClosure  # noqa: F401
 from repro.core.compression import (CompressedMessage,  # noqa: F401

@@ -1,0 +1,112 @@
+"""Bandwidth-adaptive per-worker compression — closing the §3.3(d) loop.
+
+MLitB adapts each worker's *compute* budget to its measured latency, but
+the gradient channel historically compressed every worker with one global
+``frac``: a phone on 3G and a workstation on ethernet shipped the same
+number of bytes, so the slowest uplink bounded the iteration. This
+controller maps each worker's measured uplink bandwidth (EWMA grown by
+``AdaptiveScheduler.record`` from reduce-step upload time and wire bytes)
+and latency to a per-worker keep-fraction ``frac_w`` sized so the
+worker's upload fits its communication budget — ``comm_frac`` of its
+scheduling slack:
+
+    comm_budget_w = comm_frac * max(T - latency_w, min_comm)
+    raw_k_w       = bandwidth_w * comm_budget_w / BYTES_PER_ENTRY
+    frac_w        = clamp(raw_k_w / n, frac_min, frac_max)
+
+``frac_w`` is therefore monotone non-decreasing in bandwidth and monotone
+non-increasing in latency (property-tested in tests/test_adaptive_frac.py).
+
+The invariant this buys is EQUALIZED uploads, not a smaller compute
+budget: the scheduler still grants the full ``T - latency`` slack to
+compute, and the upload rides on top, so a fully-adapted iteration's
+wall settles at ``~T + comm_frac * T`` REGARDLESS of the fleet's
+bandwidth spread — where a uniform ``frac`` pays ``T + 8*frac*n /
+min(bandwidth)``, unbounded in the spread. (``MasterEventLoop`` syncs
+``T`` to its scheduler's on construction.)
+
+The resulting keep count is snapped DOWN onto the compressor's power-of-
+two ``k_lattice`` (uploads sized for a budget must not exceed it), which
+bounds the jit/pallas trace cache to ~log2(n) variants per layout. An
+ASYMMETRIC hysteresis keeps a worker on its bucket against EWMA noise:
+floor-quantization owns the raw domain ``[k, 2k)``, so re-bucketing UP
+requires the raw target to clear the upper boundary by a small margin
+(``2k * (1 + hysteresis_up)`` — enough to reject boundary-straddling
+noise without blocking a genuine ramp-up), while re-bucketing DOWN
+requires falling a full dead-band below the lower boundary
+(``k * (1 - hysteresis_down)``). The price is bounded: a held bucket
+overshoots its bandwidth budget by at most ``1/(1 - hysteresis_down)``.
+
+Wire format note (docs/compressed_reduce.md): per-worker ``k_w`` changes
+nothing about the packed ``(values, indices)`` message except its length —
+the master's scatter-add reduce is ragged-tolerant because every message
+addresses the same flat index space and zero-valued padding pairs are
+no-ops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.core.compression import GradientCompressor
+from repro.core.scheduler import WorkerStats
+
+BYTES_PER_ENTRY = 8            # 4B value + 4B index, the packed wire cost
+
+
+@dataclass
+class AdaptiveFracController:
+    """Maps per-worker (bandwidth, latency) -> keep count for one
+    (n,)-entry flat gradient buffer."""
+    T: float = 4.0              # iteration duration the uploads must fit
+    comm_frac: float = 0.25     # share of a worker's slack spent uploading
+    frac_min: float = 1.0 / 1024
+    frac_max: float = 0.25
+    hysteresis_down: float = 0.25   # dead-band below the bucket's floor
+    hysteresis_up: float = 0.05     # margin past the bucket's ceiling
+    min_comm: float = 0.05      # floor for the comm budget (seconds)
+    _last_k: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.T > 0 and 0 < self.comm_frac <= 1
+        assert 0 < self.frac_min <= self.frac_max <= 1
+        assert 0 <= self.hysteresis_down < 1 and self.hysteresis_up >= 0
+
+    # -- pure math (the property-tested surface) -----------------------
+    def frac_for(self, n: int, bandwidth: float, latency: float) -> float:
+        """Continuous target keep-fraction, before bucketing."""
+        budget = self.comm_frac * max(self.T - latency, self.min_comm)
+        raw_k = bandwidth * budget / BYTES_PER_ENTRY
+        return min(self.frac_max, max(self.frac_min, raw_k / n))
+
+    def target_k(self, n: int, bandwidth: float, latency: float) -> float:
+        return self.frac_for(n, bandwidth, latency) * n
+
+    # -- per-iteration assignment --------------------------------------
+    def assign_worker(self, worker: str, compressor: GradientCompressor,
+                      n: int, bandwidth: float, latency: float) -> int:
+        """Bucketed keep total for one worker, with hysteresis against
+        its previous assignment."""
+        raw = self.target_k(n, bandwidth, latency)
+        cand = compressor.quantize_k(n, raw)
+        prev = self._last_k.get(worker)
+        if prev is not None and cand != prev:
+            # floor-quantization owns the raw domain [prev, 2*prev); hold
+            # the bucket unless raw clears a boundary by its margin
+            lo = prev * (1.0 - self.hysteresis_down)
+            hi = 2.0 * prev * (1.0 + self.hysteresis_up)
+            if lo <= raw < hi:
+                cand = prev
+        self._last_k[worker] = cand
+        return cand
+
+    def assign(self, compressor: GradientCompressor, n: int,
+               stats: Dict[str, WorkerStats]) -> Dict[str, int]:
+        """{worker: keep total} for the workers in ``stats`` — the
+        ``keep=`` argument of ``MasterReducer.reduce_and_step``."""
+        return {w: self.assign_worker(w, compressor, n,
+                                      s.bandwidth, s.latency)
+                for w, s in stats.items()}
+
+    def drop_worker(self, worker: str) -> None:
+        self._last_k.pop(worker, None)

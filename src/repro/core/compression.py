@@ -118,8 +118,13 @@ class GradientCompressor:
     # ------------------------------------------------------------------
     # flat packed path (hot): one buffer, one jitted dispatch
     # ------------------------------------------------------------------
-    def flat_k(self, n: int) -> int:
-        """Kept entries for an (n,)-buffer message (incl. packing pads)."""
+    def flat_k(self, n: int, k: Optional[int] = None) -> int:
+        """Kept entries for an (n,)-buffer message (incl. packing pads).
+        ``k`` is the per-call override (adaptive per-worker compression);
+        it is snapped onto ``k_lattice`` so the trace cache stays
+        O(log n) per layout."""
+        if k is not None:
+            return self.quantize_k(n, k)
         if self.method == "blocktopk":
             rows = -(-n // self.block_w)
             return rows * self._block_k()
@@ -129,10 +134,45 @@ class GradientCompressor:
         return min(self.block_w,
                    max(self.min_keep, int(round(self.frac * self.block_w))))
 
-    def packed_wire_bytes(self, n: int) -> int:
+    # -- adaptive-k lattice --------------------------------------------
+    def k_lattice(self, n: int) -> Tuple[int, ...]:
+        """The per-message totals a per-call ``k`` may take: powers of two
+        (plus the exact endpoint) so that however the adaptive controller
+        moves, at most ~log2(n) distinct shapes ever reach jit/pallas.
+        blocktopk quantizes the PER-BLOCK k (its message total is always
+        ``rows * block_k``), so its lattice is rows * {1, 2, 4, ...,
+        block_w}."""
+        if self.method == "blocktopk":
+            rows = -(-n // self.block_w)
+            ks, b = [], 1
+            while b < self.block_w:
+                ks.append(rows * b)
+                b *= 2
+            ks.append(rows * self.block_w)
+            return tuple(ks)
+        ks, b = [], 1
+        while b < n:
+            ks.append(b)
+            b *= 2
+        ks.append(n)
+        return tuple(ks)
+
+    def quantize_k(self, n: int, raw_k: float) -> int:
+        """Largest lattice point <= raw_k (floored so an upload sized for
+        a bandwidth budget never exceeds it); the smallest point if raw_k
+        is below the whole lattice."""
+        lat = self.k_lattice(n)
+        out = lat[0]
+        for point in lat:
+            if point <= raw_k:
+                out = point
+        return out
+
+    def packed_wire_bytes(self, n: int, k: Optional[int] = None) -> int:
         """Exact bytes ``compress_flat`` puts on the wire for an
-        (n,)-buffer — matches ``CompressedMessage.wire_bytes()``."""
-        return 8 * self.flat_k(n)
+        (n,)-buffer — matches ``CompressedMessage.wire_bytes()``.
+        ``k`` is the same per-call override ``compress_flat`` takes."""
+        return 8 * self.flat_k(n, k)
 
     def flat_key(self, step: int) -> jnp.ndarray:
         """randk's subset key for iteration ``step`` — folding the step
@@ -141,15 +181,20 @@ class GradientCompressor:
 
     def compress_flat(self, grad_flat: jnp.ndarray,
                       residual_flat: Optional[jnp.ndarray],
-                      step: int = 0
+                      step: int = 0, k: Optional[int] = None
                       ) -> Tuple[CompressedMessage, jnp.ndarray]:
         """(g, r, step) -> (packed message, new residual). The step
         counter feeds randk's PRNG key, so the random subset differs
-        every iteration."""
+        every iteration. ``k`` overrides the frac-derived keep count for
+        THIS call (bandwidth-adaptive per-worker compression); it is
+        quantized onto ``k_lattice`` first, so wire accounting is
+        ``packed_wire_bytes(n, k)``."""
         n = int(grad_flat.size)
+        if k is not None:
+            k = self.quantize_k(n, k)
         if residual_flat is None:
             residual_flat = jnp.zeros((n,), jnp.float32)
-        vals, idx, res = _flat_compress(self, n)(
+        vals, idx, res = _flat_compress(self, n, k)(
             grad_flat, residual_flat, self.flat_key(step))
         return CompressedMessage(vals, idx, n), res
 
@@ -199,14 +244,18 @@ class GradientCompressor:
         return total
 
 
-def flat_compress_core(comp: GradientCompressor, n: int):
+def flat_compress_core(comp: GradientCompressor, n: int,
+                       k: Optional[int] = None):
     """Un-jitted flat compressor core: fn(g (n,), r (n,), key) ->
     (values, indices int32, new_residual (n,)). topk/randk are vmappable
     over a worker axis; blocktopk stacks should use
-    ``fused_block_topk_batched`` directly (one pallas_call, no vmap)."""
+    ``fused_block_topk_batched`` directly (one pallas_call, no vmap).
+    ``k`` is the (already-quantized) per-call keep total; for blocktopk
+    it must be ``rows * block_k`` and selects the per-block k."""
     method = comp.method
     if method == "blocktopk":
-        k_blk = comp._block_k()
+        rows = -(-n // comp.block_w)
+        k_blk = comp._block_k() if k is None else max(1, k // rows)
         block_w = comp.block_w
 
         def fn(g, r, key):
@@ -214,7 +263,7 @@ def flat_compress_core(comp: GradientCompressor, n: int):
 
         return fn
 
-    k = comp.flat_k(n)
+    k = comp.flat_k(n) if k is None else k
     if method == "topk":
 
         def fn(g, r, key):
@@ -240,8 +289,9 @@ def flat_compress_core(comp: GradientCompressor, n: int):
 
 
 @functools.lru_cache(maxsize=128)
-def _flat_compress(comp: GradientCompressor, n: int):
-    return jax.jit(flat_compress_core(comp, n))
+def _flat_compress(comp: GradientCompressor, n: int,
+                   k: Optional[int] = None):
+    return jax.jit(flat_compress_core(comp, n, k))
 
 
 def dense_bytes(grad: PyTree, bytes_per_el: int = 4) -> int:

@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 import jax
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
+from repro.core.adaptive_frac import AdaptiveFracController
 from repro.core.allocator import DataAllocator
 from repro.core.elastic import (EventQueue, JoinEvent, LeaveEvent,
                                 UploadDataEvent, WorkerRegistry)
@@ -49,6 +50,11 @@ class Cluster(Protocol):
         """Deliver params to workers; returns broadcast wall-time seconds."""
         ...
 
+    # Optional: ``upload_time(worker, nbytes) -> float`` — seconds the
+    # worker's reduce-step message of ``nbytes`` spends on its uplink.
+    # Clusters that model per-worker links implement it; the loop treats
+    # uploads as free when absent.
+
 
 @dataclass
 class IterationLog:
@@ -62,17 +68,31 @@ class IterationLog:
     events: List[str] = field(default_factory=list)
     wire_bytes: int = 0          # reduce-step upstream bytes (packed if
                                  # the reducer's channel compresses)
+    per_worker_wire_bytes: Dict[str, int] = field(default_factory=dict)
+    max_upload: float = 0.0      # slowest worker's reduce-step upload (s)
 
 
 class MasterEventLoop:
     def __init__(self, *, reducer: MasterReducer, cluster: Cluster,
                  scheduler: Optional[AdaptiveScheduler] = None,
                  allocator: Optional[DataAllocator] = None,
+                 frac_controller: Optional["AdaptiveFracController"] = None,
                  T: float = 4.0):
         self.reducer = reducer
         self.cluster = cluster
         self.scheduler = scheduler or AdaptiveScheduler(T=T)
         self.allocator = allocator or DataAllocator()
+        # measurement -> controller -> per-worker channel: scales each
+        # worker's keep-fraction to its measured uplink (needs the fused
+        # compressed channel; ignored otherwise)
+        self.frac_controller = frac_controller
+        if frac_controller is not None:
+            if reducer.compressor is None or not reducer.fused:
+                raise ValueError("frac_controller needs a fused compressed "
+                                 "reducer (compressor=..., fused=True)")
+            # one iteration budget: the controller sizes uploads against
+            # the same T the scheduler budgets compute against
+            frac_controller.T = self.scheduler.T
         self.registry = WorkerRegistry()
         self.events = EventQueue()
         self.clock = 0.0
@@ -106,6 +126,8 @@ class MasterEventLoop:
                 orphans = self.allocator.remove_worker(ev.worker)
                 self.scheduler.remove_worker(ev.worker)
                 self.reducer.drop_worker(ev.worker)
+                if self.frac_controller is not None:
+                    self.frac_controller.drop_worker(ev.worker)
                 notes.append(f"leave:{ev.worker}(orphans={len(orphans)})")
         return notes
 
@@ -142,6 +164,7 @@ class MasterEventLoop:
         # ---- (c) reduce step ----
         loss = float("nan")
         wire_bytes = 0
+        per_bytes: Dict[str, int] = {}
         vectors = sum(r.n_vectors for r in results.values())
         # synthetic-compute clusters send empty gradient trees (throughput
         # studies): count vectors but skip the parameter update
@@ -149,16 +172,32 @@ class MasterEventLoop:
             len(jax.tree.leaves(g)) > 0 for g, _ in messages.values()
         ) if messages else False
         if messages and has_grads:
-            self.reducer.reduce_and_step(messages)
+            keep = None
+            if self.frac_controller is not None:
+                # bandwidth/latency estimates from step (d) of PREVIOUS
+                # iterations pick this iteration's per-worker keep counts
+                keep = self.frac_controller.assign(
+                    self.reducer.compressor, self.reducer.flat_n,
+                    {w: self.scheduler.stats[w] for w in messages})
+            self.reducer.reduce_and_step(messages, keep=keep)
             wire_bytes = self.reducer.last_wire_bytes
+            per_bytes = dict(self.reducer.last_per_worker_bytes)
             tot = sum(n for _, n in messages.values())
             loss = sum(r.loss_sum for r in results.values()) / max(tot, 1)
 
-        # ---- (d) latency monitoring ----
+        # ---- (d) latency + bandwidth monitoring ----
+        upload_fn = getattr(self.cluster, "upload_time", None)
+        uploads: Dict[str, float] = {}
         for w, r in results.items():
+            nbytes = per_bytes.get(w, 0)
+            t_up = (upload_fn(w, nbytes)
+                    if upload_fn is not None and nbytes else 0.0)
+            uploads[w] = t_up
             self.scheduler.record(w, latency=r.latency,
                                   vectors=r.n_vectors,
-                                  compute_time=r.compute_time)
+                                  compute_time=r.compute_time,
+                                  upload_bytes=float(nbytes),
+                                  upload_time=t_up)
 
         # ---- (e) broadcast ----
         bc_time = self.cluster.broadcast(self.reducer.params,
@@ -166,8 +205,8 @@ class MasterEventLoop:
                                           if w not in died])
 
         wall = max([self.scheduler.T]
-                   + [r.latency + r.compute_time
-                      for r in results.values()]) + bc_time
+                   + [r.latency + r.compute_time + uploads.get(w, 0.0)
+                      for w, r in results.items()]) + bc_time
         self.clock += wall
         self.step += 1
         lat = ([r.latency for r in results.values()] or [0.0])
@@ -175,7 +214,8 @@ class MasterEventLoop:
             step=self.step, wall_time=wall, n_workers=len(results),
             vectors=vectors, power=vectors / wall,
             mean_latency=sum(lat) / len(lat), loss=loss, events=notes,
-            wire_bytes=wire_bytes)
+            wire_bytes=wire_bytes, per_worker_wire_bytes=per_bytes,
+            max_upload=max(uploads.values()) if uploads else 0.0)
         self.history.append(log)
         return log
 

@@ -20,8 +20,10 @@ Two execution paths:
   sparsify, packed emission, residual update) runs over the stacked
   (num_workers, n) buffer, and the reduce is a single scatter-add
   segment-sum followed by the optimizer step — ALL inside one jitted
-  function per worker count. O(1) dispatches per iteration instead of
-  O(workers x leaves).
+  function per (worker count, max keep bucket). O(1) dispatches per
+  iteration instead of O(workers x leaves). Ragged per-worker keeps
+  (bandwidth-adaptive ``frac_w``, core/adaptive_frac.py) ride the same
+  dispatch: pad-to-the-largest-bucket plus a runtime mask, no retrace.
 
 - **dense (``fused=False``).** The original per-worker Python loop over
   ``jax.tree.map`` with the leaf-wise compressor ``roundtrip`` — kept as
@@ -44,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import GradientCompressor, flat_compress_core
+from repro.core.compression import GradientCompressor
 from repro.core.flatbuf import flat_spec
 from repro.kernels.topk_compress import fused_block_topk_batched
 from repro.optim.base import Optimizer
@@ -79,6 +81,7 @@ class MasterReducer:
         self._residuals: Dict[str, Any] = {}
         self.step = 0
         self.last_wire_bytes = 0
+        self.last_per_worker_bytes: Dict[str, int] = {}
         if fused:
             self._spec = flat_spec(params)
             self._flat = self._spec.flatten(params)
@@ -106,6 +109,13 @@ class MasterReducer:
             return flat_spec(self._params).flatten(self._params)
         return self._flat
 
+    @property
+    def flat_n(self) -> int:
+        """Length of the flat gradient buffer a worker message addresses."""
+        if not self.fused:
+            return flat_spec(self._params).n
+        return self._spec.n
+
     def drop_worker(self, worker: str) -> None:
         self._residuals.pop(worker, None)
 
@@ -123,28 +133,41 @@ class MasterReducer:
 
     def _reduce_and_step_dense(
             self, messages: Dict[str, Tuple[PyTree, float]]) -> PyTree:
-        chan = [(self._channel(w, g), n) for w, (g, n) in
+        chan = [(w, self._channel(w, g), n) for w, (g, n) in
                 sorted(messages.items())]
-        g_bar = weighted_reduce(chan)
+        g_bar = weighted_reduce([(g, n) for _, g, n in chan])
         self._params, self.opt_state = self.optimizer.update(
             self._params, g_bar, self.opt_state)
-        self.last_wire_bytes = sum(
-            (self.compressor.wire_bytes(g) if self.compressor else
-             4 * sum(leaf.size for leaf in jax.tree.leaves(g)))
-            for g, _ in chan)
+        self.last_per_worker_bytes = {
+            w: (self.compressor.wire_bytes(g) if self.compressor else
+                4 * sum(leaf.size for leaf in jax.tree.leaves(g)))
+            for w, g, _ in chan}
+        self.last_wire_bytes = sum(self.last_per_worker_bytes.values())
         self.step += 1
         return self._params
 
     # ------------------------------------------------------------------
     # fused flat-buffer path
     # ------------------------------------------------------------------
-    def _build_step_fn(self, W: int):
-        """One jitted fn per worker count. EVERYTHING between receiving
-        the worker trees and the new parameter buffer happens inside this
-        single dispatch: per-worker ravel into the flat layout, the
-        compression channel (error-feedback add + sparsify + packed
-        emission + residual update), the scatter-add segment-sum reduce,
-        and the optimizer step."""
+    def _build_step_fn(self, W: int, kmax: Optional[int]):
+        """One jitted fn per (worker count, padded keep count). EVERYTHING
+        between receiving the worker trees and the new parameter buffer
+        happens inside this single dispatch: per-worker ravel into the
+        flat layout, the compression channel (error-feedback add +
+        sparsify + packed emission + residual update), the scatter-add
+        segment-sum reduce, and the optimizer step.
+
+        Ragged per-worker message sizes (bandwidth-adaptive ``frac_w``,
+        core/adaptive_frac.py) are handled WITHOUT retracing: the channel
+        selects ``kmax`` candidates per worker (``kmax`` = the largest
+        worker's bucketed keep; per-block for blocktopk) and a runtime
+        ``k_arr`` masks each worker down to its own keep — selection
+        emits in descending-|.| order, so the first ``k_arr[w]`` entries
+        ARE worker w's top-k. Masked-off candidates carry value 0 into
+        the segment-sum (scatter no-ops, never on the wire) and are
+        returned to the worker's error-feedback residual. ``kmax`` is
+        bucketed to the compressor's power-of-two lattice, so at most
+        ~log2(n) variants of this function exist per (W, layout)."""
         opt = self.optimizer
         comp = self.compressor
         spec = self._spec
@@ -162,37 +185,68 @@ class MasterReducer:
             return fn
 
         if comp.method == "blocktopk":
-            k_blk = comp._block_k()
             block_w = comp.block_w
 
-            def channel(grads, res, step):
-                return fused_block_topk_batched(grads, res, k=k_blk,
-                                                block_w=block_w)
-        else:
-            core = flat_compress_core(comp, n)
-            seed = comp.seed
+            @jax.jit
+            def fn(flat, opt_state, gtrees, res_rows, ns, step, k_arr):
+                grads = jnp.stack([spec.flatten(t) for t in gtrees])
+                res = jnp.stack(res_rows)
+                # (W, R, kmax) candidates per worker, descending |.| per
+                # block; res_full assumes ALL kmax candidates were sent
+                vals, idx, res_full = fused_block_topk_batched(
+                    grads, res, k=kmax, block_w=block_w)
+                mask = (jnp.arange(kmax, dtype=jnp.int32)[None, None, :]
+                        < k_arr[:, None, None])
+                sent = jnp.where(mask, vals, 0.0)
+                # candidates a worker did NOT send go back to its residual
+                dropped = (vals - sent).reshape(W, -1)
+                rows_ix = jnp.arange(W, dtype=jnp.int32)[:, None]
+                new_res = res_full.at[rows_ix, idx.reshape(W, -1)].add(
+                    dropped, mode="drop")
+                g_bar = jnp.zeros((n,), jnp.float32).at[
+                    idx.reshape(-1)].add(sent.reshape(-1),
+                                         mode="drop") / jnp.sum(ns)
+                new_flat, new_state = opt.update(flat, g_bar, opt_state)
+                return (new_flat, new_state,
+                        tuple(new_res[i] for i in range(W)))
 
-            def channel(grads, res, step):
-                base = jax.random.fold_in(jax.random.PRNGKey(seed), step)
-                return jax.vmap(core)(grads, res,
-                                      jax.random.split(base, W))
+            return fn
+
+        method = comp.method
+        seed = comp.seed
 
         @jax.jit
-        def fn(flat, opt_state, gtrees, res_rows, ns, step):
+        def fn(flat, opt_state, gtrees, res_rows, ns, step, k_arr):
             grads = jnp.stack([spec.flatten(t) for t in gtrees])
             res = jnp.stack(res_rows)
-            vals, idx, new_res = channel(grads, res, step)
-            # segment-sum over the shared index space: one scatter-add
-            # accumulates every worker's packed entries
+            c = grads + res
+            if method == "topk":
+                _, idx = jax.lax.top_k(jnp.abs(c), kmax)
+            else:                                              # randk
+                base = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+                keys = jax.random.split(base, W)
+                scores = jax.vmap(
+                    lambda key: jax.random.uniform(key, (n,)))(keys)
+                _, idx = jax.lax.top_k(scores, kmax)
+            idx = idx.astype(jnp.int32)
+            vals = jnp.take_along_axis(c, idx, axis=1)
+            mask = (jnp.arange(kmax, dtype=jnp.int32)[None, :]
+                    < k_arr[:, None])
+            sent = jnp.where(mask, vals, 0.0)
+            rows_ix = jnp.arange(W, dtype=jnp.int32)[:, None]
+            # zero exactly the sent entries out of c; unsent candidates
+            # stay in the residual (per-row indices are distinct)
+            new_res = c.at[rows_ix, idx].add(-sent)
             g_bar = jnp.zeros((n,), jnp.float32).at[idx.reshape(-1)].add(
-                vals.reshape(-1), mode="drop") / jnp.sum(ns)
+                sent.reshape(-1), mode="drop") / jnp.sum(ns)
             new_flat, new_state = opt.update(flat, g_bar, opt_state)
             return new_flat, new_state, tuple(new_res[i] for i in range(W))
 
         return fn
 
     def _reduce_and_step_fused(
-            self, messages: Dict[str, Tuple[PyTree, float]]) -> PyTree:
+            self, messages: Dict[str, Tuple[PyTree, float]],
+            keep: Optional[Dict[str, int]] = None) -> PyTree:
         if not messages:
             raise ValueError("reduce step with no worker messages")
         names = sorted(messages)
@@ -203,32 +257,64 @@ class MasterReducer:
         W = len(names)
         gtrees = tuple(messages[w][0] for w in names)
         ns = np.asarray([float(messages[w][1]) for w in names], np.float32)
-        fn = self._step_fns.get(W)
-        if fn is None:
-            fn = self._step_fns[W] = self._build_step_fn(W)
 
         if self.compressor is None:
+            if keep:
+                raise ValueError("per-worker keep requires a compressor")
+            fn = self._step_fns.get((W, None))
+            if fn is None:
+                fn = self._step_fns[(W, None)] = self._build_step_fn(W, None)
             self._flat, self.opt_state = fn(self._flat, self.opt_state,
                                             gtrees, ns)
+            self.last_per_worker_bytes = {w: 4 * n for w in names}
             self.last_wire_bytes = W * 4 * n
         else:
+            comp = self.compressor
+            # per-worker keep totals, snapped to the compressor's lattice
+            # (keep=None -> the uniform frac-derived default)
+            k_tot = {w: comp.flat_k(n, (keep or {}).get(w)) for w in names}
+            kmax_tot = max(k_tot.values())
+            if comp.method == "blocktopk":
+                rows = -(-n // comp.block_w)
+                kmax = kmax_tot // rows            # per-block keep
+                k_arr = jnp.asarray([k_tot[w] // rows for w in names],
+                                    jnp.int32)
+            else:
+                kmax = kmax_tot
+                k_arr = jnp.asarray([k_tot[w] for w in names], jnp.int32)
+            fn = self._step_fns.get((W, kmax))
+            if fn is None:
+                fn = self._step_fns[(W, kmax)] = self._build_step_fn(
+                    W, kmax)
             zeros = jnp.zeros((n,), jnp.float32)
             res_rows = tuple(self._residuals.get(w, zeros) for w in names)
             self._flat, self.opt_state, new_res = fn(
                 self._flat, self.opt_state, gtrees, res_rows, ns,
-                np.asarray(self.step, np.int32))
+                np.asarray(self.step, np.int32), k_arr)
             for w, r in zip(names, new_res):
                 self._residuals[w] = r
-            self.last_wire_bytes = 8 * W * self.compressor.flat_k(n)
+            self.last_per_worker_bytes = {w: 8 * k_tot[w] for w in names}
+            self.last_wire_bytes = sum(self.last_per_worker_bytes.values())
         self._params_cache = None
         self.step += 1
         return self.params
 
     # ------------------------------------------------------------------
     def reduce_and_step(
-            self, messages: Dict[str, Tuple[PyTree, float]]) -> PyTree:
+            self, messages: Dict[str, Tuple[PyTree, float]],
+            keep: Optional[Dict[str, int]] = None) -> PyTree:
         """messages: {worker: (grad_sum, n)}. Returns the new params
-        (the broadcast payload of step (e))."""
+        (the broadcast payload of step (e)).
+
+        ``keep`` maps worker -> per-message keep total (entries, not
+        bytes) for bandwidth-adaptive per-worker compression; missing
+        workers fall back to the compressor's uniform frac. Values are
+        quantized onto ``GradientCompressor.k_lattice``; the actual
+        bytes shipped per worker land in ``last_per_worker_bytes``.
+        Requires the fused path AND a compressor (the dense path is the
+        uniform-frac reference)."""
         if self.fused:
-            return self._reduce_and_step_fused(messages)
+            return self._reduce_and_step_fused(messages, keep)
+        if keep:
+            raise ValueError("per-worker keep requires fused=True")
         return self._reduce_and_step_dense(messages)

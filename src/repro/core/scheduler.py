@@ -5,8 +5,10 @@ client and the master and informs the client worker how long it should run
 for. A client does not need to have a batch size because it just clocks its
 own computation and returns results at the end of its scheduled work time."
 
-The master keeps EWMA estimates of each worker's round-trip latency and
-power (vectors/second). For iteration duration T it schedules each worker a
+The master keeps EWMA estimates of each worker's round-trip latency,
+power (vectors/second), and uplink bandwidth (bytes/second, from measured
+reduce-step uploads — consumed by the adaptive compression controller in
+core/adaptive_frac.py). For iteration duration T it schedules each worker a
 compute budget  b_w = T - latency_w  (floored), so every reply lands inside
 the iteration ("asynchronous reduction callback delay" is thereby bounded).
 On a synchronous TPU mesh the same estimates convert to per-virtual-worker
@@ -22,8 +24,12 @@ from typing import Dict, Optional
 class WorkerStats:
     latency: float = 0.05          # seconds, EWMA round trip
     power: float = 100.0           # vectors / second, EWMA
+    bandwidth: float = 1e6         # uplink bytes / second, EWMA (fed from
+                                   # measured reduce-step upload time and
+                                   # the wire bytes the event loop logs)
     last_budget: float = 0.0       # seconds of compute scheduled
     total_vectors: int = 0
+    total_upload_bytes: float = 0.0
     iterations: int = 0
 
 
@@ -32,19 +38,23 @@ class AdaptiveScheduler:
 
     def __init__(self, T: float = 4.0, ewma: float = 0.5,
                  min_budget: float = 0.1,
-                 prior_power: float = 100.0, prior_latency: float = 0.05):
+                 prior_power: float = 100.0, prior_latency: float = 0.05,
+                 prior_bandwidth: float = 1e6):
         assert T > 0 and 0 < ewma <= 1
         self.T = T
         self.ewma = ewma
         self.min_budget = min_budget
         self.prior_power = prior_power
         self.prior_latency = prior_latency
+        self.prior_bandwidth = prior_bandwidth
         self.stats: Dict[str, WorkerStats] = {}
 
     # ------------------------------------------------------------------
     def add_worker(self, w: str) -> None:
         self.stats.setdefault(
-            w, WorkerStats(latency=self.prior_latency, power=self.prior_power))
+            w, WorkerStats(latency=self.prior_latency,
+                           power=self.prior_power,
+                           bandwidth=self.prior_bandwidth))
 
     def remove_worker(self, w: str) -> None:
         self.stats.pop(w, None)
@@ -63,13 +73,22 @@ class AdaptiveScheduler:
                                         self.T - s.latency)))
 
     def record(self, w: str, *, latency: float, vectors: int,
-               compute_time: float) -> None:
-        """Measurement feedback from one map-reduce round (paper step d)."""
+               compute_time: float, upload_bytes: float = 0.0,
+               upload_time: float = 0.0) -> None:
+        """Measurement feedback from one map-reduce round (paper step d).
+        ``upload_bytes``/``upload_time`` are the reduce-step message size
+        and its measured transfer time; together they grow the per-worker
+        uplink bandwidth EWMA that the adaptive compression controller
+        (core/adaptive_frac.py) maps to a keep-fraction."""
         s = self.stats[w]
         a = self.ewma
         s.latency = (1 - a) * s.latency + a * max(0.0, latency)
         if compute_time > 0:
             s.power = (1 - a) * s.power + a * (vectors / compute_time)
+        if upload_bytes > 0 and upload_time > 0:
+            s.bandwidth = ((1 - a) * s.bandwidth
+                           + a * (upload_bytes / upload_time))
+            s.total_upload_bytes += upload_bytes
         s.total_vectors += vectors
         s.iterations += 1
 

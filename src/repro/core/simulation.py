@@ -35,15 +35,21 @@ class DeviceProfile:
     latency_mean: float         # base one-way network latency (s)
     latency_jitter: float       # lognormal-ish jitter scale
     reliability: float = 1.0    # P(survive an iteration)
+    uplink_bps: float = 12.5e6  # worker->master uplink (bytes/sec): the
+                                # per-client link the adaptive compression
+                                # controller sizes messages for
 
 
-WORKSTATION = DeviceProfile("workstation", 400.0, 0.010, 0.20)
-LAPTOP = DeviceProfile("laptop", 150.0, 0.030, 0.40)
-PHONE = DeviceProfile("phone", 25.0, 0.120, 0.80, reliability=0.995)
+WORKSTATION = DeviceProfile("workstation", 400.0, 0.010, 0.20,
+                            uplink_bps=12.5e6)       # ~100 Mb/s ethernet
+LAPTOP = DeviceProfile("laptop", 150.0, 0.030, 0.40,
+                       uplink_bps=2.5e6)             # ~20 Mb/s wifi
+PHONE = DeviceProfile("phone", 25.0, 0.120, 0.80, reliability=0.995,
+                      uplink_bps=0.125e6)            # ~1 Mb/s cellular
 
 # Paper-faithful homogeneous grid node (i3-2120 workstations on a LAN): the
 # paper reports ~113 vectors/sec/node on MNIST (Fig. 4 slope).
-GRID_NODE = DeviceProfile("grid", 113.0, 0.005, 0.10)
+GRID_NODE = DeviceProfile("grid", 113.0, 0.005, 0.10, uplink_bps=125e6)
 
 
 @dataclass(frozen=True)
@@ -134,6 +140,14 @@ class SimulatedCluster:
         grad_sum, loss_sum = self.grad_fn(params, X[idx], y[idx])
         return ComputeResult(grad_sum, int(n), n / sw.profile.power_vps,
                              latency, float(loss_sum))
+
+    def upload_time(self, worker: str, nbytes: float) -> float:
+        """Seconds worker's reduce-step message spends on ITS uplink —
+        the per-client cost the adaptive compression controller adapts
+        to. Deterministic (the jittered part of the path is sampled in
+        ``_sample_latency``), so measured bandwidth EWMAs converge to the
+        profile's ``uplink_bps``."""
+        return float(nbytes) / self.workers[worker].profile.uplink_bps
 
     def broadcast(self, params: PyTree, workers: List[str]) -> float:
         return self.network.broadcast_time(len(workers))

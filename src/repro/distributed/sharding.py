@@ -208,7 +208,9 @@ def param_shardings(params: PyTree, cfg: ArchConfig, mesh: Mesh,
 # ---------------------------------------------------------------------------
 def batch_spec(mesh: Mesh, batch_size: int,
                layout: frozenset = frozenset()) -> P:
-    """Shard batch over (pod, data[, model if fsdp_remap]) when divisible."""
+    """Shard batch over (pod, data[, model if fsdp_remap]) when divisible.
+    An indivisible batch replicates: P(()) — explicitly sharded over no
+    axes (jax >= 0.4.35 no longer treats P(None) and P(()) as equal)."""
     axes = [a for a in batch_axes(mesh, layout)]
     keep = []
     prod = 1
@@ -216,13 +218,19 @@ def batch_spec(mesh: Mesh, batch_size: int,
         if batch_size % (prod * mesh.shape[a]) == 0:
             keep.append(a)
             prod *= mesh.shape[a]
-    return P(tuple(keep) if keep else None)
+    return P(tuple(keep))
+
+
+def batch_axis(spec: P):
+    """First (batch) dim entry of a batch spec, with the two 'replicated'
+    encodings — P(()) and P(None) — both normalized to None."""
+    return (spec[0] or None) if len(spec) else None
 
 
 def train_batch_specs(mesh: Mesh, batch_size: int) -> Dict[str, P]:
-    b = batch_spec(mesh, batch_size)
-    return {"tokens": P(b[0], None), "labels": P(b[0], None),
-            "mask": P(b[0], None)}
+    b = batch_axis(batch_spec(mesh, batch_size))
+    return {"tokens": P(b, None), "labels": P(b, None),
+            "mask": P(b, None)}
 
 
 def cache_specs(cache: PyTree, cfg: ArchConfig, mesh: Mesh,
@@ -236,7 +244,7 @@ def cache_specs(cache: PyTree, cfg: ArchConfig, mesh: Mesh,
     the SEQUENCE axis shards over it instead — mandatory for 32k-cache
     decode to fit v5e HBM on kv=8 archs (see EXPERIMENTS.md §Perf H3)."""
     bspec = batch_spec(mesh, batch_size)
-    baxis = bspec[0] if len(bspec) else None
+    baxis = batch_axis(bspec)
     data_free = baxis is None and "data" in mesh.axis_names
     msz = _model_size(mesh)
     kv_shardable = cfg.n_kv_heads and cfg.n_kv_heads % msz == 0

@@ -37,7 +37,7 @@ from repro.configs.shapes import SHAPE_REGISTRY
 from repro.distributed.hlo_analysis import (collective_bytes, count_ops,
                                             roofline_terms)
 from repro.distributed.activation_sharding import activation_sharding
-from repro.distributed.sharding import (batch_spec, cache_specs,
+from repro.distributed.sharding import (batch_axis, batch_spec, cache_specs,
                                         param_specs, parse_layout,
                                         to_shardings)
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
@@ -59,8 +59,7 @@ def build_mesh(args):
 
 
 def batch_shardings(batch_tree, mesh, B, layout=frozenset()):
-    bspec = batch_spec(mesh, B, layout)
-    baxis = bspec[0] if len(bspec) else None
+    baxis = batch_axis(batch_spec(mesh, B, layout))
 
     def rule(leaf):
         nd = len(leaf.shape)
@@ -103,8 +102,7 @@ def _lower_compile(cfg, shape, mesh, optimizer_name, remat, unroll,
     cfg = _apply_layout_cfg(cfg, layout)
     specs = input_specs_eff(cfg, shape)
     params_abs = tf.abstract_params(cfg)
-    bspec = batch_spec(mesh, shape.global_batch, layout)
-    bax = bspec[0] if len(bspec) else None
+    bax = batch_axis(batch_spec(mesh, shape.global_batch, layout))
     with mesh, activation_sharding(bax):
         return _lower_compile_inner(cfg, shape, mesh, optimizer_name,
                                     remat, unroll, specs, params_abs,
@@ -149,8 +147,18 @@ def _lower_compile_inner(cfg, shape, mesh, optimizer_name, remat, unroll,
                         cache_abs).compile()
 
 
-def _costs_of(compiled):
+def _cost_dict(compiled):
+    """Normalize ``compiled.cost_analysis()``: jax >= 0.4.33 returns one
+    properties-dict per executable program (a list); older versions return
+    the dict itself. Either way we want the (single) program's dict."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def _costs_of(compiled):
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     return {"flops": float(cost.get("flops", 0.0)),
@@ -232,8 +240,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
 
     params_abs = tf.abstract_params(cfg)
-    _bspec = batch_spec(mesh, shape.global_batch, lay)
-    _ctx_ax = _bspec[0] if len(_bspec) else None
+    _ctx_ax = batch_axis(batch_spec(mesh, shape.global_batch, lay))
     _ctx = activation_sharding(_ctx_ax)
     mesh.__enter__()
     _ctx.__enter__()
@@ -283,7 +290,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     _ctx.__exit__(None, None, None)
     mesh.__exit__(None, None, None)
 
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     flops = float(cost.get("flops", 0.0))
     hbm_bytes = float(cost.get("bytes accessed", 0.0))
     try:

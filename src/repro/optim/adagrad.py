@@ -5,6 +5,13 @@
 
 ``accum_dtype`` lets the accumulator be stored in bf16 — a memory-roofline
 lever used by the arctic-480b hillclimb (see EXPERIMENTS.md §Perf).
+
+``init_accum`` is G_0: with the textbook G_0 = 0 the very first update is
+lr * sign(g) for EVERY parameter regardless of gradient magnitude, which
+at lr ~ 0.05 overshoots a freshly-initialized transformer into an
+oscillating regime. Seeding the accumulator (TensorFlow's Adagrad ships
+0.1 for the same reason) bounds the cold-start step to
+lr * g / sqrt(init_accum). Default 0.0 keeps the cited formula exact.
 """
 from __future__ import annotations
 
@@ -15,10 +22,11 @@ from repro.optim.base import Optimizer
 
 
 def adagrad(lr: float = 0.01, eps: float = 1e-8,
-            accum_dtype=None) -> Optimizer:
+            accum_dtype=None, init_accum: float = 0.0) -> Optimizer:
     def init(params):
         return {"accum": jax.tree.map(
-            lambda p: jnp.zeros(p.shape, accum_dtype or jnp.float32), params),
+            lambda p: jnp.full(p.shape, init_accum,
+                               accum_dtype or jnp.float32), params),
             "step": jnp.zeros((), jnp.int32)}
 
     def update(params, grads, state):

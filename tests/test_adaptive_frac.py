@@ -1,0 +1,312 @@
+"""Bandwidth-adaptive per-worker compression (core/adaptive_frac.py):
+
+- controller math: frac_w monotone non-increasing in latency, monotone
+  non-decreasing in bandwidth, always inside [frac_min, frac_max];
+- power-of-two bucketing: however the controller moves, at most
+  ~log2(n) distinct keep counts (and hence jit traces) exist per layout;
+- hysteresis: EWMA noise inside the dead-band never re-buckets;
+- the fused reducer's ragged per-worker keep equals the per-worker
+  dense top-k oracle (payload AND error-feedback residuals);
+- event-loop integration: a 10x-bandwidth-spread fleet ends up with
+  bandwidth-ordered per-worker message sizes and exact wire accounting.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adaptive_frac import AdaptiveFracController
+from repro.core.compression import GradientCompressor, _flat_compress
+from repro.core.reducer import MasterReducer
+from repro.optim import sgd
+
+
+# ---------------------------------------------------------------------------
+# controller math
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(64, 1 << 20),
+       bw=st.floats(1.0, 1e9),
+       lat_lo=st.floats(0.0, 3.0), lat_hi=st.floats(0.0, 3.0))
+def test_frac_monotone_non_increasing_in_latency(n, bw, lat_lo, lat_hi):
+    ctl = AdaptiveFracController(T=1.0)
+    lo, hi = sorted((lat_lo, lat_hi))
+    assert ctl.frac_for(n, bw, lo) >= ctl.frac_for(n, bw, hi)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(64, 1 << 20),
+       lat=st.floats(0.0, 3.0),
+       bw_lo=st.floats(1.0, 1e9), bw_hi=st.floats(1.0, 1e9))
+def test_frac_monotone_non_decreasing_in_bandwidth(n, lat, bw_lo, bw_hi):
+    ctl = AdaptiveFracController(T=1.0)
+    lo, hi = sorted((bw_lo, bw_hi))
+    assert ctl.frac_for(n, hi, lat) >= ctl.frac_for(n, lo, lat)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(64, 1 << 20),
+       bw=st.floats(0.0, 1e12), lat=st.floats(0.0, 100.0))
+def test_frac_within_clamps(n, bw, lat):
+    ctl = AdaptiveFracController(T=0.5, frac_min=1 / 512, frac_max=0.2)
+    f = ctl.frac_for(n, bw, lat)
+    assert 1 / 512 <= f <= 0.2
+
+
+def test_assigned_keep_within_clamped_lattice():
+    """End-to-end: whatever (bw, latency) a worker reports, the bucketed
+    keep stays on the lattice and its frac inside the clamps (up to the
+    lattice floor below frac_min*n when that is not a power of two)."""
+    n = 31786
+    ctl = AdaptiveFracController(T=1.0, frac_min=1 / 1024, frac_max=0.25)
+    comp = GradientCompressor("topk", frac=0.01)
+    lattice = set(comp.k_lattice(n))
+    rng = np.random.RandomState(0)
+    for i in range(200):
+        bw = float(10 ** rng.uniform(0, 9))
+        lat = float(rng.uniform(0, 2))
+        k = ctl.assign_worker(f"w{i}", comp, n, bw, lat)
+        assert k in lattice
+        raw = ctl.target_k(n, bw, lat)
+        assert k <= max(raw, min(lattice))     # floored, never oversized
+        assert k <= math.ceil(0.25 * n)
+
+
+# ---------------------------------------------------------------------------
+# bucketing bounds the trace cache
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method,n", [("topk", 1000), ("randk", 4097),
+                                      ("blocktopk", 31786)])
+def test_lattice_is_log_sized(method, n):
+    comp = GradientCompressor(method, frac=0.01, block_w=128)
+    lat = comp.k_lattice(n)
+    assert list(lat) == sorted(set(lat))
+    bound = math.floor(math.log2(n)) + 2
+    assert len(lat) <= bound
+    # quantization maps EVERY raw k into the lattice
+    rng = np.random.RandomState(n)
+    for raw in 10 ** rng.uniform(0, np.log10(2 * n), size=100):
+        assert comp.quantize_k(n, float(raw)) in lat
+
+
+def test_compress_flat_traces_bounded_by_lattice():
+    """1000 different raw-k requests on one layout compile at most
+    log2(n)+2 distinct jitted compressors."""
+    n = 1000
+    comp = GradientCompressor("topk", frac=0.01)
+    _flat_compress.cache_clear()
+    g = jnp.asarray(np.random.RandomState(0).randn(n), jnp.float32)
+    rng = np.random.RandomState(1)
+    for raw in rng.randint(1, n + 1, size=1000):
+        comp.compress_flat(g, None, k=int(raw))
+    info = _flat_compress.cache_info()
+    assert info.currsize <= math.floor(math.log2(n)) + 2
+
+
+def test_reducer_step_fns_bounded_by_lattice():
+    """Ragged per-worker keeps retrace only on the PADDED max bucket:
+    a storm of different keep maps compiles <= log2(n)+2 step fns."""
+    n = 256
+    comp = GradientCompressor("topk", frac=0.05)
+    red = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=0.1),
+                        compressor=comp, fused=True)
+    g = {"w": jnp.ones(n)}
+    rng = np.random.RandomState(2)
+    for _ in range(40):
+        keep = {"a": int(rng.randint(1, n + 1)),
+                "b": int(rng.randint(1, n + 1))}
+        red.reduce_and_step({"a": (g, 1), "b": (g, 1)}, keep=keep)
+    assert len(red._step_fns) <= math.floor(math.log2(n)) + 2
+
+
+# ---------------------------------------------------------------------------
+# hysteresis
+# ---------------------------------------------------------------------------
+def test_hysteresis_holds_bucket_against_noise():
+    n = 4096
+    ctl = AdaptiveFracController(T=1.0, comm_frac=0.5,
+                                 hysteresis_down=0.25, hysteresis_up=0.05,
+                                 frac_min=1 / 2048, frac_max=0.5)
+    comp = GradientCompressor("topk", frac=0.01)
+    # bw=12000 -> raw k = 12000*0.5/8 = 750, mid-bucket for 512; a +-10%
+    # bandwidth wobble stays inside both hysteresis margins
+    k0 = ctl.assign_worker("w", comp, n, 12000.0, 0.0)
+    assert k0 == 512
+    rng = np.random.RandomState(3)
+    for _ in range(50):
+        bw = 12000.0 * (1.0 + 0.1 * rng.uniform(-1, 1))
+        assert ctl.assign_worker("w", comp, n, bw, 0.0) == k0
+    # a real 4x bandwidth move re-buckets upward...
+    assert ctl.assign_worker("w", comp, n, 48000.0, 0.0) > k0
+    # ...and a real collapse re-buckets downward
+    assert ctl.assign_worker("w", comp, n, 1200.0, 0.0) < k0
+
+
+def test_drop_worker_forgets_hysteresis_state():
+    ctl = AdaptiveFracController(T=1.0)
+    comp = GradientCompressor("topk", frac=0.01)
+    ctl.assign_worker("w", comp, 1024, 5000.0, 0.0)
+    assert "w" in ctl._last_k
+    ctl.drop_worker("w")
+    assert "w" not in ctl._last_k
+
+
+# ---------------------------------------------------------------------------
+# ragged per-worker keep == per-worker dense top-k oracle
+# ---------------------------------------------------------------------------
+def _topk_oracle(c: np.ndarray, k: int):
+    """(sent, residual) for one worker: keep the k largest-|.| entries
+    (ties -> lowest index, matching lax.top_k)."""
+    order = np.argsort(-np.abs(c), kind="stable")[:min(k, c.size)]
+    sent = np.zeros_like(c)
+    sent[order] = c[order]
+    return sent, c - sent
+
+
+def test_fused_reducer_ragged_keep_matches_oracle():
+    n = 257                       # odd length: no friendly alignment
+    rng = np.random.RandomState(7)
+    g = {w: {"w": jnp.asarray(rng.randn(n), jnp.float32)}
+         for w in ("a", "b", "c")}
+    keep = {"a": 8, "b": 64, "c": 256}
+    comp = GradientCompressor("topk", frac=0.5)
+    red = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=1.0),
+                        compressor=comp, fused=True)
+    red.reduce_and_step({w: (g[w], 1) for w in g}, keep=keep)
+
+    sent_sum = np.zeros(n)
+    for w in g:
+        c = np.asarray(g[w]["w"])
+        sent, res = _topk_oracle(c, keep[w])
+        sent_sum += sent
+        np.testing.assert_allclose(np.asarray(red._residuals[w]), res,
+                                   atol=1e-6)
+    # sgd(lr=1): params = -g_bar = -(sum sent)/3
+    np.testing.assert_allclose(np.asarray(red.flat_params),
+                               -sent_sum / 3.0, atol=1e-6)
+    assert red.last_per_worker_bytes == {w: 8 * k for w, k in keep.items()}
+    assert red.last_wire_bytes == 8 * sum(keep.values())
+
+
+def test_fused_reducer_ragged_keep_blocktopk_roundtrip():
+    """blocktopk with per-worker block-k: feedback invariant
+    sent + residual == grad + prev_residual holds per worker."""
+    n, block_w = 300, 32
+    rows = -(-n // block_w)
+    rng = np.random.RandomState(11)
+    g = {w: {"w": jnp.asarray(rng.randn(n), jnp.float32)}
+         for w in ("a", "b")}
+    keep = {"a": rows * 2, "b": rows * 16}
+    comp = GradientCompressor("blocktopk", frac=0.25, block_w=block_w)
+    red = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=1.0),
+                        compressor=comp, fused=True)
+    red.reduce_and_step({w: (g[w], 1) for w in g}, keep=keep)
+    total_sent = -2.0 * np.asarray(red.flat_params)     # lr=1, /sum(ns)=2
+    acc = np.zeros(n)
+    for w in g:
+        acc += np.asarray(g[w]["w"]) - np.asarray(red._residuals[w])
+    np.testing.assert_allclose(acc, total_sent, atol=1e-5)
+    assert red.last_per_worker_bytes == {"a": 8 * rows * 2,
+                                         "b": 8 * rows * 16}
+
+
+def test_uniform_keep_equals_legacy_uniform_path():
+    """keep={} / keep=None both reduce to the compressor's uniform frac:
+    identical params, residuals, and wire accounting."""
+    n = 128
+    rng = np.random.RandomState(5)
+    g = {"w": jnp.asarray(rng.randn(n), jnp.float32)}
+    out = []
+    for keep in (None, {}):
+        comp = GradientCompressor("topk", frac=0.1)
+        red = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=0.5),
+                            compressor=comp, fused=True)
+        for _ in range(3):
+            red.reduce_and_step({"x": (g, 1), "y": (g, 1)}, keep=keep)
+        out.append((np.asarray(red.flat_params), red.last_wire_bytes))
+    np.testing.assert_array_equal(out[0][0], out[1][0])
+    assert out[0][1] == out[1][1]
+
+
+def test_dense_path_rejects_keep():
+    red = MasterReducer({"w": jnp.zeros(8)}, sgd(lr=0.1),
+                        compressor=GradientCompressor("topk", frac=0.5),
+                        fused=False)
+    with pytest.raises(ValueError):
+        red.reduce_and_step({"a": ({"w": jnp.ones(8)}, 1)}, keep={"a": 2})
+
+
+def test_uncompressed_fused_path_rejects_keep():
+    red = MasterReducer({"w": jnp.zeros(8)}, sgd(lr=0.1), fused=True)
+    with pytest.raises(ValueError):
+        red.reduce_and_step({"a": ({"w": jnp.ones(8)}, 1)}, keep={"a": 2})
+
+
+# ---------------------------------------------------------------------------
+# event-loop integration
+# ---------------------------------------------------------------------------
+def test_event_loop_adapts_to_bandwidth_spread():
+    from repro.core import (JoinEvent, MasterEventLoop, UploadDataEvent)
+    from repro.core.scheduler import AdaptiveScheduler
+    from repro.core.simulation import (DeviceProfile, SimulatedCluster,
+                                       make_cnn_problem)
+    from repro.data.datasets import synthetic_mnist
+    from repro.optim import adagrad
+
+    init_p, grad_fn, _ = make_cnn_problem()
+    X, y = synthetic_mnist(600, seed=0)
+    comp = GradientCompressor("topk", frac=0.01)
+    red = MasterReducer(init_p(jax.random.PRNGKey(0)), adagrad(lr=0.02),
+                        compressor=comp, fused=True)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=0)
+    ctl = AdaptiveFracController(T=0.5, comm_frac=0.5, frac_min=1 / 2048,
+                                 frac_max=0.12)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster, frac_controller=ctl,
+        scheduler=AdaptiveScheduler(T=0.5, prior_power=113,
+                                    prior_bandwidth=6e3))
+    loop.submit(UploadDataEvent(range(600)))
+    bws = [6e4, 2e4, 6e3]
+    for i, bw in enumerate(bws):
+        cluster.add_worker(f"w{i}", DeviceProfile(f"d{i}", 113.0, 0.005,
+                                                  0.05, uplink_bps=bw))
+        loop.submit(JoinEvent(f"w{i}", capacity=600))
+    logs = loop.run(8)
+    last = logs[-1].per_worker_wire_bytes
+    sizes = [last[f"w{i}"] for i in range(3)]
+    assert sizes == sorted(sizes, reverse=True) and len(set(sizes)) >= 2
+    assert logs[-1].wire_bytes == sum(sizes)
+    assert logs[-1].max_upload > 0
+    # measured bandwidth EWMAs converged onto the device uplinks
+    for i, bw in enumerate(bws):
+        est = loop.scheduler.stats[f"w{i}"].bandwidth
+        assert abs(est - bw) / bw < 0.05, (i, est, bw)
+
+
+def test_controller_requires_fused_compressed_reducer():
+    from repro.core import MasterEventLoop
+    from repro.core.simulation import SimulatedCluster
+
+    red = MasterReducer({"w": jnp.zeros(4)}, sgd(lr=0.1))  # no compressor
+    with pytest.raises(ValueError):
+        MasterEventLoop(reducer=red,
+                        cluster=SimulatedCluster(mode="synthetic"),
+                        frac_controller=AdaptiveFracController())
+
+
+def test_event_loop_syncs_controller_T_to_scheduler():
+    from repro.core import MasterEventLoop
+    from repro.core.scheduler import AdaptiveScheduler
+    from repro.core.simulation import SimulatedCluster
+
+    red = MasterReducer({"w": jnp.zeros(4)}, sgd(lr=0.1),
+                        compressor=GradientCompressor("topk", frac=0.5))
+    ctl = AdaptiveFracController()            # default T=4.0
+    MasterEventLoop(reducer=red, cluster=SimulatedCluster(mode="synthetic"),
+                    scheduler=AdaptiveScheduler(T=0.5),
+                    frac_controller=ctl)
+    assert ctl.T == 0.5

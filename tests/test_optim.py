@@ -24,6 +24,29 @@ def test_adagrad_formula():
     assert int(st["step"]) == 2
 
 
+def test_adagrad_init_accum_bounds_cold_start():
+    """With G_0 = 0 the first update is lr*sign(g) no matter how small
+    the gradient; init_accum caps it at lr*|g|/sqrt(init_accum) — the
+    stabilization the LM train-step test relies on."""
+    g = {"w": jnp.asarray([1e-4, -1e-3, 1e-2])}
+    p = {"w": jnp.zeros(3)}
+    # default: full sign-step regardless of |g|
+    opt0 = adagrad(lr=0.05)
+    p0, _ = opt0.update(p, g, opt0.init(p))
+    np.testing.assert_allclose(np.abs(np.asarray(p0["w"])), 0.05,
+                               rtol=1e-4)
+    # seeded accumulator: step scales with |g| and is bounded
+    opt1 = adagrad(lr=0.05, init_accum=0.1)
+    p1, st = opt1.update(p, g, opt1.init(p))
+    expect = 0.05 * np.abs(np.asarray(g["w"])) / np.sqrt(
+        0.1 + np.asarray(g["w"]) ** 2)
+    np.testing.assert_allclose(np.abs(np.asarray(p1["w"])), expect,
+                               rtol=1e-5)
+    assert np.all(np.abs(np.asarray(p1["w"]))
+                  <= 0.05 * np.abs(np.asarray(g["w"])) / np.sqrt(0.1)
+                  + 1e-12)
+
+
 def test_adagrad_bf16_accumulator_option():
     opt = adagrad(lr=0.1, accum_dtype=jnp.bfloat16)
     p = {"w": jnp.ones((8,), jnp.bfloat16)}
