@@ -1,2 +1,3 @@
-from repro.checkpoint.io import (load_closure, load_npz,  # noqa: F401
-                                 save_closure, save_npz)
+from repro.checkpoint.io import (TrainState, load_closure,  # noqa: F401
+                                 load_npz, load_train_state, save_closure,
+                                 save_npz, save_train_state)

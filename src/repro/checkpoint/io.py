@@ -1,14 +1,26 @@
-"""Checkpoint store: research-closure JSON (universal) + npz fast path.
+"""Checkpoint store: research-closure JSON (universal) + npz fast path,
+plus the full-training-state TrainState snapshot for churn-safe resume.
 
 The JSON closure is the paper-faithful archive ("models saved in
 universally readable formats"); the npz sidecar is the production fast
 path for large parameter trees (same content, binary container).
+
+TrainState (docs/elastic_training.md) is everything a crash would lose
+beyond bare params: optimizer state, per-worker error-feedback residuals
+keyed by worker id, scheduler latency/power/bandwidth EWMAs, the adaptive
+compression controller's hysteresis buckets, the allocator's full
+index->worker assignment, the worker registry, pending membership events,
+the iteration history, step/clock counters, and (optionally) the
+simulated cluster's RNG streams. The resume contract: rebuild the same
+components from config, ``restore`` the snapshot, and the continued run
+is BIT-EXACT with the uninterrupted one (tests/test_churn.py).
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -18,6 +30,8 @@ from repro.core.closure import (ResearchClosure, config_from_json,
                                 config_to_json)
 
 PyTree = Any
+
+TRAIN_STATE_VERSION = 1
 
 
 def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, np.ndarray]:
@@ -55,6 +69,100 @@ def load_npz(path: str) -> Tuple[PyTree, Dict[str, Any]]:
         header = json.loads(str(z["__header__"]))
         flat = {k: z[k] for k in z.files if k != "__header__"}
     return _unflatten(flat), header
+
+
+# ---------------------------------------------------------------------------
+# TrainState: full-state snapshot for churn-safe, bit-exact resume
+# ---------------------------------------------------------------------------
+def _pack(obj: Any, path: str, arrays: Dict[str, np.ndarray]) -> Any:
+    """Split a state_dict into a JSON-safe skeleton + named arrays.
+    Arrays are replaced by ``{"__array__": key}`` placeholders and stored
+    losslessly in the npz container; python floats ride JSON's repr
+    round-trip, which is exact."""
+    # numpy scalars become python scalars BEFORE the generic __array__
+    # check, or they would round-trip as 0-d arrays and break the
+    # bit-exact type contract
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if isinstance(obj, np.ndarray):
+        arrays[path] = obj
+        return {"__array__": path}
+    if hasattr(obj, "__array__") and not isinstance(obj, (int, float,
+                                                          bool, str)):
+        arrays[path] = np.asarray(obj)
+        return {"__array__": path}
+    if isinstance(obj, dict):
+        return {str(k): _pack(v, f"{path}/{k}", arrays)
+                for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_pack(v, f"{path}/{i}", arrays)
+                for i, v in enumerate(obj)]
+    return obj
+
+
+def _unpack(obj: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    if isinstance(obj, dict):
+        if set(obj) == {"__array__"}:
+            return arrays[obj["__array__"]]
+        return {k: _unpack(v, arrays) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unpack(v, arrays) for v in obj]
+    return obj
+
+
+@dataclass
+class TrainState:
+    """A serializable snapshot of one master event loop (and optionally
+    its simulated cluster) at an iteration boundary."""
+    loop: Dict[str, Any]
+    cluster: Optional[Dict[str, Any]] = None
+    version: int = TRAIN_STATE_VERSION
+
+    @classmethod
+    def capture(cls, loop, cluster=None) -> "TrainState":
+        """Snapshot ``loop.state_dict()`` (+ the cluster's RNG streams
+        when given — required for bit-exact simulated resume)."""
+        return cls(loop=loop.state_dict(),
+                   cluster=None if cluster is None
+                   else cluster.state_dict())
+
+    def restore(self, loop, cluster=None) -> None:
+        """Load this snapshot into freshly-constructed components (same
+        config as the original run — see the resume contract in
+        docs/elastic_training.md)."""
+        if (cluster is None) != (self.cluster is None):
+            # a silent skip here would hand back fresh RNG streams and
+            # quietly break the bit-exact resume contract
+            raise ValueError(
+                "cluster mismatch: snapshot "
+                f"{'has' if self.cluster is not None else 'lacks'} cluster "
+                f"state but restore() was "
+                f"{'not ' if cluster is None else ''}given a cluster")
+        loop.load_state_dict(self.loop)
+        if cluster is not None:
+            cluster.load_state_dict(self.cluster)
+
+
+def save_train_state(path: str, state: TrainState) -> None:
+    arrays: Dict[str, np.ndarray] = {}
+    skeleton = _pack({"version": state.version, "loop": state.loop,
+                      "cluster": state.cluster}, "s", arrays)
+    np.savez(path, __train_state__=json.dumps(skeleton), **arrays)
+
+
+def load_train_state(path: str) -> TrainState:
+    with np.load(path, allow_pickle=False) as z:
+        skeleton = json.loads(str(z["__train_state__"]))
+        arrays = {k: z[k] for k in z.files if k != "__train_state__"}
+    obj = _unpack(skeleton, arrays)
+    if int(obj["version"]) != TRAIN_STATE_VERSION:
+        raise ValueError(f"unsupported TrainState version {obj['version']}")
+    return TrainState(loop=obj["loop"], cluster=obj["cluster"],
+                      version=int(obj["version"]))
 
 
 def save_closure(path: str, closure: ResearchClosure,

@@ -110,3 +110,12 @@ class AdaptiveFracController:
 
     def drop_worker(self, worker: str) -> None:
         self._last_k.pop(worker, None)
+
+    # -- TrainState snapshot (docs/elastic_training.md) ----------------
+    def state_dict(self) -> Dict[str, int]:
+        """The hysteresis memory is the controller's only mutable state
+        (config is re-supplied by the resuming harness)."""
+        return {"last_k": dict(self._last_k)}
+
+    def load_state_dict(self, st) -> None:
+        self._last_k = {w: int(k) for w, k in st["last_k"].items()}

@@ -113,9 +113,11 @@ class DataAllocator:
         need = target - len(self.workers[new_w].allocated)
         if need <= 0:
             return
-        # 1) indices the new worker already caches move free of transfer cost
-        cached_here = [i for i in self.workers[new_w].cached
-                       if self.owner.get(i) not in (None, new_w)]
+        # 1) indices the new worker already caches move free of transfer
+        # cost (sorted: set iteration order depends on insertion history,
+        # which a TrainState resume cannot reproduce)
+        cached_here = sorted(i for i in self.workers[new_w].cached
+                             if self.owner.get(i) not in (None, new_w))
         for idx in cached_here[:need]:
             self._assign(idx, new_w)
             need -= 1
@@ -131,7 +133,8 @@ class DataAllocator:
             for d in donors:
                 if need <= 0:
                     break
-                idx = next(iter(self.workers[d].allocated))
+                # min(): deterministic under resume, unlike raw set order
+                idx = min(self.workers[d].allocated)
                 self._assign(idx, new_w)
                 need -= 1
 
@@ -156,6 +159,31 @@ class DataAllocator:
                 self._assign(idx, best)
         self._drain_unallocated()
         return orphans
+
+    # ------------------------------------------------------------------
+    # TrainState snapshot (docs/elastic_training.md). Worker dict ORDER is
+    # part of the state: tie-breaks in _drain_unallocated follow it.
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, object]:
+        return {
+            "workers": {w: {"capacity": a.capacity,
+                            "allocated": sorted(a.allocated),
+                            "cached": sorted(a.cached)}
+                        for w, a in self.workers.items()},
+            "owner": [[int(i), o] for i, o in sorted(self.owner.items())],
+            "unallocated": sorted(self.unallocated),
+            "transfers": self.transfers,
+        }
+
+    def load_state_dict(self, st) -> None:
+        self.workers = {
+            w: WorkerAlloc(capacity=int(d["capacity"]),
+                           allocated=set(int(i) for i in d["allocated"]),
+                           cached=set(int(i) for i in d["cached"]))
+            for w, d in st["workers"].items()}
+        self.owner = {int(i): o for i, o in st["owner"]}
+        self.unallocated = set(int(i) for i in st["unallocated"])
+        self.transfers = int(st["transfers"])
 
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:

@@ -11,8 +11,8 @@ boundary (footnote 5: the master knows immediately when a tab closes).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 
 @dataclass(frozen=True)
@@ -74,3 +74,13 @@ class WorkerRegistry:
     def __contains__(self, worker: str) -> bool:
         r = self.records.get(worker)
         return r is not None and r.live
+
+    # -- TrainState snapshot (docs/elastic_training.md) ----------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {"records": {w: asdict(r) for w, r in self.records.items()}}
+
+    def load_state_dict(self, st: Dict[str, Any]) -> None:
+        self.records = {
+            w: WorkerRecord(d["worker"], int(d["capacity"]),
+                            int(d["joined_at_step"]), bool(d["live"]))
+            for w, d in st["records"].items()}

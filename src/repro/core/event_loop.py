@@ -16,7 +16,7 @@ return gradient sums over however many vectors they managed.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 
 import jax
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
@@ -70,6 +70,8 @@ class IterationLog:
                                  # the reducer's channel compresses)
     per_worker_wire_bytes: Dict[str, int] = field(default_factory=dict)
     max_upload: float = 0.0      # slowest worker's reduce-step upload (s)
+    n_late: int = 0              # workers excluded by the deadline
+    deadline: Optional[float] = None   # this iteration's close time (s)
 
 
 class MasterEventLoop:
@@ -77,11 +79,20 @@ class MasterEventLoop:
                  scheduler: Optional[AdaptiveScheduler] = None,
                  allocator: Optional[DataAllocator] = None,
                  frac_controller: Optional["AdaptiveFracController"] = None,
-                 T: float = 4.0):
+                 T: float = 4.0,
+                 deadline_quantile: Optional[float] = None,
+                 deadline_slack: float = 1.5):
         self.reducer = reducer
         self.cluster = cluster
         self.scheduler = scheduler or AdaptiveScheduler(T=T)
         self.allocator = allocator or DataAllocator()
+        # deadline-based partial participation (docs/elastic_training.md):
+        # when set, each iteration closes at scheduler.deadline(live,
+        # quantile, slack); replies landing later are excluded from the
+        # reduce and their mass parks in the worker's error-feedback
+        # residual. None = stall-on-slowest (the paper's behavior).
+        self.deadline_quantile = deadline_quantile
+        self.deadline_slack = deadline_slack
         # measurement -> controller -> per-worker channel: scales each
         # worker's keep-fraction to its measured uplink (needs the fused
         # compressed channel; ignored otherwise)
@@ -132,10 +143,28 @@ class MasterEventLoop:
         return notes
 
     # ------------------------------------------------------------------
+    def _predicted_wire_bytes(self, worker: str,
+                              keep: Optional[Dict[str, int]],
+                              grad: PyTree) -> int:
+        """Exact bytes the reducer will account for this worker's message
+        — computable BEFORE the reduce, so upload time participates in the
+        deadline classification."""
+        red = self.reducer
+        if red.compressor is None:
+            return 4 * red.flat_n
+        if red.fused:
+            return 8 * red.compressor.flat_k(red.flat_n,
+                                             (keep or {}).get(worker))
+        return red.compressor.wire_bytes(grad)
+
     def iteration(self) -> IterationLog:
         notes = self._process_events()                           # (a),(b)
+        self.step += 1
         workers = self.registry.live_workers()
         if not workers:
+            # an empty-fleet iteration still advances the step counter:
+            # consecutive empty iterations must not emit duplicate step
+            # numbers in the history
             log = IterationLog(self.step, self.scheduler.T, 0, 0, 0.0, 0.0,
                                float("nan"), notes)
             self.clock += self.scheduler.T
@@ -143,13 +172,18 @@ class MasterEventLoop:
             return log
 
         # ---- map phase: budgeted local gradient accumulation ----
+        budgets = {w: self.scheduler.budget(w) for w in workers}  # (d) out
+        deadline = None
+        if self.deadline_quantile is not None:
+            deadline = self.scheduler.deadline(
+                workers, self.deadline_quantile, self.deadline_slack)
         messages: Dict[str, Tuple[PyTree, float]] = {}
         results: Dict[str, ComputeResult] = {}
         died: List[str] = []
         for w in workers:
-            budget = self.scheduler.budget(w)                    # (d) output
             idx = sorted(self.allocator.workers[w].allocated)
-            res = self.cluster.compute(w, self.reducer.params, budget, idx)
+            res = self.cluster.compute(w, self.reducer.params, budgets[w],
+                                       idx)
             if res is None:
                 died.append(w)
                 continue
@@ -161,63 +195,173 @@ class MasterEventLoop:
             self.submit(LeaveEvent(w))
             notes.append(f"lost:{w}")
 
-        # ---- (c) reduce step ----
-        loss = float("nan")
-        wire_bytes = 0
-        per_bytes: Dict[str, int] = {}
-        vectors = sum(r.n_vectors for r in results.values())
         # synthetic-compute clusters send empty gradient trees (throughput
         # studies): count vectors but skip the parameter update
         has_grads = any(
             len(jax.tree.leaves(g)) > 0 for g, _ in messages.values()
         ) if messages else False
-        if messages and has_grads:
-            keep = None
-            if self.frac_controller is not None:
-                # bandwidth/latency estimates from step (d) of PREVIOUS
-                # iterations pick this iteration's per-worker keep counts
-                keep = self.frac_controller.assign(
-                    self.reducer.compressor, self.reducer.flat_n,
-                    {w: self.scheduler.stats[w] for w in messages})
-            self.reducer.reduce_and_step(messages, keep=keep)
-            wire_bytes = self.reducer.last_wire_bytes
-            per_bytes = dict(self.reducer.last_per_worker_bytes)
-            tot = sum(n for _, n in messages.values())
-            loss = sum(r.loss_sum for r in results.values()) / max(tot, 1)
 
-        # ---- (d) latency + bandwidth monitoring ----
-        upload_fn = getattr(self.cluster, "upload_time", None)
+        # per-worker keep counts must precede the deadline split: message
+        # size decides upload time, which decides who makes the deadline
+        keep = None
+        if self.frac_controller is not None and messages and has_grads:
+            # bandwidth/latency estimates from step (d) of PREVIOUS
+            # iterations pick this iteration's per-worker keep counts
+            keep = self.frac_controller.assign(
+                self.reducer.compressor, self.reducer.flat_n,
+                {w: self.scheduler.stats[w] for w in messages})
+
+        # ---- deadline classification: who makes the reduce? ----
         uploads: Dict[str, float] = {}
+        upbytes: Dict[str, int] = {}
+        finishes: Dict[str, float] = {}
+        upload_fn = getattr(self.cluster, "upload_time", None)
         for w, r in results.items():
-            nbytes = per_bytes.get(w, 0)
+            nbytes = (self._predicted_wire_bytes(w, keep, messages[w][0])
+                      if w in messages and has_grads else 0)
             t_up = (upload_fn(w, nbytes)
                     if upload_fn is not None and nbytes else 0.0)
             uploads[w] = t_up
+            upbytes[w] = nbytes
+            finishes[w] = r.latency + r.compute_time + t_up
+        late = (sorted(w for w, f in finishes.items() if f > deadline)
+                if deadline is not None else [])
+        for w in late:
+            notes.append(f"late:{w}")
+
+        # ---- (c) reduce step (on-time workers only) ----
+        loss = float("nan")
+        wire_bytes = 0
+        per_bytes: Dict[str, int] = {}
+        on_time = {w: r for w, r in results.items() if w not in late}
+        vectors = sum(r.n_vectors for r in on_time.values())
+        if messages and has_grads:
+            late_msgs = [w for w in late if w in messages]
+            if len(late_msgs) < len(messages):
+                if self.reducer.fused:
+                    # late workers ride the reduce dispatch live-masked
+                    # to zero; their corrected gradient parks in their
+                    # error-feedback residual
+                    self.reducer.reduce_and_step(messages, keep=keep,
+                                                 defer=late_msgs)
+                else:
+                    # dense path: residual-preserve late mass when a
+                    # compressor channel exists, else drop it
+                    if self.reducer.compressor is not None:
+                        for w in late_msgs:
+                            self.reducer.defer_to_residual(
+                                w, messages[w][0])
+                    self.reducer.reduce_and_step(
+                        {w: m for w, m in messages.items()
+                         if w not in late}, keep=keep)
+                wire_bytes = self.reducer.last_wire_bytes
+                per_bytes = dict(self.reducer.last_per_worker_bytes)
+                tot = sum(messages[w][1] for w in messages
+                          if w not in late)
+                loss = (sum(r.loss_sum for w, r in on_time.items())
+                        / max(tot, 1))
+            elif self.reducer.supports_defer:
+                # every reply missed the deadline: no update this
+                # iteration, but none of the mass is lost
+                for w in late_msgs:
+                    self.reducer.defer_to_residual(w, messages[w][0])
+
+        # ---- (d) latency + bandwidth monitoring ----
+        # late workers are still measured — their message DID transit the
+        # uplink, just past the deadline — so the latency/bandwidth/
+        # upload EWMAs keep learning and the next deadline/budget/keep
+        # decisions adapt (an all-late fleet must not livelock)
+        for w, r in results.items():
+            nbytes = upbytes[w]
             self.scheduler.record(w, latency=r.latency,
                                   vectors=r.n_vectors,
                                   compute_time=r.compute_time,
                                   upload_bytes=float(nbytes),
-                                  upload_time=t_up)
+                                  upload_time=uploads[w] if nbytes else 0.0)
 
         # ---- (e) broadcast ----
         bc_time = self.cluster.broadcast(self.reducer.params,
                                          [w for w in workers
                                           if w not in died])
 
-        wall = max([self.scheduler.T]
-                   + [r.latency + r.compute_time + uploads.get(w, 0.0)
-                      for w, r in results.items()]) + bc_time
+        # the master closes when the last reply lands or at the deadline,
+        # whichever is first — one straggler no longer sets the wall-clock
+        slowest = max(finishes.values()) if finishes else self.scheduler.T
+        if deadline is not None:
+            slowest = min(slowest, deadline)
+        wall = max(self.scheduler.T, slowest) + bc_time
         self.clock += wall
-        self.step += 1
         lat = ([r.latency for r in results.values()] or [0.0])
         log = IterationLog(
-            step=self.step, wall_time=wall, n_workers=len(results),
+            step=self.step, wall_time=wall, n_workers=len(on_time),
             vectors=vectors, power=vectors / wall,
             mean_latency=sum(lat) / len(lat), loss=loss, events=notes,
             wire_bytes=wire_bytes, per_worker_wire_bytes=per_bytes,
-            max_upload=max(uploads.values()) if uploads else 0.0)
+            max_upload=max(uploads.values()) if uploads else 0.0,
+            n_late=len(late), deadline=deadline)
         self.history.append(log)
         return log
+
+    # ------------------------------------------------------------------
+    # TrainState snapshot (docs/elastic_training.md). The loop composes
+    # its components' state; checkpoint/io.py serializes the result.
+    # Constructor wiring (reducer/cluster/optimizer/T/deadline config) is
+    # re-supplied by the resuming harness; everything MUTABLE lives here.
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        events: List[Dict[str, Any]] = []
+        for ev in self.events._pending:
+            if isinstance(ev, JoinEvent):
+                events.append({"type": "join", "worker": ev.worker,
+                               "capacity": ev.capacity})
+            elif isinstance(ev, LeaveEvent):
+                events.append({"type": "leave", "worker": ev.worker})
+            elif isinstance(ev, UploadDataEvent):
+                events.append({"type": "data",
+                               "indices": [int(i) for i in ev.indices]})
+        st = {
+            "step": self.step,
+            "clock": self.clock,
+            "history": [asdict(l) for l in self.history],
+            "pending_events": events,
+            "registry": self.registry.state_dict(),
+            "scheduler": self.scheduler.state_dict(),
+            "allocator": self.allocator.state_dict(),
+            "reducer": self.reducer.state_dict(),
+        }
+        if self.frac_controller is not None:
+            st["frac_controller"] = self.frac_controller.state_dict()
+        return st
+
+    def load_state_dict(self, st: Dict[str, Any]) -> None:
+        self.step = int(st["step"])
+        self.clock = float(st["clock"])
+        self.history = [IterationLog(**l) for l in st["history"]]
+        self.events = EventQueue()
+        for ev in st["pending_events"]:
+            if ev["type"] == "join":
+                self.events.push(JoinEvent(ev["worker"],
+                                           int(ev["capacity"])))
+            elif ev["type"] == "leave":
+                self.events.push(LeaveEvent(ev["worker"]))
+            else:
+                self.events.push(UploadDataEvent(
+                    [int(i) for i in ev["indices"]]))
+        self.registry.load_state_dict(st["registry"])
+        self.scheduler.load_state_dict(st["scheduler"])
+        self.allocator.load_state_dict(st["allocator"])
+        self.reducer.load_state_dict(st["reducer"])
+        if (self.frac_controller is None) != ("frac_controller" not in st):
+            # dropping the hysteresis memory silently would make the
+            # resumed run re-bucket differently — fail loudly instead
+            raise ValueError(
+                "frac_controller mismatch: snapshot "
+                f"{'has' if 'frac_controller' in st else 'lacks'} "
+                f"controller state but this loop was built "
+                f"{'without' if self.frac_controller is None else 'with'} "
+                f"one")
+        if self.frac_controller is not None:
+            self.frac_controller.load_state_dict(st["frac_controller"])
 
     # ------------------------------------------------------------------
     def run(self, n_iterations: int,

@@ -20,10 +20,26 @@ Two execution paths:
   sparsify, packed emission, residual update) runs over the stacked
   (num_workers, n) buffer, and the reduce is a single scatter-add
   segment-sum followed by the optimizer step — ALL inside one jitted
-  function per (worker count, max keep bucket). O(1) dispatches per
+  function per (worker CAPACITY, max keep bucket). O(1) dispatches per
   iteration instead of O(workers x leaves). Ragged per-worker keeps
   (bandwidth-adaptive ``frac_w``, core/adaptive_frac.py) ride the same
   dispatch: pad-to-the-largest-bucket plus a runtime mask, no retrace.
+
+  The worker axis is CAPACITY-PADDED for churn (docs/elastic_training.md):
+  the step fn is traced for ``W_cap`` = the next power of two >= the
+  largest worker count seen (monotone non-decreasing), and the actual
+  fleet occupies the first W rows. Vacant rows carry zero gradients,
+  zero residuals, ``n_w = 0`` and ``k_w = 0``, so they are exact no-ops
+  in the segment-sum. Joins/leaves/deaths therefore stop re-tracing the
+  hot path: the trace cache is bounded by the number of distinct
+  ``(W_cap, k bucket)`` pairs, not by the number of membership events.
+
+  The same runtime mask implements DEADLINE-LATE workers (partial
+  participation, core/event_loop.py): a worker named in ``defer=`` is
+  stacked with the fleet but masked to ``k_w = 0`` and ``n_w = 0`` — it
+  contributes exactly zero to the weighted average while its ENTIRE
+  corrected gradient ``g + r`` lands in its error-feedback residual, so
+  the excluded mass ships the next time the worker makes the deadline.
 
 - **dense (``fused=False``).** The original per-worker Python loop over
   ``jax.tree.map`` with the leaf-wise compressor ``roundtrip`` — kept as
@@ -52,6 +68,10 @@ from repro.kernels.topk_compress import fused_block_topk_batched
 from repro.optim.base import Optimizer
 
 PyTree = Any
+
+# step-fn cache key for the live-masked uncompressed variant (compressed
+# variants key on their kmax >= 1; None keys the plain uncompressed fn)
+MASKED_UNCOMPRESSED = -1
 
 
 def weighted_reduce(messages: Sequence[Tuple[PyTree, float]]) -> PyTree:
@@ -88,7 +108,10 @@ class MasterReducer:
             self.opt_state = optimizer.init(self._flat)
             self._unflatten = jax.jit(self._spec.unflatten)
             self._params_cache: Optional[PyTree] = None
-            self._step_fns: Dict[Tuple[int, bool], Any] = {}
+            self._step_fns: Dict[Tuple[int, Optional[int]], Any] = {}
+            self._w_cap = 0              # monotone worker-axis capacity
+            self._zero_tree: Optional[PyTree] = None
+            self.trace_count = 0         # step-fn builds == jit traces
         else:
             self._params = params
             self.opt_state = optimizer.init(params)
@@ -120,6 +143,42 @@ class MasterReducer:
         self._residuals.pop(worker, None)
 
     # ------------------------------------------------------------------
+    # churn support: capacity bucketing + deadline deferral
+    # ------------------------------------------------------------------
+    def _capacity(self, W: int) -> int:
+        """Power-of-two worker-axis capacity, monotone non-decreasing so
+        fleet shrinkage never re-traces."""
+        cap = 1 << max(0, (W - 1).bit_length())
+        self._w_cap = max(self._w_cap, cap)
+        return self._w_cap
+
+    def _zero_gtree(self) -> PyTree:
+        """Cached all-zeros gradient tree filling a vacant capacity row."""
+        if self._zero_tree is None:
+            self._zero_tree = jax.tree.unflatten(
+                self._spec.treedef,
+                [jnp.zeros(s, jnp.float32) for s in self._spec.shapes])
+        return self._zero_tree
+
+    def defer_to_residual(self, worker: str, grad: PyTree) -> None:
+        """Fold a late/deadline-missed worker's ENTIRE gradient into its
+        error-feedback residual without an optimizer step — used when no
+        on-time message exists to anchor a reduce. The mass ships the
+        next time the worker participates."""
+        if self.fused:
+            flat = self._spec.flatten(grad)
+            res = self._residuals.get(worker)
+            self._residuals[worker] = flat if res is None else res + flat
+        else:
+            res = self._residuals.get(worker)
+            if res is None:
+                self._residuals[worker] = jax.tree.map(
+                    lambda g: g.astype(jnp.float32), grad)
+            else:
+                self._residuals[worker] = jax.tree.map(
+                    lambda r, g: r + g.astype(jnp.float32), res, grad)
+
+    # ------------------------------------------------------------------
     # dense reference path
     # ------------------------------------------------------------------
     def _channel(self, worker: str, grad: PyTree) -> PyTree:
@@ -149,13 +208,20 @@ class MasterReducer:
     # ------------------------------------------------------------------
     # fused flat-buffer path
     # ------------------------------------------------------------------
-    def _build_step_fn(self, W: int, kmax: Optional[int]):
-        """One jitted fn per (worker count, padded keep count). EVERYTHING
-        between receiving the worker trees and the new parameter buffer
-        happens inside this single dispatch: per-worker ravel into the
-        flat layout, the compression channel (error-feedback add +
-        sparsify + packed emission + residual update), the scatter-add
-        segment-sum reduce, and the optimizer step.
+    def _build_step_fn(self, W_cap: int, kmax: Optional[int]):
+        """One jitted fn per (worker-axis capacity, padded keep count).
+        EVERYTHING between receiving the worker trees and the new
+        parameter buffer happens inside this single dispatch: per-worker
+        ravel into the flat layout, the compression channel (error-
+        feedback add + sparsify + packed emission + residual update), the
+        scatter-add segment-sum reduce, and the optimizer step.
+
+        The worker axis is padded to ``W_cap`` (power-of-two, monotone
+        across the reducer's lifetime): the live fleet occupies a prefix
+        of the rows and every vacant row carries zero gradient/residual
+        and ``ns = 0``/``k_arr = 0``, making it an exact no-op. Worker
+        joins/leaves/deaths therefore re-trace only when the fleet
+        outgrows its capacity bucket, never per membership event.
 
         Ragged per-worker message sizes (bandwidth-adaptive ``frac_w``,
         core/adaptive_frac.py) are handled WITHOUT retracing: the channel
@@ -165,22 +231,42 @@ class MasterReducer:
         emits in descending-|.| order, so the first ``k_arr[w]`` entries
         ARE worker w's top-k. Masked-off candidates carry value 0 into
         the segment-sum (scatter no-ops, never on the wire) and are
-        returned to the worker's error-feedback residual. ``kmax`` is
-        bucketed to the compressor's power-of-two lattice, so at most
-        ~log2(n) variants of this function exist per (W, layout)."""
+        returned to the worker's error-feedback residual. ``k_arr[w] = 0``
+        is the deadline-late/vacant live-mask: such a row sends nothing
+        and its whole corrected gradient stays in the residual. ``kmax``
+        is bucketed to the compressor's power-of-two lattice, so at most
+        ~log2(n) variants of this function exist per (W_cap, layout)."""
+        self.trace_count += 1
         opt = self.optimizer
         comp = self.compressor
         spec = self._spec
         n = spec.n
 
         if comp is None:
+            if kmax is None:
+                # plain uncompressed reduce: no deferral state in play,
+                # so skip the residual stack + live-mask entirely (the
+                # common case — keeps the hot path at PR-1 speed)
+                @jax.jit
+                def fn(flat, opt_state, gtrees, ns):
+                    grads = jnp.stack([spec.flatten(t) for t in gtrees])
+                    g_bar = jnp.sum(grads, axis=0) / jnp.sum(ns)
+                    return opt.update(flat, g_bar, opt_state)
 
+                return fn
+
+            # masked variant (kmax == MASKED_UNCOMPRESSED): deferred
+            # workers and pending residuals ride the live-mask
             @jax.jit
-            def fn(flat, opt_state, gtrees, ns):
-                grads = jnp.stack([spec.flatten(t) for t in gtrees])
-                g_bar = jnp.sum(grads, axis=0) / jnp.sum(ns)
+            def fn(flat, opt_state, gtrees, res_rows, ns):
+                g = (jnp.stack([spec.flatten(t) for t in gtrees])
+                     + jnp.stack(res_rows))
+                live = (ns > 0).astype(jnp.float32)[:, None]
+                g_bar = jnp.sum(g * live, axis=0) / jnp.sum(ns)
+                new_res = g * (1.0 - live)
                 new_flat, new_state = opt.update(flat, g_bar, opt_state)
-                return new_flat, new_state
+                return (new_flat, new_state,
+                        tuple(new_res[i] for i in range(W_cap)))
 
             return fn
 
@@ -191,24 +277,24 @@ class MasterReducer:
             def fn(flat, opt_state, gtrees, res_rows, ns, step, k_arr):
                 grads = jnp.stack([spec.flatten(t) for t in gtrees])
                 res = jnp.stack(res_rows)
-                # (W, R, kmax) candidates per worker, descending |.| per
-                # block; res_full assumes ALL kmax candidates were sent
+                # (W_cap, R, kmax) candidates per worker, descending |.|
+                # per block; res_full assumes ALL kmax candidates sent
                 vals, idx, res_full = fused_block_topk_batched(
                     grads, res, k=kmax, block_w=block_w)
                 mask = (jnp.arange(kmax, dtype=jnp.int32)[None, None, :]
                         < k_arr[:, None, None])
                 sent = jnp.where(mask, vals, 0.0)
                 # candidates a worker did NOT send go back to its residual
-                dropped = (vals - sent).reshape(W, -1)
-                rows_ix = jnp.arange(W, dtype=jnp.int32)[:, None]
-                new_res = res_full.at[rows_ix, idx.reshape(W, -1)].add(
+                dropped = (vals - sent).reshape(W_cap, -1)
+                rows_ix = jnp.arange(W_cap, dtype=jnp.int32)[:, None]
+                new_res = res_full.at[rows_ix, idx.reshape(W_cap, -1)].add(
                     dropped, mode="drop")
                 g_bar = jnp.zeros((n,), jnp.float32).at[
                     idx.reshape(-1)].add(sent.reshape(-1),
                                          mode="drop") / jnp.sum(ns)
                 new_flat, new_state = opt.update(flat, g_bar, opt_state)
                 return (new_flat, new_state,
-                        tuple(new_res[i] for i in range(W)))
+                        tuple(new_res[i] for i in range(W_cap)))
 
             return fn
 
@@ -224,7 +310,7 @@ class MasterReducer:
                 _, idx = jax.lax.top_k(jnp.abs(c), kmax)
             else:                                              # randk
                 base = jax.random.fold_in(jax.random.PRNGKey(seed), step)
-                keys = jax.random.split(base, W)
+                keys = jax.random.split(base, W_cap)
                 scores = jax.vmap(
                     lambda key: jax.random.uniform(key, (n,)))(keys)
                 _, idx = jax.lax.top_k(scores, kmax)
@@ -233,76 +319,121 @@ class MasterReducer:
             mask = (jnp.arange(kmax, dtype=jnp.int32)[None, :]
                     < k_arr[:, None])
             sent = jnp.where(mask, vals, 0.0)
-            rows_ix = jnp.arange(W, dtype=jnp.int32)[:, None]
+            rows_ix = jnp.arange(W_cap, dtype=jnp.int32)[:, None]
             # zero exactly the sent entries out of c; unsent candidates
             # stay in the residual (per-row indices are distinct)
             new_res = c.at[rows_ix, idx].add(-sent)
             g_bar = jnp.zeros((n,), jnp.float32).at[idx.reshape(-1)].add(
                 sent.reshape(-1), mode="drop") / jnp.sum(ns)
             new_flat, new_state = opt.update(flat, g_bar, opt_state)
-            return new_flat, new_state, tuple(new_res[i] for i in range(W))
+            return (new_flat, new_state,
+                    tuple(new_res[i] for i in range(W_cap)))
 
         return fn
 
     def _reduce_and_step_fused(
             self, messages: Dict[str, Tuple[PyTree, float]],
-            keep: Optional[Dict[str, int]] = None) -> PyTree:
+            keep: Optional[Dict[str, int]] = None,
+            defer: Optional[Any] = None) -> PyTree:
         if not messages:
             raise ValueError("reduce step with no worker messages")
+        defer = frozenset(defer or ())
         names = sorted(messages)
-        total_n = sum(float(messages[w][1]) for w in names)
-        if total_n <= 0:
-            raise ValueError("reduce step with zero samples")
+        on_time = [w for w in names if w not in defer]
+        total_n = sum(float(messages[w][1]) for w in on_time)
+        if not on_time or total_n <= 0:
+            raise ValueError("reduce step with no on-time samples "
+                             "(use defer_to_residual for all-late rounds)")
         n = self._spec.n
         W = len(names)
-        gtrees = tuple(messages[w][0] for w in names)
-        ns = np.asarray([float(messages[w][1]) for w in names], np.float32)
+        W_cap = self._capacity(W)
+        pad = W_cap - W
+        gtrees = (tuple(messages[w][0] for w in names)
+                  + (self._zero_gtree(),) * pad)
+        # ns = 0 is the live-mask: vacant capacity rows AND deferred
+        # (deadline-late) workers carry zero weight in the average
+        ns = np.zeros(W_cap, np.float32)
+        for i, w in enumerate(names):
+            if w not in defer:
+                ns[i] = float(messages[w][1])
+        zeros = jnp.zeros((n,), jnp.float32)
+        res_rows = (tuple(self._residuals.get(w, zeros) for w in names)
+                    + (zeros,) * pad)
 
         if self.compressor is None:
             if keep:
                 raise ValueError("per-worker keep requires a compressor")
-            fn = self._step_fns.get((W, None))
-            if fn is None:
-                fn = self._step_fns[(W, None)] = self._build_step_fn(W, None)
-            self._flat, self.opt_state = fn(self._flat, self.opt_state,
-                                            gtrees, ns)
-            self.last_per_worker_bytes = {w: 4 * n for w in names}
-            self.last_wire_bytes = W * 4 * n
+            masked = bool(defer) or any(w in self._residuals
+                                        for w in names)
+            if not masked:
+                fn = self._step_fns.get((W_cap, None))
+                if fn is None:
+                    fn = self._step_fns[(W_cap, None)] = \
+                        self._build_step_fn(W_cap, None)
+                self._flat, self.opt_state = fn(
+                    self._flat, self.opt_state, gtrees, ns)
+            else:
+                fn = self._step_fns.get((W_cap, MASKED_UNCOMPRESSED))
+                if fn is None:
+                    fn = self._step_fns[(W_cap, MASKED_UNCOMPRESSED)] = \
+                        self._build_step_fn(W_cap, MASKED_UNCOMPRESSED)
+                self._flat, self.opt_state, new_res = fn(
+                    self._flat, self.opt_state, gtrees, res_rows, ns)
+                # on-time rows leave an all-zero residual: keep the dict
+                # sparse (only deferred mass is worth holding)
+                for i, w in enumerate(names):
+                    if w in defer:
+                        self._residuals[w] = new_res[i]
+                    else:
+                        self._residuals.pop(w, None)
+            self.last_per_worker_bytes = {w: 4 * n for w in on_time}
+            self.last_wire_bytes = len(on_time) * 4 * n
         else:
             comp = self.compressor
             # per-worker keep totals, snapped to the compressor's lattice
-            # (keep=None -> the uniform frac-derived default)
-            k_tot = {w: comp.flat_k(n, (keep or {}).get(w)) for w in names}
+            # (keep=None -> the uniform frac-derived default); deferred
+            # workers are masked to k = 0 (nothing on the wire, all mass
+            # into the residual)
+            k_tot = {w: comp.flat_k(n, (keep or {}).get(w))
+                     for w in on_time}
             kmax_tot = max(k_tot.values())
             if comp.method == "blocktopk":
                 rows = -(-n // comp.block_w)
                 kmax = kmax_tot // rows            # per-block keep
-                k_arr = jnp.asarray([k_tot[w] // rows for w in names],
-                                    jnp.int32)
+                k_of = {w: k_tot[w] // rows for w in on_time}
             else:
                 kmax = kmax_tot
-                k_arr = jnp.asarray([k_tot[w] for w in names], jnp.int32)
-            fn = self._step_fns.get((W, kmax))
+                k_of = dict(k_tot)
+            k_arr = jnp.asarray([k_of.get(w, 0) for w in names]
+                                + [0] * pad, jnp.int32)
+            fn = self._step_fns.get((W_cap, kmax))
             if fn is None:
-                fn = self._step_fns[(W, kmax)] = self._build_step_fn(
-                    W, kmax)
-            zeros = jnp.zeros((n,), jnp.float32)
-            res_rows = tuple(self._residuals.get(w, zeros) for w in names)
+                fn = self._step_fns[(W_cap, kmax)] = self._build_step_fn(
+                    W_cap, kmax)
             self._flat, self.opt_state, new_res = fn(
                 self._flat, self.opt_state, gtrees, res_rows, ns,
                 np.asarray(self.step, np.int32), k_arr)
-            for w, r in zip(names, new_res):
-                self._residuals[w] = r
-            self.last_per_worker_bytes = {w: 8 * k_tot[w] for w in names}
+            for i, w in enumerate(names):
+                self._residuals[w] = new_res[i]
+            self.last_per_worker_bytes = {w: 8 * k_tot[w] for w in on_time}
             self.last_wire_bytes = sum(self.last_per_worker_bytes.values())
         self._params_cache = None
         self.step += 1
         return self.params
 
     # ------------------------------------------------------------------
+    @property
+    def supports_defer(self) -> bool:
+        """Whether late/deadline-missed messages can be preserved in
+        error-feedback residuals (fused flat buffers, or the dense path's
+        compressor residual trees). The dense UNCOMPRESSED path has no
+        residual channel — late mass there is simply dropped."""
+        return self.fused or self.compressor is not None
+
     def reduce_and_step(
             self, messages: Dict[str, Tuple[PyTree, float]],
-            keep: Optional[Dict[str, int]] = None) -> PyTree:
+            keep: Optional[Dict[str, int]] = None,
+            defer: Optional[Any] = None) -> PyTree:
         """messages: {worker: (grad_sum, n)}. Returns the new params
         (the broadcast payload of step (e)).
 
@@ -312,9 +443,74 @@ class MasterReducer:
         quantized onto ``GradientCompressor.k_lattice``; the actual
         bytes shipped per worker land in ``last_per_worker_bytes``.
         Requires the fused path AND a compressor (the dense path is the
-        uniform-frac reference)."""
+        uniform-frac reference).
+
+        ``defer`` names workers (a subset of ``messages``) whose reply
+        missed the iteration deadline: they are live-masked out of the
+        weighted average (zero contribution, zero wire bytes) and their
+        whole corrected gradient is preserved in their error-feedback
+        residual. Fused path only; at least one message must remain
+        on-time."""
         if self.fused:
-            return self._reduce_and_step_fused(messages, keep)
+            return self._reduce_and_step_fused(messages, keep, defer)
         if keep:
             raise ValueError("per-worker keep requires fused=True")
+        if defer:
+            raise ValueError("defer requires fused=True (use "
+                             "defer_to_residual on the dense path)")
         return self._reduce_and_step_dense(messages)
+
+    # ------------------------------------------------------------------
+    # full-state snapshot (TrainState resume contract,
+    # docs/elastic_training.md; serialized by checkpoint/io.py)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """Everything mutable: params, optimizer state, per-worker
+        error-feedback residuals, the step counter (randk's PRNG input),
+        the capacity bucket, and the wire accounting. Arrays come out as
+        numpy; structure is rebuilt against the live objects on load."""
+        def leaves(tree):
+            return [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+        st: Dict[str, Any] = {
+            "fused": self.fused,
+            "step": self.step,
+            "opt_leaves": leaves(self.opt_state),
+            "last_wire_bytes": self.last_wire_bytes,
+            "last_per_worker_bytes": dict(self.last_per_worker_bytes),
+        }
+        if self.fused:
+            st["flat"] = np.asarray(self._flat)
+            st["w_cap"] = self._w_cap
+            st["residuals"] = {w: np.asarray(r)
+                               for w, r in self._residuals.items()}
+        else:
+            st["param_leaves"] = leaves(self._params)
+            st["residuals"] = {w: leaves(r)
+                               for w, r in self._residuals.items()}
+        return st
+
+    def load_state_dict(self, st: Dict[str, Any]) -> None:
+        if bool(st["fused"]) != self.fused:
+            raise ValueError("snapshot fused mode does not match reducer")
+
+        def into(tree, leaf_list):
+            return jax.tree.unflatten(
+                jax.tree.structure(tree),
+                [jnp.asarray(a) for a in leaf_list])
+
+        self.step = int(st["step"])
+        self.opt_state = into(self.opt_state, st["opt_leaves"])
+        self.last_wire_bytes = int(st["last_wire_bytes"])
+        self.last_per_worker_bytes = {
+            w: int(b) for w, b in st["last_per_worker_bytes"].items()}
+        if self.fused:
+            self._flat = jnp.asarray(st["flat"], jnp.float32)
+            self._w_cap = int(st["w_cap"])
+            self._residuals = {w: jnp.asarray(r, jnp.float32)
+                               for w, r in st["residuals"].items()}
+            self._params_cache = None
+        else:
+            self._params = into(self._params, st["param_leaves"])
+            self._residuals = {w: into(self._params, r)
+                               for w, r in st["residuals"].items()}

@@ -16,8 +16,8 @@ On a synchronous TPU mesh the same estimates convert to per-virtual-worker
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
 
 
 @dataclass
@@ -27,6 +27,9 @@ class WorkerStats:
     bandwidth: float = 1e6         # uplink bytes / second, EWMA (fed from
                                    # measured reduce-step upload time and
                                    # the wire bytes the event loop logs)
+    upload: float = 0.0            # seconds, EWMA reduce-step upload —
+                                   # part of the predicted round trip the
+                                   # iteration deadline is derived from
     last_budget: float = 0.0       # seconds of compute scheduled
     total_vectors: int = 0
     total_upload_bytes: float = 0.0
@@ -60,17 +63,42 @@ class AdaptiveScheduler:
         self.stats.pop(w, None)
 
     # ------------------------------------------------------------------
+    def _compute_budget(self, s: WorkerStats) -> float:
+        """The shared budget formula — ``budget()`` and the deadline's
+        ``predicted_round_trip()`` must never drift apart."""
+        return max(self.min_budget, self.T - s.latency)
+
     def budget(self, w: str) -> float:
         """Seconds of compute worker w should run this iteration."""
         s = self.stats[w]
-        b = max(self.min_budget, self.T - s.latency)
-        s.last_budget = b
-        return b
+        s.last_budget = self._compute_budget(s)
+        return s.last_budget
+
+    def predicted_round_trip(self, w: str) -> float:
+        """EWMA-predicted seconds until worker w's reduce message lands:
+        scheduled compute budget plus round-trip latency plus the
+        measured upload time (without the upload term an upload-bound
+        fleet would be classified all-late every iteration)."""
+        s = self.stats[w]
+        return s.latency + self._compute_budget(s) + s.upload
+
+    def deadline(self, workers: List[str], quantile: float = 0.75,
+                 slack: float = 1.5) -> float:
+        """Iteration close time for deadline-based partial participation
+        (docs/elastic_training.md): a ``quantile`` of the fleet's EWMA-
+        predicted round trips, scaled by ``slack`` to absorb jitter,
+        floored at T. Workers whose reply lands after this are excluded
+        from the reduce (their mass parks in the error-feedback
+        residual), so one straggler stops setting the wall-clock."""
+        if not workers:
+            return self.T
+        preds = sorted(self.predicted_round_trip(w) for w in workers)
+        idx = min(len(preds) - 1, int(quantile * (len(preds) - 1) + 0.5))
+        return max(self.T, slack * preds[idx])
 
     def expected_vectors(self, w: str) -> int:
         s = self.stats[w]
-        return max(1, int(s.power * max(self.min_budget,
-                                        self.T - s.latency)))
+        return max(1, int(s.power * self._compute_budget(s)))
 
     def record(self, w: str, *, latency: float, vectors: int,
                compute_time: float, upload_bytes: float = 0.0,
@@ -88,9 +116,21 @@ class AdaptiveScheduler:
         if upload_bytes > 0 and upload_time > 0:
             s.bandwidth = ((1 - a) * s.bandwidth
                            + a * (upload_bytes / upload_time))
+            s.upload = (1 - a) * s.upload + a * upload_time
             s.total_upload_bytes += upload_bytes
         s.total_vectors += vectors
         s.iterations += 1
+
+    # ------------------------------------------------------------------
+    # TrainState snapshot: the EWMAs ARE the scheduler's memory; the
+    # constructor args (T, ewma, priors) are config the resuming harness
+    # re-supplies (docs/elastic_training.md resume contract)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {"stats": {w: asdict(s) for w, s in self.stats.items()}}
+
+    def load_state_dict(self, st: Dict[str, Any]) -> None:
+        self.stats = {w: WorkerStats(**d) for w, d in st["stats"].items()}
 
     # ------------------------------------------------------------------
     def iteration_wall_time(self) -> float:

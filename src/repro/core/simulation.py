@@ -9,17 +9,28 @@ Reproduces the experimental setting of MLitB §3.5 on one machine:
     so per-message service time queues behind N-1 other messages. This is
     what produces the paper's Fig. 4 latency jump past ~64 workers;
   - optional worker churn (tab closes / joins mid-training);
+  - STRAGGLER modes (docs/elastic_training.md): probabilistic transient
+    stalls per profile (``straggle_p``/``straggle_factor`` — a GC pause or
+    a backgrounded tab multiplies that reply's latency) and the scheduled
+    ``straggle(worker, factor, iters)`` hook for scripted churn tests;
+  - MID-ITERATION DEATH: ``kill(worker)`` makes the worker's next compute
+    call return None (tab closed while computing — the master loses that
+    iteration's contribution and sees the loss immediately, footnote 5),
+    on top of the per-profile probabilistic ``reliability`` draw;
   - compute modes: "real" (actual JAX gradients on allocated synthetic-MNIST
     vectors — used for Fig. 5 convergence) and "synthetic" (power-model
     only — used for Fig. 4 scaling sweeps up to 96+ workers).
 
-The simulator implements the Cluster protocol of core/event_loop.py.
+The simulator implements the Cluster protocol of core/event_loop.py, plus
+``state_dict``/``load_state_dict`` so a TrainState resume replays the
+exact RNG stream of an uninterrupted run.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -38,6 +49,9 @@ class DeviceProfile:
     uplink_bps: float = 12.5e6  # worker->master uplink (bytes/sec): the
                                 # per-client link the adaptive compression
                                 # controller sizes messages for
+    straggle_p: float = 0.0     # P(transient stall this reply): a GC
+                                # pause / backgrounded tab multiplies the
+    straggle_factor: float = 8.0   # reply's latency by straggle_factor
 
 
 WORKSTATION = DeviceProfile("workstation", 400.0, 0.010, 0.20,
@@ -106,22 +120,59 @@ class SimulatedCluster:
         self._rng = np.random.RandomState(seed)
         self._live_count = 0
         self.total_grad_bytes = 0.0
+        # scripted churn hooks (tests/benchmarks): worker -> [factor,
+        # remaining replies] latency multipliers, and one-shot kills
+        self._straggle: Dict[str, List[float]] = {}
+        self._kill_pending: Set[str] = set()
 
     # ------------------------------------------------------------------
     def add_worker(self, worker: str, profile: DeviceProfile) -> None:
+        # a rejoining tab starts clean: scripted stalls/kills aimed at a
+        # previous incarnation of this name must not leak onto it
+        self._straggle.pop(worker, None)
+        self._kill_pending.discard(worker)
         self.workers[worker] = SimWorker(
             worker, profile,
             np.random.RandomState(self._rng.randint(2 ** 31)))
 
     # ------------------------------------------------------------------
+    # scripted churn (deterministic counterpart of reliability/straggle_p)
+    # ------------------------------------------------------------------
+    def kill(self, worker: str) -> None:
+        """Close the worker's tab mid-iteration: its next compute call
+        returns None (the master loses that contribution and submits a
+        LeaveEvent, paper footnote 5)."""
+        self._kill_pending.add(worker)
+        self._straggle.pop(worker, None)       # the stall died with it
+
+    def straggle(self, worker: str, factor: float, iters: int = 1) -> None:
+        """Multiply the worker's next ``iters`` reply latencies by
+        ``factor`` — a scripted GC pause / backgrounded tab."""
+        self._straggle[worker] = [float(factor), int(iters)]
+
+    # ------------------------------------------------------------------
     def _sample_latency(self, sw: SimWorker, n_live: int) -> float:
         base = sw.profile.latency_mean * math.exp(
             sw.profile.latency_jitter * sw.rng.randn())
-        return base + self.network.reduce_congestion(n_live)
+        stall = 1.0
+        sched = self._straggle.get(sw.worker)
+        if sched is not None:
+            stall = sched[0]
+            sched[1] -= 1
+            if sched[1] <= 0:
+                del self._straggle[sw.worker]
+        elif (sw.profile.straggle_p > 0.0
+              and sw.rng.rand() < sw.profile.straggle_p):
+            stall = sw.profile.straggle_factor
+        return base * stall + self.network.reduce_congestion(n_live)
 
     def compute(self, worker: str, params: PyTree, budget: float,
                 indices: List[int]) -> Optional[ComputeResult]:
         sw = self.workers[worker]
+        if worker in self._kill_pending:
+            self._kill_pending.discard(worker)
+            del self.workers[worker]
+            return None                                   # scripted death
         if sw.rng.rand() > sw.profile.reliability:
             return None                                   # tab closed mid-run
         n_live = sum(1 for _ in self.workers)
@@ -151,6 +202,46 @@ class SimulatedCluster:
 
     def broadcast(self, params: PyTree, workers: List[str]) -> float:
         return self.network.broadcast_time(len(workers))
+
+    # ------------------------------------------------------------------
+    # TrainState snapshot: the RNG streams ARE the cluster's state — a
+    # resumed run must draw the exact jitter/death/subset sequence the
+    # uninterrupted run would have (docs/elastic_training.md)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _rng_state(rng: np.random.RandomState) -> List[Any]:
+        name, keys, pos, has_gauss, cached = rng.get_state()
+        return [name, np.asarray(keys), int(pos), int(has_gauss),
+                float(cached)]
+
+    @staticmethod
+    def _set_rng_state(rng: np.random.RandomState, st: List[Any]) -> None:
+        rng.set_state((st[0], np.asarray(st[1], np.uint32), int(st[2]),
+                       int(st[3]), float(st[4])))
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "rng": self._rng_state(self._rng),
+            "total_grad_bytes": self.total_grad_bytes,
+            "straggle": {w: list(v) for w, v in self._straggle.items()},
+            "kill_pending": sorted(self._kill_pending),
+            "workers": {w: {"profile": dataclasses.asdict(sw.profile),
+                            "rng": self._rng_state(sw.rng)}
+                        for w, sw in self.workers.items()},
+        }
+
+    def load_state_dict(self, st: Dict[str, Any]) -> None:
+        self._set_rng_state(self._rng, st["rng"])
+        self.total_grad_bytes = float(st["total_grad_bytes"])
+        self._straggle = {w: [float(v[0]), int(v[1])]
+                          for w, v in st["straggle"].items()}
+        self._kill_pending = set(st["kill_pending"])
+        self.workers = {}
+        for w, d in st["workers"].items():
+            sw = SimWorker(w, DeviceProfile(**d["profile"]),
+                           np.random.RandomState(0))
+            self._set_rng_state(sw.rng, d["rng"])
+            self.workers[w] = sw
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,394 @@
+"""Churn-resilient elastic training (docs/elastic_training.md):
+
+- seeded FUZZ over randomized join/leave/mid-iteration-death/straggler
+  schedules, asserting the master's invariants at every iteration
+  boundary: finite loss whenever a reduce happened, exact wire-byte
+  accounting, departed workers' residuals/stats dropped, every orphaned
+  data index re-allocated while capacity remains;
+- deadline-based partial participation: a 10x straggler is excluded at
+  the deadline, its mass parks in its error-feedback residual, and the
+  iteration wall-clock is the deadline, not the straggler;
+- BIT-EXACT resume: run N iterations, snapshot TrainState at N/2,
+  restore into freshly-constructed components, and the continued run's
+  params, optimizer state, residuals, and IterationLog history match the
+  uninterrupted run exactly.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (TrainState, load_train_state,
+                              save_train_state)
+from repro.core import (AdaptiveFracController, GradientCompressor,
+                        JoinEvent, LeaveEvent, MasterEventLoop,
+                        MasterReducer, UploadDataEvent)
+from repro.core.elastic import LeaveEvent as _Leave
+from repro.core.scheduler import AdaptiveScheduler
+from repro.core.simulation import (DeviceProfile, SimulatedCluster,
+                                   make_cnn_problem)
+from repro.data.datasets import synthetic_mnist
+from repro.optim import adagrad, sgd
+
+
+# ---------------------------------------------------------------------------
+# a fast linear-regression problem (fuzz iterations must be cheap)
+# ---------------------------------------------------------------------------
+def make_linear_problem(n_features=32, n_data=512, seed=0):
+    rng = np.random.RandomState(seed)
+    w_true = rng.randn(n_features).astype(np.float32)
+    X = rng.randn(n_data, n_features).astype(np.float32)
+    y = (X @ w_true).astype(np.float32)
+
+    @jax.jit
+    def _lg(params, Xb, yb):
+        def loss_fn(p):
+            r = Xb @ p["w"] - yb
+            return 0.5 * jnp.sum(r * r)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        return g, loss
+
+    def grad_fn(params, Xb, yb):
+        g, loss = _lg(params, jnp.asarray(Xb), jnp.asarray(yb))
+        return g, float(loss)                 # (grad SUM, loss SUM)
+
+    return {"w": jnp.zeros(n_features)}, grad_fn, (X, y)
+
+
+def _profile(i, power=300.0, latency=0.01, uplink=5e4):
+    return DeviceProfile(f"dev{i}", power, latency, 0.05, uplink_bps=uplink)
+
+
+# ---------------------------------------------------------------------------
+# churn fuzz: randomized schedules, invariants every iteration
+# ---------------------------------------------------------------------------
+def _check_invariants(loop, log):
+    alloc = loop.allocator
+    alloc.check_invariants()
+    # wire accounting: per-worker bytes sum to the iteration total
+    assert log.wire_bytes == sum(log.per_worker_wire_bytes.values())
+    # a reduce step happened -> the loss it produced is finite
+    if log.wire_bytes > 0:
+        assert np.isfinite(log.loss), f"NaN loss at step {log.step}"
+    # departed workers leave no residual / stats / hysteresis state
+    # behind (kills land as LeaveEvents at the NEXT boundary, so pending
+    # leaves may still hold state)
+    live = set(loop.registry.live_workers())
+    pending = {ev.worker for ev in loop.events._pending
+               if isinstance(ev, _Leave)}
+    assert set(loop.reducer._residuals) <= live | pending
+    assert set(loop.scheduler.stats) <= live | pending
+    if loop.frac_controller is not None:
+        assert set(loop.frac_controller._last_k) <= live | pending
+    # every orphaned index is re-allocated while spare capacity remains
+    if alloc.workers and alloc.unallocated:
+        assert all(wa.spare == 0 for wa in alloc.workers.values()), (
+            f"unallocated indices with spare capacity at step {log.step}")
+
+
+def _run_fuzz(seed, iters):
+    params, grad_fn, (X, y) = make_linear_problem(seed=0)
+    comp = GradientCompressor("topk", frac=0.1)
+    red = MasterReducer(params, sgd(lr=0.001), compressor=comp)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=seed)
+    ctl = AdaptiveFracController(T=0.2, comm_frac=0.5, frac_min=1 / 256,
+                                 frac_max=0.5)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster, frac_controller=ctl,
+        scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0,
+                                    prior_bandwidth=5e4),
+        deadline_quantile=0.6, deadline_slack=2.0)
+    loop.submit(UploadDataEvent(range(len(X))))
+    rng = np.random.RandomState(seed)
+    next_id = 0
+
+    def join():
+        nonlocal next_id
+        w = f"w{next_id}"
+        next_id += 1
+        cluster.add_worker(w, _profile(next_id,
+                                       power=float(rng.uniform(100, 500)),
+                                       latency=float(rng.uniform(0.005,
+                                                                 0.05))))
+        loop.submit(JoinEvent(w, capacity=200))
+        return w
+
+    for _ in range(3):
+        join()
+    reduces = 0
+    for it in range(iters):
+        live = loop.registry.live_workers()
+        r = rng.rand()
+        if r < 0.15:
+            join()
+        elif r < 0.25 and len(live) > 1:
+            loop.submit(LeaveEvent(live[int(rng.randint(len(live)))]))
+        elif r < 0.35 and len(live) > 1:
+            cluster.kill(live[int(rng.randint(len(live)))])
+        elif r < 0.55 and live:
+            cluster.straggle(live[int(rng.randint(len(live)))],
+                             factor=float(rng.uniform(5, 40)),
+                             iters=int(rng.randint(1, 3)))
+        log = loop.iteration()
+        _check_invariants(loop, log)
+        reduces += int(log.wire_bytes > 0)
+    # the fuzz actually trained (not a degenerate all-empty schedule)
+    assert reduces > iters // 2
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(loop.reducer.params))
+    return loop
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_churn_fuzz_invariants(seed):
+    _run_fuzz(seed, iters=30)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [3, 11, 23])
+def test_churn_fuzz_invariants_long(seed):
+    _run_fuzz(seed, iters=120)
+
+
+# ---------------------------------------------------------------------------
+# deadline-based partial participation
+# ---------------------------------------------------------------------------
+def _straggler_loop(deadline_quantile, seed=0):
+    params, grad_fn, (X, y) = make_linear_problem(seed=0)
+    comp = GradientCompressor("topk", frac=0.25)
+    red = MasterReducer(params, sgd(lr=0.001), compressor=comp)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=seed)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster,
+        scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0),
+        deadline_quantile=deadline_quantile, deadline_slack=1.5)
+    loop.submit(UploadDataEvent(range(len(X))))
+    for i in range(3):
+        cluster.add_worker(f"w{i}", _profile(i))
+        loop.submit(JoinEvent(f"w{i}", capacity=200))
+    # a 10x straggler: constant latency of 10 iteration durations
+    cluster.add_worker("slow", DeviceProfile("slowdev", 300.0, 2.0, 0.01))
+    loop.submit(JoinEvent("slow", capacity=200))
+    return loop
+
+
+def test_deadline_excludes_straggler_and_caps_wall():
+    loop = _straggler_loop(deadline_quantile=0.5)
+    logs = loop.run(6)
+    tail = logs[2:]                     # let EWMAs settle
+    # the straggler misses every deadline once the fleet is measured
+    assert all(l.n_late >= 1 for l in tail)
+    assert any("late:slow" in l.events for l in tail)
+    # the iteration closes at the deadline, not at the straggler
+    for l in tail:
+        assert l.deadline is not None
+        assert l.wall_time < 2.0        # straggler alone takes >= 2s
+    # the straggler's unsent mass is preserved in its residual
+    assert "slow" in loop.reducer._residuals
+    assert float(jnp.abs(loop.reducer._residuals["slow"]).sum()) > 0
+    # and on-time workers kept training
+    assert np.isfinite(logs[-1].loss)
+
+
+def test_stall_on_slowest_baseline_pays_the_straggler():
+    loop = _straggler_loop(deadline_quantile=None)
+    logs = loop.run(4)
+    assert all(l.n_late == 0 for l in logs)
+    # without the deadline the straggler sets every iteration's wall
+    assert all(l.wall_time > 2.0 for l in logs[1:])
+
+
+def test_upload_bound_fleet_does_not_livelock():
+    """Regression: the deadline prediction includes the measured upload
+    EWMA. Without it, a fleet whose uploads dominate the round trip is
+    classified all-late every iteration and the optimizer never steps."""
+    params, grad_fn, (X, y) = make_linear_problem(seed=0)
+    comp = GradientCompressor("topk", frac=0.5)        # 16 entries/msg
+    red = MasterReducer(params, sgd(lr=0.001), compressor=comp)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=0)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster,
+        scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0),
+        deadline_quantile=0.5, deadline_slack=1.5)
+    loop.submit(UploadDataEvent(range(len(X))))
+    for i in range(3):
+        # 200 B/s uplink: the 128 B message takes ~0.64s, 3x the
+        # iteration duration — uploads dominate every round trip
+        cluster.add_worker(f"w{i}", _profile(i, uplink=200.0))
+        loop.submit(JoinEvent(f"w{i}", capacity=200))
+    logs = loop.run(10)
+    # the upload EWMA grows the deadline until replies fit inside it
+    assert any(l.wire_bytes > 0 for l in logs), "livelock: no reduce ever"
+    assert logs[-1].n_late == 0, "livelock: still all-late after settling"
+    assert red.step > 0
+
+
+def test_all_late_round_defers_everything_without_a_step():
+    """When every reply misses the deadline the master takes no
+    optimizer step but loses no mass."""
+    params, grad_fn, (X, y) = make_linear_problem(seed=0)
+    comp = GradientCompressor("topk", frac=0.25)
+    red = MasterReducer(params, sgd(lr=0.001), compressor=comp)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=0)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster,
+        scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0),
+        deadline_quantile=0.5, deadline_slack=1.2)
+    loop.submit(UploadDataEvent(range(len(X))))
+    for i in range(2):
+        cluster.add_worker(f"w{i}", _profile(i))
+        loop.submit(JoinEvent(f"w{i}", capacity=200))
+    loop.iteration()                          # settle allocation
+    step_before = red.step
+    for i in range(2):                        # everyone stalls 100x
+        cluster.straggle(f"w{i}", factor=100.0, iters=1)
+    log = loop.iteration()
+    assert log.n_late == 2 and log.wire_bytes == 0
+    assert red.step == step_before            # no optimizer step
+    assert set(red._residuals) >= {"w0", "w1"}
+    for w in ("w0", "w1"):
+        assert float(jnp.abs(red._residuals[w]).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# bit-exact TrainState resume
+# ---------------------------------------------------------------------------
+N_DATA = 600
+
+
+def _build_cnn_loop(populate, seed=0):
+    """A full-featured loop: CNN problem, randk compression (PRNG keyed
+    on the reducer step), adaptive per-worker frac, deadline partial
+    participation. ``populate=False`` builds the empty shell a resume
+    restores into."""
+    init_p, grad_fn, _ = make_cnn_problem()
+    X, y = synthetic_mnist(N_DATA, seed=seed)
+    comp = GradientCompressor("randk", frac=0.05, seed=3)
+    red = MasterReducer(init_p(jax.random.PRNGKey(seed)), adagrad(lr=0.02),
+                        compressor=comp, fused=True)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=seed)
+    ctl = AdaptiveFracController(T=0.25, comm_frac=0.5, frac_min=1 / 2048,
+                                 frac_max=0.12)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster, frac_controller=ctl,
+        scheduler=AdaptiveScheduler(T=0.25, prior_power=113,
+                                    prior_bandwidth=2e4),
+        deadline_quantile=0.75, deadline_slack=2.0)
+    if populate:
+        loop.submit(UploadDataEvent(range(N_DATA)))
+        for i, bw in enumerate([6e4, 2e4, 6e3]):
+            cluster.add_worker(f"w{i}", _profile(i, uplink=bw))
+            loop.submit(JoinEvent(f"w{i}", capacity=N_DATA))
+    return loop, cluster
+
+
+def _drive(loop, cluster, start, stop):
+    """Scripted churn keyed on the global iteration index so an
+    uninterrupted run and a resumed run replay the SAME schedule."""
+    logs = []
+    for it in range(start, stop):
+        if it == 2:
+            cluster.add_worker("w9", _profile(9, uplink=4e4))
+            loop.submit(JoinEvent("w9", capacity=N_DATA))
+        if it == 3:
+            cluster.straggle("w1", factor=50.0, iters=1)
+        if it == 6:
+            cluster.kill("w2")
+        if it == 7:
+            loop.submit(LeaveEvent("w0"))
+        if it == 8:
+            cluster.add_worker("w10", _profile(10, uplink=1e4))
+            loop.submit(JoinEvent("w10", capacity=N_DATA))
+        logs.append(loop.iteration())
+    return logs
+
+
+def _assert_logs_equal(a, b):
+    assert len(a) == len(b)
+    for la, lb in zip(a, b):
+        da, db = la.__dict__, lb.__dict__
+        assert set(da) == set(db)
+        for k in da:
+            va, vb = da[k], db[k]
+            if isinstance(va, float) and math.isnan(va):
+                assert isinstance(vb, float) and math.isnan(vb), (k, la, lb)
+            else:
+                assert va == vb, (k, va, vb)
+
+
+def _assert_tree_bitexact(ta, tb):
+    la, lb = jax.tree.leaves(ta), jax.tree.leaves(tb)
+    assert len(la) == len(lb)
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_resume_is_bit_exact(tmp_path):
+    N = 10
+    # uninterrupted reference run
+    loop_a, cluster_a = _build_cnn_loop(populate=True)
+    logs_a = _drive(loop_a, cluster_a, 0, N)
+
+    # interrupted run: snapshot at N/2, serialize to disk
+    loop_b, cluster_b = _build_cnn_loop(populate=True)
+    _drive(loop_b, cluster_b, 0, N // 2)
+    path = str(tmp_path / "train_state.npz")
+    save_train_state(path, TrainState.capture(loop_b, cluster_b))
+
+    # fresh-process-like context: new components, restore from disk
+    loop_c, cluster_c = _build_cnn_loop(populate=False)
+    load_train_state(path).restore(loop_c, cluster_c)
+    assert loop_c.step == loop_b.step and loop_c.clock == loop_b.clock
+    logs_c = _drive(loop_c, cluster_c, N // 2, N)
+
+    # subsequent history is identical to the uninterrupted run
+    _assert_logs_equal(logs_a[N // 2:], logs_c)
+    _assert_logs_equal(loop_a.history, loop_c.history)
+    assert loop_c.clock == loop_a.clock
+
+    # params / optimizer state / residuals bit-exact
+    _assert_tree_bitexact(loop_a.reducer.params, loop_c.reducer.params)
+    np.testing.assert_array_equal(np.asarray(loop_a.reducer.flat_params),
+                                  np.asarray(loop_c.reducer.flat_params))
+    _assert_tree_bitexact(loop_a.reducer.opt_state,
+                          loop_c.reducer.opt_state)
+    assert (set(loop_a.reducer._residuals)
+            == set(loop_c.reducer._residuals))
+    for w in loop_a.reducer._residuals:
+        np.testing.assert_array_equal(
+            np.asarray(loop_a.reducer._residuals[w]),
+            np.asarray(loop_c.reducer._residuals[w]))
+
+    # the supporting state converged too
+    assert loop_a.scheduler.state_dict() == loop_c.scheduler.state_dict()
+    assert loop_a.allocator.state_dict() == loop_c.allocator.state_dict()
+    assert loop_a.registry.state_dict() == loop_c.registry.state_dict()
+    assert (loop_a.frac_controller.state_dict()
+            == loop_c.frac_controller.state_dict())
+
+
+def test_train_state_roundtrips_through_npz(tmp_path):
+    loop, cluster = _build_cnn_loop(populate=True)
+    loop.run(2)
+    st = TrainState.capture(loop, cluster)
+    path = str(tmp_path / "ts.npz")
+    save_train_state(path, st)
+    back = load_train_state(path)
+    assert back.version == st.version
+    assert back.loop["step"] == st.loop["step"]
+    assert back.loop["clock"] == st.loop["clock"]
+    np.testing.assert_array_equal(back.loop["reducer"]["flat"],
+                                  st.loop["reducer"]["flat"])
+    assert (back.loop["scheduler"] == st.loop["scheduler"])
+    assert back.cluster["workers"].keys() == st.cluster["workers"].keys()
+    for w in st.cluster["workers"]:
+        np.testing.assert_array_equal(
+            back.cluster["workers"][w]["rng"][1],
+            st.cluster["workers"][w]["rng"][1])

@@ -89,6 +89,23 @@ def test_heterogeneous_devices_contribute_proportionally():
     assert all(st.total_vectors > 0 for st in s.values())
 
 
+def test_empty_fleet_iterations_advance_step():
+    """Regression: the empty-fleet early return used to advance the
+    clock but not the step counter, so consecutive empty iterations
+    emitted duplicate step numbers in the history."""
+    loop, cluster, _, _ = _make_loop(n_workers=0)
+    logs = loop.run(3)                      # nobody ever joined
+    assert [l.step for l in logs] == [1, 2, 3]
+    assert all(l.n_workers == 0 for l in logs)
+    assert loop.clock == pytest.approx(3 * loop.scheduler.T)
+    # a worker joining afterwards continues the monotone numbering
+    cluster.add_worker("w0", GRID_NODE)
+    loop.submit(JoinEvent("w0", capacity=3000))
+    log = loop.iteration()
+    assert log.step == 4
+    assert [l.step for l in loop.history] == [1, 2, 3, 4]
+
+
 def test_convergence_reaches_low_test_error():
     loop, _, eval_fn, _ = _make_loop(n_workers=4, n_data=4000)
     loop.run(10)

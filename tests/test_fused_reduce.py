@@ -206,3 +206,126 @@ def test_fused_reducer_rejects_empty_and_zero_samples():
         red.reduce_and_step({})
     with pytest.raises(ValueError):
         red.reduce_and_step({"w0": ({"w": jnp.zeros(4)}, 0)})
+
+
+# ---------------------------------------------------------------------------
+# capacity-padded worker axis: churn must not retrace the hot path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("compressed", [False, True])
+def test_churn_traces_bounded_by_capacity_buckets(compressed):
+    """Property: under an M-event churn schedule the number of jit
+    traces is bounded by the number of distinct W_cap buckets (power-of-
+    two capacities), NOT by M."""
+    n = 256
+    comp = GradientCompressor("topk", frac=0.05) if compressed else None
+    red = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=0.1), compressor=comp)
+    g = {"w": jnp.ones(n)}
+    rng = np.random.RandomState(4)
+    M = 60
+    caps = set()
+    for _ in range(M):
+        W = int(rng.randint(1, 9))          # fleet churns between 1..8
+        red.reduce_and_step({f"w{i}": (g, 1) for i in range(W)})
+        caps.add(red._w_cap)
+    assert caps <= {1, 2, 4, 8}
+    # capacity is monotone, so distinct (W_cap, kmax) pairs — and hence
+    # traces — are bounded by the capacity buckets actually visited
+    assert red.trace_count == len(red._step_fns) <= len(caps)
+    assert red.trace_count < M // 4
+
+
+def test_capacity_padding_is_numerically_invisible():
+    """A 3-worker reduce on a capacity-4 axis equals the same reduce on
+    a reducer that only ever saw 3 workers: vacant rows are exact
+    no-ops."""
+    n = 129
+    rng = np.random.RandomState(9)
+    g = {w: {"w": jnp.asarray(rng.randn(n), jnp.float32)}
+         for w in ("a", "b", "c")}
+    outs = []
+    for warm_w in (8, None):        # warm_w=8 forces W_cap=8 first
+        red = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=1.0),
+                            compressor=GradientCompressor("topk",
+                                                          frac=0.2))
+        if warm_w:
+            z = {"w": jnp.zeros(n)}
+            red.reduce_and_step({f"p{i}": (z, 1) for i in range(warm_w)})
+        red.reduce_and_step({w: (g[w], 1) for w in g})
+        outs.append(np.asarray(red.flat_params))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# deadline-late workers: live-masked to zero, mass kept in the residual
+# ---------------------------------------------------------------------------
+def test_deferred_worker_contributes_zero_topk_oracle():
+    """defer={'b'}: params move exactly as if only a and c reduced, and
+    b's whole corrected gradient lands in its residual."""
+    n = 257
+    rng = np.random.RandomState(21)
+    g = {w: {"w": jnp.asarray(rng.randn(n), jnp.float32)}
+         for w in ("a", "b", "c")}
+    comp = GradientCompressor("topk", frac=0.1)
+
+    red = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=1.0), compressor=comp)
+    red.reduce_and_step({w: (g[w], 1) for w in g}, defer=["b"])
+
+    ctrl = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=1.0), compressor=comp)
+    ctrl.reduce_and_step({w: (g[w], 1) for w in ("a", "c")})
+
+    np.testing.assert_array_equal(np.asarray(red.flat_params),
+                                  np.asarray(ctrl.flat_params))
+    # sum(ns) counted only on-time workers
+    np.testing.assert_array_equal(np.asarray(red.last_wire_bytes),
+                                  ctrl.last_wire_bytes)
+    assert set(red.last_per_worker_bytes) == {"a", "c"}
+    # b keeps ALL its mass: residual == corrected gradient, exactly
+    np.testing.assert_array_equal(np.asarray(red._residuals["b"]),
+                                  np.asarray(g["b"]["w"]))
+
+
+@pytest.mark.parametrize("method", ["topk", "randk", "blocktopk"])
+def test_deferred_mass_preserved_all_methods(method):
+    """Feedback invariant under deferral, every channel: the deferred
+    worker's residual carries g + r_prev (nothing reduced, nothing
+    lost), while on-time workers keep sent + residual == g + r_prev."""
+    n, block_w = 192, 32
+    rng = np.random.RandomState(31)
+    comp = GradientCompressor(method, frac=0.25, block_w=block_w)
+    red = MasterReducer({"w": jnp.zeros(n)}, sgd(lr=1.0), compressor=comp)
+    g1 = {w: {"w": jnp.asarray(rng.randn(n), jnp.float32)}
+          for w in ("a", "b")}
+    red.reduce_and_step({w: (g1[w], 1) for w in g1})   # grow residuals
+    prev = {w: np.asarray(red._residuals[w]) for w in g1}
+    g2 = {w: {"w": jnp.asarray(rng.randn(n), jnp.float32)}
+          for w in ("a", "b")}
+    p_before = np.asarray(red.flat_params)
+    red.reduce_and_step({w: (g2[w], 1) for w in g2}, defer=["b"])
+    # deferred: residual == g + r_prev, bit of mass neither sent nor lost
+    np.testing.assert_allclose(np.asarray(red._residuals["b"]),
+                               np.asarray(g2["b"]["w"]) + prev["b"],
+                               atol=1e-6)
+    # on-time: error-feedback invariant  sent + r_new == g + r_prev
+    # (sgd lr=1, sum ns = 1 -> sent_a == p_before - p_after)
+    sent_a = p_before - np.asarray(red.flat_params)
+    np.testing.assert_allclose(sent_a + np.asarray(red._residuals["a"]),
+                               np.asarray(g2["a"]["w"]) + prev["a"],
+                               atol=1e-5)
+
+
+def test_defer_all_messages_raises():
+    red = MasterReducer({"w": jnp.zeros(8)}, sgd(lr=0.1),
+                        compressor=GradientCompressor("topk", frac=0.5))
+    with pytest.raises(ValueError):
+        red.reduce_and_step({"a": ({"w": jnp.ones(8)}, 1)}, defer=["a"])
+
+
+def test_defer_to_residual_accumulates():
+    red = MasterReducer({"w": jnp.zeros(8)}, sgd(lr=0.1),
+                        compressor=GradientCompressor("topk", frac=0.5))
+    red.defer_to_residual("a", {"w": jnp.ones(8)})
+    red.defer_to_residual("a", {"w": jnp.ones(8)})
+    np.testing.assert_array_equal(np.asarray(red._residuals["a"]),
+                                  np.full(8, 2.0, np.float32))
+    red.drop_worker("a")
+    assert "a" not in red._residuals
