@@ -1,0 +1,43 @@
+"""Shared bench-artifact writer: every benchmark (full or --smoke) dumps
+its measured numbers to ``BENCH_<name>.json`` so CI can upload them as a
+workflow artifact and the perf trajectory is recorded run over run.
+
+Output directory: ``$BENCH_DIR`` if set, else the current working
+directory. The JSON files are gitignored (they are artifacts, not
+sources).
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+from typing import Any, Dict
+
+
+def emit_bench_json(name: str, payload: Dict[str, Any]) -> str:
+    """Write BENCH_<name>.json and return its path. Non-finite floats are
+    stringified so the file stays valid JSON."""
+    def clean(v):
+        if isinstance(v, dict):
+            return {k: clean(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return [clean(x) for x in v]
+        if isinstance(v, float) and (v != v or v in (float("inf"),
+                                                     float("-inf"))):
+            return str(v)
+        if hasattr(v, "item"):          # numpy scalars
+            return clean(v.item())
+        return v
+
+    doc = {"bench": name,
+           "python": sys.version.split()[0],
+           "platform": platform.platform(),
+           "results": clean(payload)}
+    out_dir = os.environ.get("BENCH_DIR", ".")
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return path

@@ -139,7 +139,7 @@ def run() -> Dict[str, Dict]:
 # ---------------------------------------------------------------------------
 # CI smoke: the adaptive path executes and its wire accounting is exact
 # ---------------------------------------------------------------------------
-def run_smoke(iters: int = 12) -> None:
+def run_smoke(iters: int = 12) -> Dict:
     loop, red, comp, ctl = _build(HET_BWS, 0.01, adaptive=True)
     n = red.flat_n
     lattice_bytes = {8 * k for k in comp.k_lattice(n)}
@@ -164,14 +164,21 @@ def run_smoke(iters: int = 12) -> None:
     print(f"OK (smoke): adaptive per-worker channel executed; "
           f"{len(stepped)} steps, steady-state bytes {sizes}, "
           f"wire accounting matches packed_wire_bytes")
+    return {"iters": iters, "reduce_steps": len(stepped),
+            "steady_state_bytes": sizes,
+            "total_wire_bytes": sum(l.wire_bytes for l in stepped)}
 
 
 def main(argv: List[str]) -> None:
+    from _bench_io import emit_bench_json
+
     if "--smoke" in argv:
-        run_smoke()
+        emit_bench_json("adaptive_frac",
+                        {"mode": "smoke", **run_smoke()})
         return
     out = run()
     het, hom = out["heterogeneous"], out["homogeneous"]
+    emit_bench_json("adaptive_frac", {"mode": "full", **out})
     assert het["speedup"] >= 1.5, (
         f"adaptive speedup {het['speedup']:.2f}x < 1.5x on the "
         f"10x-heterogeneous fleet")

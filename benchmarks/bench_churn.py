@@ -151,7 +151,7 @@ def run() -> Dict[str, Dict]:
 # CI smoke: churn + deadline executes with exact accounting, bounded
 # traces, and a TrainState round-trip
 # ---------------------------------------------------------------------------
-def run_smoke(iters: int = 14) -> None:
+def run_smoke(iters: int = 14) -> Dict:
     import tempfile
 
     from repro.checkpoint import (TrainState, load_train_state,
@@ -186,14 +186,19 @@ def run_smoke(iters: int = 14) -> None:
           f"churny iterations, wall capped at the deadline, wire "
           f"accounting exact, {red.trace_count} traces, TrainState "
           f"round-trip resumed")
+    return {"iters": iters, "n_late_total": n_late_total,
+            "trace_count": red.trace_count}
 
 
 def main(argv: List[str]) -> None:
+    from _bench_io import emit_bench_json
+
     if "--smoke" in argv:
-        run_smoke()
+        emit_bench_json("churn", {"mode": "smoke", **run_smoke()})
         return
     out = run()
     churny, hom = out["churny+straggler"], out["homogeneous"]
+    emit_bench_json("churn", {"mode": "full", **out})
     assert churny["speedup"] >= 1.3, (
         f"deadline speedup {churny['speedup']:.2f}x < 1.3x on the churny "
         f"10x-straggler fleet")

@@ -12,10 +12,15 @@ problem (the paper's model) in CPU interpret mode, seed path vs fused:
 The acceptance gate for the fused rewrite: >=5x wall-clock speedup, and
 the packed wire bytes must match the compressor's accounting.
 
-    PYTHONPATH=src python benchmarks/bench_reduce.py
+``--smoke`` (CI, shared runners): fewer reps and no perf assertion —
+the wire-accounting check still runs, and the measured numbers are
+recorded to BENCH_reduce.json either way.
+
+    PYTHONPATH=src python benchmarks/bench_reduce.py [--smoke]
 """
 from __future__ import annotations
 
+import sys
 import time
 from typing import Dict, List
 
@@ -85,19 +90,30 @@ def run(reps: int = 10) -> List[Dict]:
     return rows
 
 
-def main():
-    rows = run()
+def main(argv: List[str]) -> None:
+    from _bench_io import emit_bench_json
+
+    smoke = "--smoke" in argv
+    rows = run(reps=3 if smoke else 10)
     print("channel,dense_path_ms,fused_ms,speedup")
     for r in rows:
         print(f"{r['channel']},{r['dense_path_ms']:.2f},"
               f"{r['fused_ms']:.2f},{r['speedup']:.1f}x")
-    # acceptance gate: the compressed-reduce hot path must be >=5x the
-    # seed per-worker dense path (dense channel speedup is informational)
     gated = [r for r in rows if r["channel"] != "dense"]
     worst = min(r["speedup"] for r in gated)
+    emit_bench_json("reduce", {"mode": "smoke" if smoke else "full",
+                               "rows": rows, "worst_speedup": worst})
+    if smoke:
+        # shared runners: wire accounting asserted inside run(); the
+        # perf gate is informational here
+        print(f"OK (smoke): fused path executed, wire accounting exact, "
+              f"speedup {worst:.1f}x recorded")
+        return
+    # acceptance gate: the compressed-reduce hot path must be >=5x the
+    # seed per-worker dense path (dense channel speedup is informational)
     assert worst >= 5.0, f"fused reduce_and_step speedup {worst:.1f}x < 5x"
     print(f"OK: fused compressed-reduce >= 5x (worst {worst:.1f}x)")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -1,0 +1,136 @@
+"""Continuous batching vs one-batch-at-a-time serving (MLitB §3.6).
+
+The paper's second pillar makes every device a prediction client; the
+ROADMAP north star demands serving heavy traffic. PR 3 cured the
+training path's unbounded retraces; this benchmark gates the same cure
+on the PREDICTION path (docs/serving.md): ``repro.serving``'s
+continuous-batching engine — admission queue, shared slot KV cache,
+power-of-two ``(batch_cap, prompt_cap)`` bucketed prefill, one
+fixed-shape decode — against the PR-3-era ``serve_batch`` policy (wait
+for a full batch, pad everyone to the longest prompt, decode everyone
+for the longest generation).
+
+Setting: a seeded open-loop schedule from the cluster simulator
+(``generate_requests``: Poisson arrivals, uniform prompts, a 30%
+heavy-tail generation mixture, heterogeneous client latencies) through a
+tiny dense LM. BOTH arms are timed by the same discrete-event
+``ServeCostModel`` over the padded shapes they execute, so the
+comparison is deterministic (safe to gate on shared CI runners); the
+engine arm additionally runs the real model, whose outputs are
+oracle-tested in tests/test_serving.py.
+
+Gates (seed 0):
+
+  - throughput: engine >= 2x the static path's simulated tokens/s;
+  - latency: engine p95 request latency no worse than the static path's
+    (the "at fixed p95" framing: the 2x is not bought with queueing);
+  - traces: engine trace count <= 1 (decode) + distinct prefill buckets.
+
+``--smoke`` (CI): a shorter schedule, same gates (the clock is
+simulated, so shared-runner noise cannot flake them), plus the
+BENCH_serve.json artifact.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List
+
+N_REQ = 48
+SMOKE_REQ = 24
+MAX_BATCH = 8
+MAX_SEQ = 256
+RATE_RPS = 150.0               # sustained load: keeps the slot cache busy
+GATE_SPEEDUP = 2.0
+
+
+def _tiny_cfg():
+    from repro.configs.base import ArchConfig
+    return ArchConfig(name="serve-tiny", arch_type="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                      vocab_size=512, head_dim=16, param_dtype="float32",
+                      activ_dtype="float32", tie_embeddings=True)
+
+
+def run(n_req: int, seed: int = 0) -> Dict:
+    import jax
+
+    from repro.core.simulation import ServeCostModel, generate_requests
+    from repro.models import transformer as tf
+    from repro.serving import ServingEngine, simulate_static_batches
+
+    cfg = _tiny_cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = generate_requests(
+        n_req, rate_rps=RATE_RPS, vocab_size=cfg.vocab_size,
+        prompt_rng=(8, 48), gen_short=(4, 12), gen_long=(96, 160),
+        long_frac=0.3, seed=seed)
+    cost = ServeCostModel()
+    engine = ServingEngine(params, cfg, max_batch=MAX_BATCH,
+                           max_seq=MAX_SEQ)
+    cont = engine.run_simulated(reqs, cost)
+    stat = simulate_static_batches(reqs, MAX_BATCH, cost)
+    assert cont.n_requests == len(reqs) == stat.n_requests
+    assert cont.gen_tokens == sum(r.max_new for r in reqs) == stat.gen_tokens
+    return {
+        "n_requests": n_req,
+        "gen_tokens": cont.gen_tokens,
+        "continuous": {"tokens_per_s": cont.tokens_per_s,
+                       "makespan_s": cont.makespan,
+                       "p50_latency_s": cont.p50_latency,
+                       "p95_latency_s": cont.p95_latency,
+                       "engine_steps": cont.engine_steps,
+                       "live_row_frac": cont.decode_rows_live
+                       / max(cont.decode_rows_total, 1),
+                       "trace_count": cont.trace_count,
+                       "buckets": [list(b) for b in engine.buckets_seen]},
+        "static": {"tokens_per_s": stat.tokens_per_s,
+                   "makespan_s": stat.makespan,
+                   "p50_latency_s": stat.p50_latency,
+                   "p95_latency_s": stat.p95_latency,
+                   "live_row_frac": stat.decode_rows_live
+                   / max(stat.decode_rows_total, 1)},
+        "speedup": cont.tokens_per_s / stat.tokens_per_s,
+        "n_prefill_buckets": len(engine.buckets_seen),
+    }
+
+
+def check_and_report(out: Dict) -> None:
+    c, s = out["continuous"], out["static"]
+    print(f"requests={out['n_requests']} gen_tokens={out['gen_tokens']}")
+    print(f"      static: {s['tokens_per_s']:8.1f} tok/s  "
+          f"makespan={s['makespan_s']:.2f}s  p95={s['p95_latency_s']:.3f}s  "
+          f"live rows {100 * s['live_row_frac']:.0f}%")
+    print(f"  continuous: {c['tokens_per_s']:8.1f} tok/s  "
+          f"makespan={c['makespan_s']:.2f}s  p95={c['p95_latency_s']:.3f}s  "
+          f"live rows {100 * c['live_row_frac']:.0f}%")
+    assert out["speedup"] >= GATE_SPEEDUP, (
+        f"continuous batching {out['speedup']:.2f}x < {GATE_SPEEDUP}x the "
+        f"one-batch-at-a-time path")
+    assert c["p95_latency_s"] <= s["p95_latency_s"], (
+        f"engine p95 {c['p95_latency_s']:.3f}s worse than static "
+        f"{s['p95_latency_s']:.3f}s — throughput bought with queueing")
+    assert c["trace_count"] <= 1 + out["n_prefill_buckets"], (
+        f"{c['trace_count']} traces > 1 + {out['n_prefill_buckets']} "
+        f"prefill buckets")
+    print(f"OK: continuous batching {out['speedup']:.2f}x tokens/s at "
+          f"p95 {c['p95_latency_s']:.3f}s <= {s['p95_latency_s']:.3f}s "
+          f"(gate {GATE_SPEEDUP}x); {c['trace_count']} traces over "
+          f"{out['n_prefill_buckets']} prefill buckets")
+
+
+def main(argv: List[str]) -> None:
+    from _bench_io import emit_bench_json
+
+    smoke = "--smoke" in argv
+    out = run(SMOKE_REQ if smoke else N_REQ)
+    out["mode"] = "smoke" if smoke else "full"
+    # record the measured numbers BEFORE gating, so a regression still
+    # leaves its artifact to diagnose from
+    emit_bench_json("serve", out)
+    check_and_report(out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

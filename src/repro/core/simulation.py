@@ -24,6 +24,14 @@ Reproduces the experimental setting of MLitB §3.5 on one machine:
 The simulator implements the Cluster protocol of core/event_loop.py, plus
 ``state_dict``/``load_state_dict`` so a TrainState resume replays the
 exact RNG stream of an uninterrupted run.
+
+It also models the paper's SECOND workload — every device as a
+prediction client (§3.6 "tracking mode"): ``generate_requests`` draws a
+seeded open-loop request schedule (Poisson arrivals, mixed prompt and
+generation lengths, per-client network latencies from the same
+heterogeneous device profiles as the training fleet) and
+``ServeCostModel`` charges the serving engine's padded step shapes on a
+discrete-event clock (docs/serving.md, benchmarks/bench_serve.py).
 """
 from __future__ import annotations
 
@@ -242,6 +250,70 @@ class SimulatedCluster:
                            np.random.RandomState(0))
             self._set_rng_state(sw.rng, d["rng"])
             self.workers[w] = sw
+
+
+# ---------------------------------------------------------------------------
+# Open-loop prediction workload (docs/serving.md)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServeCostModel:
+    """Wall-time model for one serving step on a single accelerator.
+
+    Charges the PADDED shapes the engine actually executes: a prefill of
+    ``(batch_cap, prompt_cap)`` costs ``batch_cap * prompt_cap`` token
+    units (compute-bound), a decode step costs one unit per batch ROW
+    (memory-bound: every row reads the whole KV cache whether or not it
+    is live — which is exactly why utilization, not kernel speed, decides
+    serving throughput). ``step_overhead`` is the per-dispatch cost of a
+    jitted call plus host-side sampling/bookkeeping.
+    """
+    step_overhead: float = 2e-3     # s per engine step (dispatch+sampling)
+    prefill_tok: float = 2e-5       # s per padded prefill token
+    decode_row: float = 1e-4        # s per padded decode row
+
+    def prefill_time(self, batch_cap: int, prompt_cap: int) -> float:
+        return self.step_overhead + self.prefill_tok * batch_cap * prompt_cap
+
+    def decode_time(self, batch: int) -> float:
+        return self.step_overhead + self.decode_row * batch
+
+
+def generate_requests(n: int, *, rate_rps: float = 60.0,
+                      vocab_size: int = 512,
+                      prompt_rng: Tuple[int, int] = (8, 48),
+                      gen_short: Tuple[int, int] = (4, 12),
+                      gen_long: Tuple[int, int] = (96, 160),
+                      long_frac: float = 0.3,
+                      profiles: Tuple[DeviceProfile, ...] = (
+                          WORKSTATION, LAPTOP, PHONE),
+                      profile_weights: Tuple[float, ...] = (0.35, 0.4, 0.25),
+                      seed: int = 0) -> List["Any"]:
+    """Seeded open-loop request schedule: Poisson arrivals at ``rate_rps``,
+    uniform prompt lengths, a short/long generation mixture (the heavy
+    tail is what makes one-batch-at-a-time serving pay G_max for every
+    row), and per-request client latencies drawn from the same
+    heterogeneous device profiles as the training fleet."""
+    from repro.serving.engine import ServeRequest
+
+    rng = np.random.RandomState(seed)
+    w = np.asarray(profile_weights, float)
+    w = w / w.sum()
+    clock = 0.0
+    out: List[ServeRequest] = []
+    for rid in range(n):
+        clock += float(rng.exponential(1.0 / rate_rps))
+        p = int(rng.randint(prompt_rng[0], prompt_rng[1] + 1))
+        if rng.rand() < long_frac:
+            g = int(rng.randint(gen_long[0], gen_long[1] + 1))
+        else:
+            g = int(rng.randint(gen_short[0], gen_short[1] + 1))
+        prof = profiles[int(rng.choice(len(profiles), p=w))]
+        lat = prof.latency_mean * math.exp(prof.latency_jitter * rng.randn())
+        out.append(ServeRequest(
+            rid=rid, prompt=rng.randint(0, vocab_size, size=p).astype(
+                np.int32),
+            max_new=g, arrival=clock, client_latency=float(lat)))
+    return out
 
 
 # ---------------------------------------------------------------------------

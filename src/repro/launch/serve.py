@@ -1,21 +1,30 @@
-"""Serving launcher: batched prefill + KV-cache decode.
+"""Serving launcher: continuous-batching inference over a slot KV cache.
 
-Loads a research closure (or random-inits a config) and serves a batch of
-token prompts through the production prefill/decode path — the MLitB
-"tracking mode" (execute the latest model) at framework scale.
+Thin CLI over ``repro.serving.ServingEngine`` (docs/serving.md) — the
+MLitB "prediction to the public at large" path. A seeded open-loop
+request schedule (Poisson arrivals, mixed prompt/generation lengths,
+heterogeneous client latencies — core/simulation.py) streams through the
+engine's admission queue; requests of arbitrary length join and leave
+mid-flight without retracing, because step fns are keyed on power-of-two
+``(batch_cap, prompt_cap)`` buckets and decode runs one fixed
+``(max_batch, max_seq)`` shape.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
-  PYTHONPATH=src python -m repro.launch.serve --closure model.json --gen 32
+      --requests 32 --max-batch 8 --max-seq 256
+  PYTHONPATH=src python -m repro.launch.serve --closure model.json \
+      --requests 16 --simulate
+
+``--simulate`` times the run on the discrete-event ``ServeCostModel``
+clock (deterministic; what bench_serve.py gates); the default measures
+real wall-clock. ``serve_batch`` below is the one-batch-at-a-time
+reference path the engine is benchmarked against.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.closure import ResearchClosure, jaxify
@@ -29,7 +38,13 @@ def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
 
 def serve_batch(params, cfg, prompts: jnp.ndarray, gen: int,
                 prefix=None, frames=None):
-    """prompts: (B, P) int32 -> generated (B, gen) int32."""
+    """REFERENCE one-shot path: one fixed-shape batch, every row padded
+    to the same prompt length and decoded for the same ``gen`` steps.
+    prompts: (B, P) int32 -> generated (B, gen) int32.
+
+    This is the baseline the continuous-batching engine is gated against
+    (benchmarks/bench_serve.py) and the oracle the engine's per-request
+    outputs are tested against (tests/test_serving.py)."""
     B, P = prompts.shape
     prefill = jax.jit(build_prefill_step(cfg))
     decode = jax.jit(build_decode_step(cfg))
@@ -50,14 +65,50 @@ def serve_batch(params, cfg, prompts: jnp.ndarray, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
+def _serve_oneshot(params, cfg, args):
+    """Fallback for arch families without engine support: the reference
+    one-shot batch (random prompts + prefix/frames as the family needs)."""
+    import time
+
+    import numpy as np
+
+    batch, prompt_len, gen = 4, 24, 12
+    ks = jax.random.split(jax.random.PRNGKey(args.seed + 1), 2)
+    prompts = jax.random.randint(ks[0], (batch, prompt_len), 0,
+                                 cfg.vocab_size)
+    kw = {}
+    if cfg.arch_type == "vlm":
+        kw["prefix"] = jax.random.normal(
+            ks[1], (batch, cfg.n_prefix_tokens, cfg.d_model)) * 0.02
+    if cfg.arch_type == "audio":
+        kw["frames"] = jax.random.normal(
+            ks[1], (batch, cfg.encoder_seq, cfg.d_model)) * 0.02
+    t0 = time.time()
+    out = serve_batch(params, cfg, prompts, gen, **kw)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} [{cfg.arch_type}] one-shot reference path "
+          f"(no continuous-batching engine for this family yet)")
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({batch * gen / dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(out[0][:12]))
+    return 0
+
+
 def main(argv=None):
+    from repro.core.simulation import ServeCostModel, generate_requests
+    from repro.serving import ServingEngine
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--closure", default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=60.0,
+                    help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--simulate", action="store_true",
+                    help="discrete-event clock instead of wall-clock")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -72,25 +123,45 @@ def main(argv=None):
             cfg = cfg.reduced()
         params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
 
-    ks = jax.random.split(jax.random.PRNGKey(args.seed + 1), 2)
-    prompts = jax.random.randint(ks[0], (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    kw = {}
-    if cfg.arch_type == "vlm":
-        kw["prefix"] = jax.random.normal(
-            ks[1], (args.batch, cfg.n_prefix_tokens, cfg.d_model)) * 0.02
-    if cfg.arch_type == "audio":
-        kw["frames"] = jax.random.normal(
-            ks[1], (args.batch, cfg.encoder_seq, cfg.d_model)) * 0.02
+    if cfg.arch_type not in ("dense", "moe"):
+        # vlm/audio/ssm/hybrid: no slot-cache engine yet (ROADMAP
+        # follow-up) — serve one reference batch through serve_batch so
+        # every arch family the old launcher handled still serves
+        return _serve_oneshot(params, cfg, args)
 
-    t0 = time.time()
-    gen = serve_batch(params, cfg, prompts, args.gen, **kw)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen}")
-    print(f"generated {gen.shape} in {dt:.2f}s "
-          f"({args.batch*args.gen/dt:.1f} tok/s incl. compile)")
-    print("sample:", np.asarray(gen[0][:12]))
+    max_seq = args.max_seq
+    if cfg.sliding_window:
+        max_seq = min(max_seq, cfg.sliding_window)
+    # size the workload so every draw fits prompt + max_new <= max_seq,
+    # whatever --max-seq (or a window clamp) left us with
+    g_long_hi = max(2, max_seq // 2)
+    g_long_lo = max(1, max_seq // 4)
+    p_hi = max(1, min(max(8, max_seq // 8), max_seq - g_long_hi))
+    reqs = generate_requests(
+        args.requests, rate_rps=args.rate, vocab_size=cfg.vocab_size,
+        prompt_rng=(min(4, p_hi), p_hi),
+        gen_short=(1, min(12, g_long_lo)),
+        gen_long=(g_long_lo, g_long_hi),
+        seed=args.seed + 1)
+    engine = ServingEngine(params, cfg, max_batch=args.max_batch,
+                           max_seq=max_seq)
+    if args.simulate:
+        stats = engine.run_simulated(reqs, ServeCostModel())
+        mode = "simulated"
+    else:
+        stats = engine.run_closed_loop(reqs)
+        mode = "wall-clock"
+    print(f"arch={cfg.name} requests={stats.n_requests} "
+          f"max_batch={args.max_batch} max_seq={max_seq}")
+    print(f"{mode}: {stats.gen_tokens} tokens in {stats.makespan:.2f}s "
+          f"({stats.tokens_per_s:.1f} tok/s), p50={stats.p50_latency:.3f}s "
+          f"p95={stats.p95_latency:.3f}s")
+    print(f"engine: {stats.engine_steps} steps, "
+          f"{stats.decode_rows_live}/{stats.decode_rows_total} live decode "
+          f"rows, {stats.trace_count} traces over buckets "
+          f"{engine.buckets_seen}")
+    first = min(stats.completions, key=lambda c: c.rid)
+    print("sample:", first.tokens[:12])
     return 0
 
 

@@ -213,6 +213,42 @@ def attention_decode(p: Params, x: jnp.ndarray, pos: jnp.ndarray, *,
     return _out_proj(p, o), {"k": ck, "v": cv, "kpos": kpos}
 
 
+def attention_decode_ragged(p: Params, x: jnp.ndarray, pos: jnp.ndarray, *,
+                            cache: Params, live: jnp.ndarray,
+                            use_rope: bool = True,
+                            rope_theta: float = 10000.0
+                            ) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode with PER-ROW positions — the serving engine's slot
+    cache (docs/serving.md). x: (B,1,d); pos: (B,) int32 absolute position
+    of each row's current token; live: (B,) bool slot mask.
+
+    The cache here is LINEAR (slot t holds position t; no sliding-window
+    ring) and carries no ``kpos``: row b is valid exactly on ``[0, pos_b]``
+    after this call's write, so the mask is just ``t <= pos_b``. Stale
+    entries from a slot's previous occupant are only ever re-exposed at
+    ``t == pos_b`` — the very index this step overwrites — so the engine
+    never needs to scrub freed rows. Dead rows are masked out of the write
+    by scattering to an out-of-bounds batch index (dropped), and their
+    query attends only to slot 0 so the (ignored) output stays finite.
+    """
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, x)
+    posb = pos[:, None].astype(jnp.int32)                    # (B,1)
+    if use_rope:
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    slot = jnp.clip(posb[:, 0], 0, T - 1)
+    bidx = jnp.where(live, jnp.arange(B), B)                 # dead -> dropped
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    t = jnp.arange(T, dtype=jnp.int32)
+    valid = t[None, :] <= jnp.where(live, posb[:, 0], 0)[:, None]  # (B,T)
+    mask = valid[:, None, None, None, :]                     # (B,1,1,1,T)
+    o = grouped_attend(q, ck, cv, mask)
+    return _out_proj(p, o), {"k": ck, "v": cv}
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention KV (whisper decoder): computed once per sequence
 # ---------------------------------------------------------------------------

@@ -470,15 +470,79 @@ def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
     return unembed(head, x), new_cache
 
 
+def decode_step_ragged(params: Params, cfg: ArchConfig, token: jnp.ndarray,
+                       pos: jnp.ndarray, cache: Params, live: jnp.ndarray,
+                       unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """ONE-token decode with PER-ROW positions and a live-slot mask — the
+    continuous-batching step (repro.serving). token: (B,1) int32; pos: (B,)
+    int32 per-row absolute positions; live: (B,) bool. The cache is the
+    engine's slot cache: ``{"layers": {"k","v"}}`` with fixed
+    ``(B, max_seq)`` buffers and NO kpos (validity is ``t <= pos_b``).
+    Returns (logits (B,1,V), new cache). Attention-cached archs only."""
+    assert cfg.arch_type in ("dense", "vlm", "moe"), \
+        f"ragged decode needs an attention cache, not {cfg.arch_type}"
+    scan = functools.partial(scan_apply, unroll=unroll)
+    adt = dtype_of(cfg.activ_dtype)
+    x = embed(params["embed"], token).astype(adt)
+    if cfg.arch_type == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)
+    is_moe = cfg.arch_type == "moe"
+
+    def body(h, xs):
+        bp, cl = xs
+        hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+        a, new_c = attn_mod.attention_decode_ragged(
+            bp["attn"], hh, pos, cache=cl, live=live,
+            use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+        h = h + a
+        hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+        if is_moe:
+            moe_fn = moe_mod.moe_ffn_sorted if cfg.moe.impl == "sort" \
+                else moe_mod.moe_ffn
+            y, _ = moe_fn(bp["moe"], hh, cfg.moe)
+            if "shared" in bp:
+                y = y + mlp(bp["shared"], hh, "silu")
+            if "dense" in bp:
+                y = y + mlp(bp["dense"], hh, "silu")
+        else:
+            y = mlp(bp["mlp"], hh, cfg.mlp_act)
+        return h + y, new_c
+    x, new_layers = scan(body, x, (params["blocks"], cache["layers"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x), {"layers": new_layers}
+
+
 def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
             prefix: Optional[jnp.ndarray] = None,
             frames: Optional[jnp.ndarray] = None,
             cache_len: Optional[int] = None,
-            unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+            unroll: bool = False,
+            lengths: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Params]:
     """Forward over the prompt, building a decode cache of ``cache_len``
     slots (default: prompt + 64 so decode can continue immediately).
-    Returns (last-token logits (B,1,V), cache)."""
+    Returns (last-token logits (B,1,V), cache).
+
+    ``lengths`` (B,) int32 enables RAGGED prompts in one batch: row b's
+    true prompt is ``tokens[b, :lengths[b]]`` and the rest is padding.
+    Causal masking makes valid positions blind to the padded tail, so the
+    returned logits are row b's ``lengths[b]-1`` column — for dense
+    attention, exactly what an unpadded prefill would produce. MoE is
+    exact only while expert capacity does not bind: per-row capacity
+    ``ceil(S*k/E*cf)`` is computed from the PADDED length and the junk
+    tail is routed too, so with a tight ``capacity_factor`` a padded row
+    can drop tokens an unpadded run would keep (generous capacity — e.g.
+    ``reduced()``'s 4.0 — sees no drops and stays exact). Only
+    attention-cached archs support ragged prefill at all (an SSM/hybrid
+    recurrent state would have consumed the padding); the padded tail's
+    cache entries are overwritten by ragged decode before they can ever
+    be attended (models/attention.py).
+    """
     scan = functools.partial(scan_apply, unroll=unroll)
+    if lengths is not None:
+        assert cfg.arch_type in ("dense", "vlm", "moe"), \
+            f"ragged prefill needs an attention cache, not {cfg.arch_type}"
     adt = dtype_of(cfg.activ_dtype)
     x = embed(params["embed"], tokens).astype(adt)
     if cfg.arch_type == "vlm":
@@ -589,6 +653,12 @@ def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     else:
         raise ValueError(cfg.arch_type)
 
-    x = apply_norm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    if lengths is None:
+        x = x[:, -1:, :]
+    else:
+        off = cfg.n_prefix_tokens if cfg.arch_type == "vlm" else 0
+        idx = jnp.clip(lengths.astype(jnp.int32) + off - 1, 0, x.shape[1] - 1)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     return unembed(head, x), new_cache

@@ -1,0 +1,4 @@
+from repro.serving.engine import (Completion, ServeRequest,  # noqa: F401
+                                  ServeStats, ServingEngine, StepReport,
+                                  pow2_bucket)
+from repro.serving.baseline import simulate_static_batches  # noqa: F401

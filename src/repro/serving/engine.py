@@ -1,0 +1,386 @@
+"""Continuous-batching inference engine — MLitB's "prediction to the
+public at large" at framework scale (docs/serving.md).
+
+The engine owns ONE preallocated slot-based KV cache of fixed
+``(max_batch, max_seq)`` shape and interleaves prefill and decode over it
+so requests of arbitrary prompt/generation length join and leave
+mid-flight without retracing:
+
+  - **admission queue**: submitted requests wait FIFO until a slot frees;
+  - **prefill**: each engine step admits every waiting request that fits,
+    pads the group to a power-of-two ``(batch_cap, prompt_cap)`` bucket,
+    runs ONE ragged prefill (per-row true lengths, per-row last-valid
+    logits) and scatters the bucket's KV rows into the shared cache at the
+    assigned slots — step fns are keyed on the bucket exactly like the
+    reducer's capacity padding (core/reducer.py), so the trace cache is
+    bounded by the number of DISTINCT buckets, not by request count;
+  - **decode**: one fixed-shape ``(max_batch, max_seq)`` step over ALL
+    slots with per-slot positions and a live mask — it traces exactly
+    once, dead slots are masked out of the cache write, and finished
+    requests free their slot for the next admission.
+
+Slot invariant: cache row ``s`` is valid exactly on ``[0, pos_s]`` and
+decode at position ``p`` overwrites index ``p`` before attending to it,
+so freed rows never need scrubbing and a slot's previous occupant can
+never leak into its successor (tested in tests/test_serving.py).
+
+Timing is pluggable: ``run_simulated`` drives the engine on a
+discrete-event clock charged by a ``ServeCostModel`` over the PADDED
+bucket shapes (what the accelerator actually pays), which is what
+benchmarks/bench_serve.py gates against the one-batch-at-a-time
+``serve_batch`` baseline; ``run_closed_loop`` measures real wall-clock.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dtype_of
+from repro.train.step import build_decode_step, build_prefill_step
+
+PyTree = Any
+
+
+def pow2_bucket(n: int, lo: int = 1, hi: Optional[int] = None) -> int:
+    """Smallest power of two >= max(n, lo), clamped to ``hi`` (which the
+    caller guarantees is itself >= n)."""
+    b = max(1, int(lo))
+    while b < n:
+        b <<= 1
+    return b if hi is None else min(b, int(hi))
+
+
+@dataclass(frozen=True)
+class ServeRequest:
+    """One prediction request: an open-loop arrival from a client."""
+    rid: int
+    prompt: np.ndarray              # (P,) int32 prompt tokens
+    max_new: int                    # tokens to generate (greedy)
+    arrival: float = 0.0            # open-loop arrival time (s)
+    client_latency: float = 0.0     # one-way client network latency (s)
+
+
+@dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray              # (max_new,) int32 generated tokens
+    finish: float = 0.0             # clock at completion (stamped by run_*)
+    latency: float = 0.0            # finish - arrival + 2*client_latency
+
+
+@dataclass
+class StepReport:
+    """What one engine step executed — the unit the cost model charges."""
+    admitted: int
+    prefill_shape: Optional[Tuple[int, int]]    # (batch_cap, prompt_cap)
+    decode_batch: int                           # max_batch, or 0 if idle
+    completed: List[Completion] = field(default_factory=list)
+
+
+@dataclass
+class ServeStats:
+    n_requests: int
+    gen_tokens: int
+    makespan: float
+    tokens_per_s: float
+    p50_latency: float
+    p95_latency: float
+    engine_steps: int
+    prefill_tokens: int             # padded prefill tokens charged
+    decode_rows_live: int           # live rows across all decode steps
+    decode_rows_total: int          # max_batch * decode steps (padded)
+    trace_count: int
+    completions: List[Completion] = field(default_factory=list)
+
+
+@dataclass
+class _SlotState:
+    req: ServeRequest
+    gen: List[int]
+
+
+class ServingEngine:
+    """Admission queue + continuous batching over a shared slot KV cache."""
+
+    def __init__(self, params: PyTree, cfg: ArchConfig, *,
+                 max_batch: int, max_seq: int,
+                 prompt_bucket_min: int = 8, unroll: bool = False):
+        if cfg.arch_type not in ("dense", "moe"):
+            raise ValueError(
+                f"ServingEngine supports attention-cached LM archs "
+                f"(dense/moe), not {cfg.arch_type!r}")
+        if cfg.sliding_window and max_seq > cfg.sliding_window:
+            raise ValueError(
+                f"max_seq={max_seq} exceeds sliding_window="
+                f"{cfg.sliding_window}: the slot cache is linear (no ring)")
+        if cfg.arch_type == "moe" and \
+                cfg.moe.capacity_factor * cfg.moe.experts_per_token \
+                < cfg.moe.n_experts:
+            # per-row expert capacity ceil(S*k/E*cf) is computed from the
+            # PADDED prefill length and the junk tail is routed too; only
+            # cf >= E/k guarantees no row can overflow, so below that
+            # ragged outputs may diverge from an unpadded run when
+            # routing is skewed (models/transformer.py prefill docstring)
+            import warnings
+            warnings.warn(
+                f"{cfg.name}: MoE capacity_factor="
+                f"{cfg.moe.capacity_factor} can bind under padded ragged "
+                f"prefill (needs >= n_experts/experts_per_token = "
+                f"{cfg.moe.n_experts / cfg.moe.experts_per_token:.2f} for "
+                f"exactness); outputs are approximate when an expert "
+                f"overflows", stacklevel=2)
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq)
+        self.prompt_bucket_min = int(prompt_bucket_min)
+        self._unroll = unroll
+        adt = dtype_of(cfg.activ_dtype)
+        shape = (cfg.n_layers, self.max_batch, self.max_seq,
+                 cfg.n_kv_heads, cfg.head_dim)
+        self.cache: PyTree = {"layers": {"k": jnp.zeros(shape, adt),
+                                         "v": jnp.zeros(shape, adt)}}
+        self._slots: List[Optional[_SlotState]] = [None] * self.max_batch
+        self._pos = np.zeros(self.max_batch, np.int32)
+        self._tok = np.zeros(self.max_batch, np.int32)
+        self._live = np.zeros(self.max_batch, bool)
+        self._queue: Deque[ServeRequest] = deque()
+        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._decode_fn = None
+        self._trace_count = 0
+        self.engine_steps = 0
+        self.prefill_tokens = 0
+        self.decode_rows_live = 0
+        self.decode_rows_total = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def trace_count(self) -> int:
+        """Number of ACTUAL jit traces taken (the counter increments
+        inside the traced python body, so cache hits don't count). The
+        property test bounds this by distinct buckets, not requests."""
+        return self._trace_count
+
+    @property
+    def n_live(self) -> int:
+        return int(self._live.sum())
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def buckets_seen(self) -> List[Tuple[int, int]]:
+        return sorted(self._prefill_fns)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        p = int(np.asarray(req.prompt).size)
+        if p < 1 or req.max_new < 1:
+            raise ValueError(f"request {req.rid}: empty prompt or max_new")
+        if p + req.max_new > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt({p}) + max_new({req.max_new}) "
+                f"exceeds max_seq={self.max_seq}")
+        self._queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _get_prefill_fn(self, bcap: int, pcap: int):
+        fn = self._prefill_fns.get((bcap, pcap))
+        if fn is not None:
+            return fn
+        pstep = build_prefill_step(self.cfg, unroll=self._unroll,
+                                   cache_len=pcap)
+
+        def prefill_and_scatter(params, tokens, lengths, slots, cache):
+            self._trace_count += 1          # trace-time only side effect
+            logits, pc = pstep(params, {"tokens": tokens,
+                                        "lengths": lengths})
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            new = {}
+            for name in ("k", "v"):
+                buf = cache["layers"][name]
+                upd = pc["layers"][name].astype(buf.dtype)
+                # padding rows carry slot == max_batch: out-of-bounds
+                # scatter indices are dropped, so they write nothing
+                new[name] = buf.at[:, slots, :upd.shape[2]].set(upd)
+            return nxt, {"layers": new}
+
+        # donate the cache: step() overwrites self.cache with the return
+        # value, so aliasing in-place avoids copying the full slot
+        # buffers (the dominant memory traffic) every engine step
+        fn = jax.jit(prefill_and_scatter, donate_argnums=(4,))
+        self._prefill_fns[(bcap, pcap)] = fn
+        return fn
+
+    def _get_decode_fn(self):
+        if self._decode_fn is not None:
+            return self._decode_fn
+        dstep = build_decode_step(self.cfg, unroll=self._unroll, ragged=True)
+
+        def decode_all_slots(params, tok, pos, live, cache):
+            self._trace_count += 1
+            logits, cache = dstep(params, tok, pos, cache, live)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        self._decode_fn = jax.jit(decode_all_slots, donate_argnums=(4,))
+        return self._decode_fn
+
+    # ------------------------------------------------------------------
+    def _finish(self, s: int) -> Completion:
+        st = self._slots[s]
+        self._slots[s] = None
+        self._live[s] = False
+        self._pos[s] = 0
+        self._tok[s] = 0
+        return Completion(rid=st.req.rid, prompt_len=len(st.req.prompt),
+                          tokens=np.asarray(st.gen, np.int32))
+
+    def step(self) -> StepReport:
+        """One engine iteration: admit waiting requests into free slots,
+        prefill the admitted group (bucketed), then one decode across all
+        live slots. Returns what ran, for the cost model to charge."""
+        completed: List[Completion] = []
+        free = [s for s in range(self.max_batch) if self._slots[s] is None]
+        admitted: List[Tuple[ServeRequest, int]] = []
+        while self._queue and free:
+            admitted.append((self._queue.popleft(), free.pop(0)))
+
+        prefill_shape = None
+        if admitted:
+            n = len(admitted)
+            bcap = pow2_bucket(n)
+            pcap = pow2_bucket(max(len(r.prompt) for r, _ in admitted),
+                               lo=self.prompt_bucket_min, hi=self.max_seq)
+            tokens = np.zeros((bcap, pcap), np.int32)
+            lengths = np.ones(bcap, np.int32)
+            slots = np.full(bcap, self.max_batch, np.int32)
+            for i, (req, s) in enumerate(admitted):
+                p = len(req.prompt)
+                tokens[i, :p] = req.prompt
+                lengths[i] = p
+                slots[i] = s
+            fn = self._get_prefill_fn(bcap, pcap)
+            nxt, self.cache = fn(self.params, jnp.asarray(tokens),
+                                 jnp.asarray(lengths), jnp.asarray(slots),
+                                 self.cache)
+            nxt = np.asarray(nxt)
+            self.prefill_tokens += bcap * pcap
+            for i, (req, s) in enumerate(admitted):
+                self._slots[s] = _SlotState(req=req, gen=[int(nxt[i])])
+                self._pos[s] = len(req.prompt)
+                self._tok[s] = int(nxt[i])
+                self._live[s] = True
+                if req.max_new <= 1:
+                    completed.append(self._finish(s))
+            prefill_shape = (bcap, pcap)
+
+        decode_batch = 0
+        if self._live.any():
+            fn = self._get_decode_fn()
+            nxt, self.cache = fn(self.params,
+                                 jnp.asarray(self._tok[:, None]),
+                                 jnp.asarray(self._pos),
+                                 jnp.asarray(self._live), self.cache)
+            nxt = np.asarray(nxt)
+            decode_batch = self.max_batch
+            self.decode_rows_live += int(self._live.sum())
+            self.decode_rows_total += self.max_batch
+            for s in range(self.max_batch):
+                if not self._live[s]:
+                    continue
+                st = self._slots[s]
+                st.gen.append(int(nxt[s]))
+                self._pos[s] += 1
+                self._tok[s] = int(nxt[s])
+                if len(st.gen) >= st.req.max_new:
+                    completed.append(self._finish(s))
+
+        self.engine_steps += 1
+        return StepReport(len(admitted), prefill_shape, decode_batch,
+                          completed)
+
+    # ------------------------------------------------------------------
+    def _begin_run(self):
+        assert not self._queue and not self._live.any(), \
+            "engine already has work in flight; one run_* call at a time"
+        # throughput counters are PER RUN (trace_count and the step-fn
+        # cache are engine-lifetime: reuse across runs shares traces)
+        self.engine_steps = 0
+        self.prefill_tokens = 0
+        self.decode_rows_live = 0
+        self.decode_rows_total = 0
+
+    def _stats(self, completions: List[Completion],
+               makespan: float) -> ServeStats:
+        lats = [c.latency for c in completions]
+        gen = sum(int(c.tokens.size) for c in completions)
+        return ServeStats(
+            n_requests=len(completions), gen_tokens=gen,
+            makespan=makespan,
+            tokens_per_s=gen / makespan if makespan > 0 else float("inf"),
+            p50_latency=float(np.percentile(lats, 50)) if lats else 0.0,
+            p95_latency=float(np.percentile(lats, 95)) if lats else 0.0,
+            engine_steps=self.engine_steps,
+            prefill_tokens=self.prefill_tokens,
+            decode_rows_live=self.decode_rows_live,
+            decode_rows_total=self.decode_rows_total,
+            trace_count=self._trace_count, completions=completions)
+
+    def run_simulated(self, requests: Sequence[ServeRequest],
+                      cost: "Any") -> ServeStats:
+        """Open-loop run on a discrete-event clock: requests arrive at
+        ``req.arrival``, each engine step advances the clock by the cost
+        model's charge for the PADDED shapes it executed. Outputs are the
+        real model's tokens; only time is simulated."""
+        self._begin_run()
+        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        by_rid = {r.rid: r for r in reqs}
+        assert len(by_rid) == len(reqs), "duplicate request ids"
+        clock, i, out = 0.0, 0, []
+        while len(out) < len(reqs):
+            while i < len(reqs) and reqs[i].arrival <= clock + 1e-12:
+                self.submit(reqs[i])
+                i += 1
+            if not self._queue and not self._live.any():
+                clock = max(clock, reqs[i].arrival)   # idle: jump ahead
+                continue
+            rep = self.step()
+            dt = 0.0
+            if rep.prefill_shape is not None:
+                dt += cost.prefill_time(*rep.prefill_shape)
+            if rep.decode_batch:
+                dt += cost.decode_time(rep.decode_batch)
+            clock += dt
+            for c in rep.completed:
+                req = by_rid[c.rid]
+                c.finish = clock
+                c.latency = clock - req.arrival + 2.0 * req.client_latency
+                out.append(c)
+        return self._stats(out, makespan=clock)
+
+    def run_closed_loop(self,
+                        requests: Sequence[ServeRequest]) -> ServeStats:
+        """All requests available at t=0; real wall-clock timing."""
+        self._begin_run()
+        for r in sorted(requests, key=lambda r: r.rid):
+            self.submit(r)
+        t0 = time.perf_counter()
+        out: List[Completion] = []
+        while len(out) < len(requests):
+            rep = self.step()
+            now = time.perf_counter() - t0
+            for c in rep.completed:
+                c.finish = now
+                c.latency = now
+                out.append(c)
+        return self._stats(out, makespan=time.perf_counter() - t0)

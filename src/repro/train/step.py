@@ -62,7 +62,14 @@ def build_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
     return train_step
 
 
-def build_prefill_step(cfg: ArchConfig, unroll: bool = False):
+def build_prefill_step(cfg: ArchConfig, unroll: bool = False,
+                       cache_len: Optional[int] = None):
+    """Prefill step fn. The batch may carry ``lengths`` (B,) int32 for
+    RAGGED prompts (row b's true prompt is ``tokens[b, :lengths[b]]``):
+    the returned logits are then each row's last VALID column, and the
+    serving engine scatters the cache into its shared slot buffers
+    (repro.serving.engine). ``cache_len`` pins the built cache's KV length
+    (the engine passes its prompt bucket so shapes stay bucketed)."""
     def prefill_step(params, batch):
         kw = {}
         if cfg.arch_type == "vlm":
@@ -70,12 +77,26 @@ def build_prefill_step(cfg: ArchConfig, unroll: bool = False):
         if cfg.arch_type == "audio":
             kw["frames"] = batch.get("frames")
         logits, cache = tf.prefill(params, cfg, batch["tokens"],
-                                   unroll=unroll, **kw)
+                                   unroll=unroll, cache_len=cache_len,
+                                   lengths=batch.get("lengths"), **kw)
         return logits, cache
     return prefill_step
 
 
-def build_decode_step(cfg: ArchConfig, unroll: bool = False):
+def build_decode_step(cfg: ArchConfig, unroll: bool = False,
+                      ragged: bool = False):
+    """Decode step fn. ``ragged=False`` (default): the classic lockstep
+    signature ``(params, token, pos_scalar, cache)`` — every row at the
+    same position. ``ragged=True``: the continuous-batching signature
+    ``(params, token, pos (B,), cache, live (B,))`` with per-slot
+    positions and a live mask, writing into the engine's shared slot
+    cache (repro.serving)."""
+    if ragged:
+        def ragged_decode_step(params, token, pos, cache, live):
+            return tf.decode_step_ragged(params, cfg, token, pos, cache,
+                                         live, unroll=unroll)
+        return ragged_decode_step
+
     def decode_step(params, token, pos, cache):
         return tf.decode_step(params, cfg, token, pos, cache, unroll=unroll)
     return decode_step

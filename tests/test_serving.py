@@ -1,0 +1,253 @@
+"""Serving-path tests (docs/serving.md):
+
+  - ragged prefill+decode through the slot KV cache must reproduce the
+    full-forward NO-CACHE greedy oracle exactly, for ragged prompt
+    lengths co-batched in one engine run;
+  - engine fuzz: a seeded open-loop schedule completes every request,
+    leaks no slots, and each slot's output is independent of its
+    co-batched neighbors;
+  - trace discipline: the jit trace count is bounded by the DISTINCT
+    power-of-two (batch_cap, prompt_cap) buckets visited, not by the
+    number of requests served.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.core.simulation import ServeCostModel, generate_requests
+from repro.models import transformer as tf
+from repro.serving import ServeRequest, ServingEngine, pow2_bucket
+
+TINY_DENSE = ArchConfig(
+    name="tiny-dense", arch_type="dense", n_layers=2, d_model=32,
+    n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=61, head_dim=16,
+    param_dtype="float32", activ_dtype="float32", tie_embeddings=True)
+
+TINY_MOE = ArchConfig(
+    name="tiny-moe", arch_type="moe", n_layers=2, d_model=32,
+    n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=61, head_dim=16,
+    param_dtype="float32", activ_dtype="float32", tie_embeddings=True,
+    moe=MoEConfig(n_experts=4, experts_per_token=2, d_ff_expert=32,
+                  capacity_factor=4.0))
+
+
+def _params(cfg, seed=0):
+    return tf.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _mk_requests(cfg, rng, n, max_prompt=10, max_new=6):
+    reqs = []
+    for rid in range(n):
+        p = int(rng.randint(1, max_prompt + 1))
+        g = int(rng.randint(1, max_new + 1))
+        reqs.append(ServeRequest(
+            rid=rid, prompt=rng.randint(0, cfg.vocab_size, p).astype(
+                np.int32), max_new=g))
+    return reqs
+
+
+def _full_forward_greedy(params, cfg, prompt, max_new):
+    """The no-cache oracle: re-run the whole sequence through the
+    TRAINING forward for every generated token."""
+    toks = [int(t) for t in prompt]
+    out = []
+    for _ in range(max_new):
+        logits, _ = tf.forward(params, cfg, jnp.asarray([toks]), remat=False)
+        t = int(jnp.argmax(logits[0, -1]))
+        out.append(t)
+        toks.append(t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pow2 buckets
+# ---------------------------------------------------------------------------
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (1, 2, 3, 4, 5, 9)] == [1, 2, 4, 4, 8, 16]
+    assert pow2_bucket(3, lo=8) == 8
+    assert pow2_bucket(100, hi=96) == 96          # clamped to max_seq
+
+
+# ---------------------------------------------------------------------------
+# ragged prefill == unpadded prefill
+# ---------------------------------------------------------------------------
+def test_ragged_prefill_matches_unpadded():
+    cfg = TINY_DENSE
+    params = _params(cfg)
+    rng = np.random.RandomState(0)
+    lens = np.array([5, 3, 8, 1], np.int32)
+    toks = np.zeros((4, 8), np.int32)
+    for b, L in enumerate(lens):
+        toks[b, :L] = rng.randint(0, cfg.vocab_size, L)
+    lg, _ = tf.prefill(params, cfg, jnp.asarray(toks), cache_len=8,
+                       lengths=jnp.asarray(lens))
+    for b, L in enumerate(lens):
+        ref, _ = tf.prefill(params, cfg, jnp.asarray(toks[b:b + 1, :L]),
+                            cache_len=int(L))
+        np.testing.assert_allclose(np.asarray(lg[b]), np.asarray(ref[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_prefill_rejects_recurrent_archs():
+    from repro.configs import get_config
+    cfg = get_config("mamba2-780m").reduced()
+    params = _params(cfg)
+    toks = jnp.zeros((2, 8), jnp.int32)
+    with pytest.raises(AssertionError, match="attention cache"):
+        tf.prefill(params, cfg, toks, cache_len=8,
+                   lengths=jnp.array([3, 5], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# engine vs the full-forward no-cache oracle, ragged lengths in one batch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [TINY_DENSE, TINY_MOE],
+                         ids=["dense", "moe"])
+def test_engine_matches_full_forward_oracle(cfg):
+    params = _params(cfg)
+    rng = np.random.RandomState(3)
+    reqs = _mk_requests(cfg, rng, n=5)
+    # every prompt length distinct -> genuinely ragged co-batching
+    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32)
+    stats = engine.run_closed_loop(reqs)
+    assert stats.n_requests == len(reqs)
+    for c in stats.completions:
+        req = reqs[c.rid]
+        oracle = _full_forward_greedy(params, cfg, req.prompt, req.max_new)
+        assert c.tokens.tolist() == oracle, (
+            f"request {c.rid} (prompt_len={c.prompt_len}, "
+            f"max_new={req.max_new}): engine {c.tokens.tolist()} != "
+            f"no-cache oracle {oracle}")
+
+
+# ---------------------------------------------------------------------------
+# engine fuzz: seeded schedule -> no slot leaks, everyone completes,
+# outputs independent of co-batched neighbors
+# ---------------------------------------------------------------------------
+def test_engine_fuzz_no_leaks_and_neighbor_independence():
+    cfg = TINY_DENSE
+    params = _params(cfg)
+    reqs = generate_requests(
+        30, rate_rps=400.0, vocab_size=cfg.vocab_size, prompt_rng=(1, 12),
+        gen_short=(1, 6), gen_long=(8, 16), long_frac=0.25, seed=7)
+    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32)
+    stats = engine.run_simulated(reqs, ServeCostModel())
+
+    # every request completes exactly once, with exactly max_new tokens
+    by_rid = {r.rid: r for r in reqs}
+    seen = sorted(c.rid for c in stats.completions)
+    assert seen == sorted(by_rid), "lost or duplicated completions"
+    for c in stats.completions:
+        assert c.tokens.size == by_rid[c.rid].max_new
+        assert c.finish >= by_rid[c.rid].arrival
+        assert c.latency >= 2.0 * by_rid[c.rid].client_latency
+    # no slot leaks: the engine drains to fully idle
+    assert engine.n_live == 0 and engine.n_queued == 0
+    assert all(s is None for s in engine._slots)
+    assert not engine._live.any() and (engine._pos == 0).all()
+    # per-slot outputs independent of co-batched neighbors: replaying any
+    # request ALONE (same engine, so traces are shared) yields the same
+    # tokens it got while sharing the cache with up to 3 others
+    solo = {}
+    for r in reqs[:8]:
+        solo[r.rid] = engine.run_closed_loop(
+            [ServeRequest(rid=r.rid, prompt=r.prompt,
+                          max_new=r.max_new)]).completions[0]
+    for c in stats.completions:
+        if c.rid in solo:
+            assert c.tokens.tolist() == solo[c.rid].tokens.tolist(), (
+                f"request {c.rid}: co-batched output differs from solo run")
+
+
+def test_engine_reuses_freed_slots_without_scrubbing():
+    """A long request keeps its slot while short neighbors cycle through
+    the OTHER slots — successors must never see a predecessor's KV."""
+    cfg = TINY_DENSE
+    params = _params(cfg)
+    rng = np.random.RandomState(11)
+    long_req = ServeRequest(rid=0, prompt=rng.randint(0, 61, 6).astype(
+        np.int32), max_new=20)
+    shorts = [ServeRequest(rid=1 + i, prompt=rng.randint(0, 61, int(
+        rng.randint(1, 10))).astype(np.int32), max_new=3)
+        for i in range(6)]
+    engine = ServingEngine(params, cfg, max_batch=2, max_seq=32)
+    stats = engine.run_closed_loop([long_req] + shorts)
+    assert stats.n_requests == 7
+    for c in stats.completions:
+        req = ([long_req] + shorts)[c.rid]
+        oracle = _full_forward_greedy(params, cfg, req.prompt, req.max_new)
+        assert c.tokens.tolist() == oracle, f"slot-reuse leak at rid {c.rid}"
+
+
+# ---------------------------------------------------------------------------
+# trace discipline: traces grow with capacity buckets, not request count
+# ---------------------------------------------------------------------------
+def test_trace_count_bounded_by_buckets():
+    cfg = TINY_DENSE
+    params = _params(cfg)
+    engine = ServingEngine(params, cfg, max_batch=4, max_seq=64,
+                           prompt_bucket_min=8)
+    rng = np.random.RandomState(5)
+
+    def schedule(n, seed):
+        return generate_requests(
+            n, rate_rps=500.0, vocab_size=cfg.vocab_size,
+            prompt_rng=(1, 30), gen_short=(1, 5), gen_long=(6, 10),
+            long_frac=0.3, seed=seed)
+
+    engine.run_simulated(schedule(20, seed=1), ServeCostModel())
+    t1 = engine.trace_count
+    buckets1 = set(engine.buckets_seen)
+    # one decode trace + one per distinct (batch_cap, prompt_cap) bucket
+    assert t1 == 1 + len(buckets1), (t1, sorted(buckets1))
+    # prompt caps are pow2-bucketed within [prompt_bucket_min, max_seq],
+    # batch caps within [1, max_batch] -> the bucket space is tiny
+    for b, p in buckets1:
+        assert b in (1, 2, 4) and p in (8, 16, 32, 64)
+
+    # 3x more REQUESTS from the same distribution: traces grow only if a
+    # genuinely new bucket shows up — never with request count
+    engine.run_simulated(schedule(60, seed=2), ServeCostModel())
+    t2 = engine.trace_count
+    buckets2 = set(engine.buckets_seen)
+    assert t2 == 1 + len(buckets2), (t2, sorted(buckets2))
+    assert t2 - t1 == len(buckets2 - buckets1)
+
+    # a longer prompt than ever seen forces EXACTLY one new trace
+    new_len = 40                                  # pow2 bucket 64, unseen
+    assert all(p < 64 for _, p in buckets2)
+    engine.run_closed_loop([ServeRequest(
+        rid=0, prompt=rng.randint(0, 61, new_len).astype(np.int32),
+        max_new=2)])
+    assert engine.trace_count == t2 + 1
+
+
+# ---------------------------------------------------------------------------
+# admission / configuration validation
+# ---------------------------------------------------------------------------
+def test_engine_validation():
+    cfg = TINY_DENSE
+    params = _params(cfg)
+    engine = ServingEngine(params, cfg, max_batch=2, max_seq=16)
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        engine.submit(ServeRequest(rid=0, prompt=np.zeros(10, np.int32),
+                                   max_new=7))
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.submit(ServeRequest(rid=1, prompt=np.zeros(0, np.int32),
+                                   max_new=2))
+
+    from repro.configs import get_config
+    ssm_cfg = get_config("mamba2-780m").reduced()
+    with pytest.raises(ValueError, match="attention-cached"):
+        ServingEngine(_params(ssm_cfg), ssm_cfg, max_batch=2, max_seq=16)
+
+    import dataclasses
+    win_cfg = dataclasses.replace(cfg, sliding_window=8)
+    with pytest.raises(ValueError, match="sliding_window"):
+        ServingEngine(params, win_cfg, max_batch=2, max_seq=16)
+    # a window that COVERS the whole slot cache is fine (linear == ring)
+    ServingEngine(params, dataclasses.replace(cfg, sliding_window=16),
+                  max_batch=2, max_seq=16)
