@@ -144,7 +144,7 @@ def run_smoke(iters: int = 12) -> Dict:
     n = red.flat_n
     lattice_bytes = {8 * k for k in comp.k_lattice(n)}
     logs = loop.run(iters)
-    stepped = [l for l in logs if l.wire_bytes > 0]
+    stepped = [lg for lg in logs if lg.wire_bytes > 0]
     assert stepped, "adaptive path never produced a reduce step"
     for log in stepped:
         # every message's bytes sit on the compressor's k-lattice and
@@ -166,7 +166,7 @@ def run_smoke(iters: int = 12) -> Dict:
           f"wire accounting matches packed_wire_bytes")
     return {"iters": iters, "reduce_steps": len(stepped),
             "steady_state_bytes": sizes,
-            "total_wire_bytes": sum(l.wire_bytes for l in stepped)}
+            "total_wire_bytes": sum(lg.wire_bytes for lg in stepped)}
 
 
 def main(argv: List[str]) -> None:

@@ -42,7 +42,7 @@ buckets visited — plus a TrainState save/restore sanity hop.
 from __future__ import annotations
 
 import sys
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -1,0 +1,207 @@
+"""Hot-swap serving under a live training loop vs frozen-model serving.
+
+MLitB's two pillars are ONE system: the fleet trains the very model the
+public queries. PR 4's engine served a frozen closure; this benchmark
+gates the live train->serve loop (docs/serving.md §6): an elastic,
+churny training fleet (deadline partial participation, a probabilistic
+straggler, a scripted join and a mid-iteration death) publishes its
+post-step params every ``publish_every`` iterations, and the serving
+engine HOT-SWAPS them while requests are in flight — in-progress slots
+finish under the version they pinned at admission, new admissions take
+the latest, and nothing retraces because the trees are
+trace-compatible.
+
+Both serving arms run the same seeded open-loop schedule (long prompts
+included, so chunked prefill is exercised) on the same discrete-event
+``ServeCostModel`` clock:
+
+  - **no-swap**: the engine serves the initial params, frozen;
+  - **swap**: the same engine config, with the training loop's publishes
+    hot-swapped in at their publish times (one shared clock,
+    launch/train_serve.py).
+
+Gates (seed 0; the clock is simulated, so shared-runner noise cannot
+flake them):
+
+  - throughput: swap-arm tokens/s >= 0.95x the no-swap arm (the cost of
+    version-grouped decode dispatches during drain windows must stay
+    under 5%);
+  - integrity: both arms complete every request exactly once, and EVERY
+    swap-arm completion is bit-equal to a solo replay under its pinned
+    version (zero dropped or corrupted requests);
+  - traces: trace count == 1 + distinct prefill buckets in BOTH arms
+    (PR 4's bound — swaps and version groups add NO traces and NO
+    buckets);
+  - liveness: several swaps actually landed mid-run and clients saw
+    more than one version.
+
+``--smoke`` (CI): a shorter schedule, same gates, plus the
+BENCH_train_serve.json artifact the bench-regression job consumes.
+
+    PYTHONPATH=src python benchmarks/bench_train_serve.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List
+
+N_REQ = 280
+SMOKE_REQ = 140
+ITERS = 16
+SMOKE_ITERS = 12
+RATE_RPS = 30.0                # arrivals span the training horizon, so
+                               # the schedule straddles several publishes
+MAX_BATCH = 4
+MAX_SEQ = 64
+PROMPT_CAP = 16                # largest prefill bucket: prompts to 36
+                               # tokens prefill in chunks
+PUBLISH_EVERY = 3
+TRAIN_T = 0.5                  # training iteration budget (s)
+GATE_RATIO = 0.95
+MIN_SWAPS = 3
+MIN_VERSIONS = 3
+
+
+def _requests(n: int, cfg, seed: int):
+    from repro.core.simulation import generate_requests
+    return generate_requests(
+        n, rate_rps=RATE_RPS, vocab_size=cfg.vocab_size,
+        prompt_rng=(4, 36), gen_short=(2, 8), gen_long=(18, 26),
+        long_frac=0.3, seed=seed)
+
+
+def run(n_req: int, iters: int, seed: int = 0) -> Dict:
+    from repro.core.simulation import ServeCostModel
+    from repro.launch.train_serve import run_train_serve, tiny_cfg
+    from repro.serving import ServeRequest, ServingEngine
+
+    cfg = tiny_cfg()
+    reqs = _requests(n_req, cfg, seed + 1)
+    # scaled per-token costs: the tiny LM stands in for a production
+    # model, so the simulated accelerator charges production-sized step
+    # times — request lifetimes then genuinely overlap the publishes
+    cost = ServeCostModel(step_overhead=2e-3, prefill_tok=1e-4,
+                          decode_row=2e-3)
+
+    # ---- swap arm: live training publishes into the serving session ----
+    out = run_train_serve(cfg, reqs, iterations=iters,
+                          publish_every=PUBLISH_EVERY, T=TRAIN_T,
+                          seed=seed, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                          prompt_cap=PROMPT_CAP, cost=cost)
+    swap, versions = out["stats"], out["versions"]
+    swap_engine = out["engine"]
+
+    # ---- no-swap arm: identical engine config, frozen initial params ----
+    frozen = ServingEngine(versions[0], cfg, max_batch=MAX_BATCH,
+                           max_seq=MAX_SEQ, prompt_cap=PROMPT_CAP)
+    base = frozen.run_simulated(reqs, cost)
+
+    # ---- integrity: completeness + solo replay under pinned version ----
+    by_rid = {r.rid: r for r in reqs}
+    for arm_stats, arm in ((swap, "swap"), (base, "no-swap")):
+        got = sorted(c.rid for c in arm_stats.completions)
+        assert got == sorted(by_rid), f"{arm}: dropped/duplicated requests"
+        for c in arm_stats.completions:
+            assert c.tokens.size == by_rid[c.rid].max_new, \
+                f"{arm}: rid {c.rid} truncated"
+    replayers: Dict[int, ServingEngine] = {}
+    corrupted = 0
+    for c in swap.completions:
+        if c.version not in replayers:
+            # smaller batch shape: an INDEPENDENT decode trace, so the
+            # replay does not silently share the co-batched path's bugs
+            replayers[c.version] = ServingEngine(
+                versions[c.version], cfg, max_batch=2,
+                max_seq=MAX_SEQ, prompt_cap=PROMPT_CAP)
+        r = by_rid[c.rid]
+        solo = replayers[c.version].run_closed_loop(
+            [ServeRequest(rid=r.rid, prompt=r.prompt,
+                          max_new=r.max_new)]).completions[0]
+        if c.tokens.tolist() != solo.tokens.tolist():
+            corrupted += 1
+
+    extra = swap.decode_dispatches - base.decode_dispatches
+    return {
+        "n_requests": n_req,
+        "train_iterations": iters,
+        "gen_tokens": swap.gen_tokens,
+        "swap": {"tokens_per_s": swap.tokens_per_s,
+                 "makespan_s": swap.makespan,
+                 "p50_latency_s": swap.p50_latency,
+                 "p95_latency_s": swap.p95_latency,
+                 "engine_steps": swap.engine_steps,
+                 "prefill_chunks": swap.prefill_chunks,
+                 "decode_dispatches": swap.decode_dispatches,
+                 "swap_count": swap.swap_count,
+                 "versions_served": {str(v): n for v, n
+                                     in sorted(
+                                         swap.versions_served.items())},
+                 "trace_count": swap.trace_count,
+                 "buckets": [list(b) for b in swap_engine.buckets_seen]},
+        "no_swap": {"tokens_per_s": base.tokens_per_s,
+                    "makespan_s": base.makespan,
+                    "p95_latency_s": base.p95_latency,
+                    "decode_dispatches": base.decode_dispatches,
+                    "trace_count": base.trace_count,
+                    "buckets": [list(b) for b in frozen.buckets_seen]},
+        "throughput_ratio": swap.tokens_per_s / base.tokens_per_s,
+        "extra_decode_dispatches": extra,
+        "corrupted": corrupted,
+        "n_prefill_buckets": len(swap_engine.buckets_seen),
+    }
+
+
+def check_and_report(out: Dict) -> None:
+    s, b = out["swap"], out["no_swap"]
+    print(f"requests={out['n_requests']} gen_tokens={out['gen_tokens']} "
+          f"train_iters={out['train_iterations']}")
+    print(f"   no-swap: {b['tokens_per_s']:8.1f} tok/s  "
+          f"makespan={b['makespan_s']:.2f}s  p95={b['p95_latency_s']:.3f}s  "
+          f"{b['decode_dispatches']} decode dispatches")
+    print(f"      swap: {s['tokens_per_s']:8.1f} tok/s  "
+          f"makespan={s['makespan_s']:.2f}s  p95={s['p95_latency_s']:.3f}s  "
+          f"{s['decode_dispatches']} dispatches "
+          f"(+{out['extra_decode_dispatches']} for version groups), "
+          f"{s['swap_count']} swaps over {len(s['versions_served'])} "
+          f"served versions")
+    assert out["corrupted"] == 0, (
+        f"{out['corrupted']} completions differ from their pinned-version "
+        f"solo replay — hot-swap corrupted in-flight requests")
+    assert out["throughput_ratio"] >= GATE_RATIO, (
+        f"hot-swap serving {out['throughput_ratio']:.3f}x < {GATE_RATIO}x "
+        f"the no-swap arm — version-grouped dispatch overhead too high")
+    assert s["swap_count"] >= MIN_SWAPS, (
+        f"only {s['swap_count']} swaps landed mid-run; the bench is not "
+        f"exercising continuous swapping")
+    assert len(s["versions_served"]) >= MIN_VERSIONS, \
+        "every client saw the same version — publishes never mixed in"
+    assert out["extra_decode_dispatches"] >= 1, (
+        "no decode step ever co-batched two versions — the swap arm "
+        "never actually exercised in-flight version pinning")
+    assert s["trace_count"] == 1 + out["n_prefill_buckets"], (
+        f"{s['trace_count']} traces != 1 + {out['n_prefill_buckets']} "
+        f"buckets — swaps or version groups retraced")
+    assert b["trace_count"] == 1 + len(b["buckets"]), "no-swap arm retraced"
+    assert s["buckets"] == b["buckets"], \
+        "swap arm visited different prefill buckets than the no-swap arm"
+    print(f"OK: hot-swap serving {out['throughput_ratio']:.3f}x no-swap "
+          f"tokens/s (gate {GATE_RATIO}x), 0 corrupted of "
+          f"{out['n_requests']}, {s['trace_count']} traces over "
+          f"{out['n_prefill_buckets']} buckets in both arms")
+
+
+def main(argv: List[str]) -> None:
+    from _bench_io import emit_bench_json
+
+    smoke = "--smoke" in argv
+    out = run(SMOKE_REQ if smoke else N_REQ,
+              SMOKE_ITERS if smoke else ITERS)
+    out["mode"] = "smoke" if smoke else "full"
+    # record the measured numbers BEFORE gating, so a regression still
+    # leaves its artifact to diagnose from
+    emit_bench_json("train_serve", out)
+    check_and_report(out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

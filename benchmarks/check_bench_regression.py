@@ -1,0 +1,140 @@
+"""Bench-regression gate for CI (.github/workflows/ci.yml).
+
+Compares the current run's ``BENCH_*.json`` smoke artifacts against a
+baseline set — the previous successful run's artifacts when available,
+else the committed ``benchmarks/baselines/*.json`` — and fails if any
+headline metric regresses beyond its tolerance.
+
+Headline metrics are listed per bench below. Metrics timed by the
+discrete-event simulators are deterministic and use the tight default
+tolerance; wall-clock metrics (bench_reduce) get a loose tolerance so
+shared-runner noise cannot flake the gate while a catastrophic
+regression still fails it.
+
+    python benchmarks/check_bench_regression.py \\
+        --current . --baseline benchmarks/baselines [--threshold 0.10]
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# bench name -> [(dotted key, direction, tolerance_override), ...]
+# direction "higher": fail when current < baseline * (1 - tol)
+# direction "lower":  fail when current > baseline * (1 + tol)
+HEADLINES = {
+    "reduce": [
+        # wall-clock on shared runners: only a catastrophic loss fails
+        ("worst_speedup", "higher", 0.5),
+    ],
+    "adaptive_frac": [
+        ("total_wire_bytes", "lower", None),
+        ("reduce_steps", "higher", None),
+    ],
+    "churn": [
+        ("trace_count", "lower", None),
+        ("n_late_total", "lower", None),
+    ],
+    "serve": [
+        ("speedup", "higher", None),
+        ("continuous.tokens_per_s", "higher", None),
+        ("continuous.p95_latency_s", "lower", None),
+        ("continuous.trace_count", "lower", None),
+    ],
+    "train_serve": [
+        ("throughput_ratio", "higher", None),
+        ("swap.tokens_per_s", "higher", None),
+        ("swap.p95_latency_s", "lower", None),
+        ("swap.trace_count", "lower", None),
+    ],
+}
+
+
+def dig(doc, dotted):
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def load_results(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return doc.get("results", doc)
+
+
+def compare(name, current, baseline, default_tol):
+    failures = []
+    notes = []
+    for dotted, direction, override in HEADLINES[name]:
+        tol = default_tol if override is None else override
+        cur = dig(current, dotted)
+        base = dig(baseline, dotted)
+        if cur is None:
+            failures.append(f"{name}:{dotted} missing from current artifact")
+            continue
+        if base is None:
+            notes.append(f"{name}:{dotted} missing from baseline (skipped)")
+            continue
+        cur, base = float(cur), float(base)
+        if direction == "higher":
+            bad = cur < base * (1.0 - tol)
+        else:
+            bad = cur > base * (1.0 + tol)
+        arrow = "↑" if direction == "higher" else "↓"
+        line = (
+            f"{name}:{dotted} {arrow} baseline={base:.4g} "
+            f"current={cur:.4g} (tol {tol:.0%})"
+        )
+        if bad:
+            failures.append("REGRESSION " + line)
+        else:
+            notes.append("ok " + line)
+    return failures, notes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=".", help="dir with this run's BENCH_*.json")
+    ap.add_argument("--baseline", default="benchmarks/baselines")
+    ap.add_argument("--threshold", type=float, default=0.10)
+    args = ap.parse_args(argv)
+
+    current_dir = Path(args.current)
+    baseline_dir = Path(args.baseline)
+    failures = []
+    seen = 0
+    for name in sorted(HEADLINES):
+        cur_path = current_dir / f"BENCH_{name}.json"
+        base_path = baseline_dir / f"BENCH_{name}.json"
+        if not base_path.exists():
+            print(f"{name}: no baseline at {base_path} (first run) — skipped")
+            continue
+        if not cur_path.exists():
+            failures.append(
+                f"{name}: baseline exists but current run produced no "
+                f"{cur_path.name} — did the smoke bench stop emitting?"
+            )
+            continue
+        seen += 1
+        fails, notes = compare(
+            name, load_results(cur_path), load_results(base_path), args.threshold
+        )
+        for line in notes:
+            print(line)
+        failures.extend(fails)
+
+    print(f"compared {seen} bench artifact(s) against {baseline_dir}")
+    if failures:
+        for line in failures:
+            print(line, file=sys.stderr)
+        return 1
+    print("no bench regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

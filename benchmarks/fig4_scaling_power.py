@@ -39,9 +39,10 @@ def measure(n_workers: int, *, T: float = 4.0, iters: int = 8,
     tail = logs[iters // 2:]
     return {
         "n": n_workers,
-        "power_vps": float(np.mean([l.power for l in tail])),
-        "latency_ms": float(np.mean([l.mean_latency for l in tail])) * 1e3,
-        "wall_per_iter_s": float(np.mean([l.wall_time for l in tail])),
+        "power_vps": float(np.mean([lg.power for lg in tail])),
+        "latency_ms": float(np.mean([lg.mean_latency
+                                     for lg in tail])) * 1e3,
+        "wall_per_iter_s": float(np.mean([lg.wall_time for lg in tail])),
     }
 
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import List
 
 import jax
-import numpy as np
 
 from repro.core import (JoinEvent, MasterEventLoop, MasterReducer,
                         UploadDataEvent)

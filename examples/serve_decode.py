@@ -11,7 +11,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.launch.serve import serve_batch

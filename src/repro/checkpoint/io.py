@@ -18,16 +18,14 @@ is BIT-EXACT with the uninterrupted one (tests/test_churn.py).
 from __future__ import annotations
 
 import json
-import os
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.closure import (ResearchClosure, config_from_json,
-                                config_to_json)
+from repro.core.closure import ResearchClosure, config_to_json
 
 PyTree = Any
 
@@ -163,6 +161,41 @@ def load_train_state(path: str) -> TrainState:
         raise ValueError(f"unsupported TrainState version {obj['version']}")
     return TrainState(loop=obj["loop"], cluster=obj["cluster"],
                       version=int(obj["version"]))
+
+
+def serving_params_from_train_state(state: Any, template: PyTree
+                                    ) -> Tuple[PyTree, int]:
+    """Extract the master's current params from a TrainState snapshot so
+    a serving engine can be seeded DIRECTLY from a training checkpoint
+    (launch/train_serve.py ``--from-snapshot``): returns ``(params,
+    step)`` where ``step`` doubles as the engine's starting version —
+    the same numbering the live publish path uses, so a resumed
+    train->serve run keeps a monotone version history.
+
+    ``state`` is a ``TrainState`` or a path to one; ``template`` is a
+    params tree of the run's architecture (``tf.init_params`` output is
+    fine) — the fused reducer snapshots ONE flat fp32 buffer, and the
+    template's FlatSpec is what unflattens it back into model shapes
+    and dtypes."""
+    from repro.core.flatbuf import flat_spec
+
+    if isinstance(state, str):
+        state = load_train_state(state)
+    red = state.loop["reducer"]
+    if red["fused"]:
+        import jax.numpy as jnp
+        params = flat_spec(template).unflatten(
+            jnp.asarray(red["flat"], jnp.float32))
+    else:
+        leaves, treedef = jax.tree.flatten(template)
+        stored = red["param_leaves"]
+        if len(stored) != len(leaves):
+            raise ValueError(
+                f"snapshot has {len(stored)} param leaves, template has "
+                f"{len(leaves)} — wrong architecture?")
+        params = jax.tree.unflatten(treedef,
+                                    [np.asarray(a) for a in stored])
+    return params, int(state.loop["step"])
 
 
 def save_closure(path: str, closure: ResearchClosure,

@@ -8,7 +8,7 @@ data: models consume them, the launcher looks them up, and smoke tests call
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,7 @@ import base64
 import dataclasses
 import hashlib
 import json
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np

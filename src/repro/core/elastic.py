@@ -11,8 +11,8 @@ boundary (footnote 5: the master knows immediately when a tab closes).
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Union
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, List, Sequence, Union
 
 
 @dataclass(frozen=True)

@@ -81,7 +81,10 @@ class MasterEventLoop:
                  frac_controller: Optional["AdaptiveFracController"] = None,
                  T: float = 4.0,
                  deadline_quantile: Optional[float] = None,
-                 deadline_slack: float = 1.5):
+                 deadline_slack: float = 1.5,
+                 publish_every: int = 0,
+                 publish_fn: Optional[Callable[[PyTree, int, float],
+                                               None]] = None):
         self.reducer = reducer
         self.cluster = cluster
         self.scheduler = scheduler or AdaptiveScheduler(T=T)
@@ -93,6 +96,14 @@ class MasterEventLoop:
         # residual. None = stall-on-slowest (the paper's behavior).
         self.deadline_quantile = deadline_quantile
         self.deadline_slack = deadline_slack
+        # live train->serve publish path (docs/serving.md §6): every
+        # ``publish_every`` iterations the loop hands its post-step
+        # params to ``publish_fn(params, version, clock)`` — the serving
+        # engine's ``swap_params`` rides this to hot-swap the model the
+        # public queries while the fleet keeps training it (the MLitB
+        # "single live system"). 0 disables publishing.
+        self.publish_every = int(publish_every)
+        self.publish_fn = publish_fn
         # measurement -> controller -> per-worker channel: scales each
         # worker's keep-fraction to its measured uplink (needs the fused
         # compressed channel; ignored otherwise)
@@ -169,6 +180,7 @@ class MasterEventLoop:
                                float("nan"), notes)
             self.clock += self.scheduler.T
             self.history.append(log)
+            self._maybe_publish()
             return log
 
         # ---- map phase: budgeted local gradient accumulation ----
@@ -300,7 +312,17 @@ class MasterEventLoop:
             max_upload=max(uploads.values()) if uploads else 0.0,
             n_late=len(late), deadline=deadline)
         self.history.append(log)
+        self._maybe_publish()
         return log
+
+    def _maybe_publish(self) -> None:
+        """Step (e)': hand post-step params to the serving side. The
+        version IS the training step, so the serving engine's version
+        histogram reads directly as "how stale was the model each client
+        saw" (launch/train_serve.py)."""
+        if self.publish_fn is not None and self.publish_every > 0 \
+                and self.step % self.publish_every == 0:
+            self.publish_fn(self.reducer.params, self.step, self.clock)
 
     # ------------------------------------------------------------------
     # TrainState snapshot (docs/elastic_training.md). The loop composes
@@ -322,7 +344,7 @@ class MasterEventLoop:
         st = {
             "step": self.step,
             "clock": self.clock,
-            "history": [asdict(l) for l in self.history],
+            "history": [asdict(lg) for lg in self.history],
             "pending_events": events,
             "registry": self.registry.state_dict(),
             "scheduler": self.scheduler.state_dict(),
@@ -336,7 +358,7 @@ class MasterEventLoop:
     def load_state_dict(self, st: Dict[str, Any]) -> None:
         self.step = int(st["step"])
         self.clock = float(st["clock"])
-        self.history = [IterationLog(**l) for l in st["history"]]
+        self.history = [IterationLog(**lg) for lg in st["history"]]
         self.events = EventQueue()
         for ev in st["pending_events"]:
             if ev["type"] == "join":

@@ -47,8 +47,8 @@ def gossip_round(replicas: List[PyTree], rng: np.random.RandomState,
 
 def replica_spread(replicas: List[PyTree]) -> float:
     """Max pairwise L-inf distance — the consensus diagnostic."""
-    flat = [jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                             for l in jax.tree.leaves(r)])
+    flat = [jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                             for x in jax.tree.leaves(r)])
             for r in replicas]
     spread = 0.0
     for i in range(len(flat)):

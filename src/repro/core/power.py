@@ -14,8 +14,8 @@ runs the full window.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Dict
 
 from repro.core.scheduler import AdaptiveScheduler
 

@@ -16,8 +16,8 @@ On a synchronous TPU mesh the same estimates convert to per-virtual-worker
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, List, Optional
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, List
 
 
 @dataclass

@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
@@ -270,12 +270,17 @@ class ServeCostModel:
     step_overhead: float = 2e-3     # s per engine step (dispatch+sampling)
     prefill_tok: float = 2e-5       # s per padded prefill token
     decode_row: float = 1e-4        # s per padded decode row
+    swap_overhead: float = 1e-3     # s per param hot-swap (host-side tree
+                                    # install: no retrace, no device work)
 
     def prefill_time(self, batch_cap: int, prompt_cap: int) -> float:
         return self.step_overhead + self.prefill_tok * batch_cap * prompt_cap
 
     def decode_time(self, batch: int) -> float:
         return self.step_overhead + self.decode_row * batch
+
+    def swap_time(self) -> float:
+        return self.swap_overhead
 
 
 def generate_requests(n: int, *, rate_rps: float = 60.0,
@@ -349,3 +354,38 @@ def make_cnn_problem(seed: int = 0):
         return float(_err(params, jnp.asarray(X), jnp.asarray(y)))
 
     return init_params, grad_fn, eval_fn
+
+
+def make_lm_problem(cfg, n_data: int = 512, seq_len: int = 16,
+                    seed: int = 0):
+    """(data, grad_fn) for next-token training of an ``ArchConfig`` LM on
+    synthetic token sequences — the train side of the live train->serve
+    loop (launch/train_serve.py): the fleet improves exactly the tree the
+    serving engine hot-swaps. grad_fn returns (grad_SUM, loss_SUM) per
+    the paper's sum-then-weighted-average protocol, matching
+    ``make_cnn_problem``; ``data = (X, y)`` with X (n, S) int32 token
+    windows and y their one-step-shifted labels."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as tf
+    from repro.models.layers import softmax_xent
+
+    rng = np.random.RandomState(seed)
+    stream = rng.randint(0, cfg.vocab_size,
+                         size=n_data + seq_len).astype(np.int32)
+    X = np.stack([stream[i:i + seq_len] for i in range(n_data)])
+    y = np.stack([stream[i + 1:i + 1 + seq_len] for i in range(n_data)])
+
+    def loss_sum(params, Xb, yb):
+        logits, _ = tf.forward(params, cfg, Xb, remat=False)
+        s, _ = softmax_xent(logits, yb, jnp.ones(yb.shape, jnp.float32))
+        return s
+
+    _vg = jax.jit(jax.value_and_grad(loss_sum))
+
+    def grad_fn(params, Xb, yb):
+        s, grads = _vg(params, jnp.asarray(Xb), jnp.asarray(yb))
+        return grads, float(s)
+
+    return (X, y), grad_fn

@@ -13,8 +13,8 @@ finishing the previous one, always on the freshest params).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
 
 PyTree = Any
 

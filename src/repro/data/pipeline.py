@@ -13,7 +13,7 @@ pipeline: the next batch simply draws from the new ownership map.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

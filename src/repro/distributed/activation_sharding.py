@@ -15,7 +15,7 @@ which is a no-op outside the context (smoke tests, single device).
 from __future__ import annotations
 
 import contextlib
-from typing import Optional, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 from jax.sharding import PartitionSpec as P

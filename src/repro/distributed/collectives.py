@@ -15,12 +15,10 @@ shard is a browser "worker", the psum is the master's reduce step — and
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
 
 PyTree = Any
 
@@ -61,7 +59,6 @@ def block_topk_sparsify(x: jnp.ndarray, block: int) -> jnp.ndarray:
     mag = jnp.abs(fp).reshape(-1, block)
     arg = jnp.argmax(mag, axis=1)
     keep = jax.nn.one_hot(arg, block, dtype=fp.dtype)
-    out = (mag * 0).reshape(-1)  # placeholder not needed; construct directly
     vals = fp.reshape(-1, block) * keep
     return vals.reshape(-1)[:n].reshape(x.shape)
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, Tuple
+from typing import Dict
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
@@ -53,7 +53,6 @@ def shape_bytes(text: str) -> int:
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Sum per-device communication bytes by op kind from HLO text."""
     out: Dict[str, int] = defaultdict(int)
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _LINE_RE.match(line)
         if not m:

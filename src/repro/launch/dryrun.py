@@ -29,7 +29,6 @@ import time
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, get_shape

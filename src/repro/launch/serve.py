@@ -107,8 +107,19 @@ def main(argv=None):
                     help="open-loop arrival rate (requests/s)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--prompt-cap", type=int, default=None,
+                    help="largest prefill bucket; longer prompts prefill "
+                         "in chunks (default: max_seq, no chunking)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples with per-request keys")
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--simulate", action="store_true",
                     help="discrete-event clock instead of wall-clock")
+    ap.add_argument("--swap-every", type=float, default=0.0,
+                    help="with --simulate: hot-swap the params in as a "
+                         "new version every S simulated seconds (the "
+                         "same tree — exercises in-flight version "
+                         "pinning; the histogram shows who saw what)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -144,9 +155,19 @@ def main(argv=None):
         gen_long=(g_long_lo, g_long_hi),
         seed=args.seed + 1)
     engine = ServingEngine(params, cfg, max_batch=args.max_batch,
-                           max_seq=max_seq)
+                           max_seq=max_seq, prompt_cap=args.prompt_cap,
+                           temperature=args.temperature, top_k=args.top_k,
+                           sample_seed=args.seed)
     if args.simulate:
-        stats = engine.run_simulated(reqs, ServeCostModel())
+        swaps = []
+        if args.swap_every > 0:
+            horizon = max(r.arrival for r in reqs) + 4.0
+            t, ver = args.swap_every, 1
+            while t < horizon:
+                swaps.append((t, params, ver))
+                t += args.swap_every
+                ver += 1
+        stats = engine.run_simulated(reqs, ServeCostModel(), swaps=swaps)
         mode = "simulated"
     else:
         stats = engine.run_closed_loop(reqs)
@@ -160,6 +181,12 @@ def main(argv=None):
           f"{stats.decode_rows_live}/{stats.decode_rows_total} live decode "
           f"rows, {stats.trace_count} traces over buckets "
           f"{engine.buckets_seen}")
+    if args.simulate:
+        from repro.launch.train_serve import format_version_histogram
+        print(f"served version histogram ({stats.swap_count} in-flight "
+              f"swaps applied):")
+        for line in format_version_histogram(stats):
+            print(line)
     first = min(stats.completions, key=lambda c: c.rid)
     print("sample:", first.tokens[:12])
     return 0

@@ -50,7 +50,8 @@ def input_specs_eff(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
     pass reduced-layer variants directly)."""
     B, S = shape.global_batch, shape.seq_len
     adt = dtype_of(cfg.activ_dtype)
-    tok = lambda s: SDS(s, jnp.int32)
+    def tok(s):
+        return SDS(s, jnp.int32)
 
     if shape.kind == "train":
         batch = {"tokens": tok((B, S)), "labels": tok((B, S)),

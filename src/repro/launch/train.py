@@ -19,7 +19,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -116,8 +115,8 @@ def main(argv=None):
             algorithm={"optimizer": args.optimizer, "lr": lr,
                        "reduce": "weighted-mean", "steps": args.steps},
             params=jax.tree.map(np.asarray, eng.state["params"]),
-            metrics=[{"step": i, "loss": float(l)}
-                     for i, l in enumerate(losses)],
+            metrics=[{"step": i, "loss": float(v)}
+                     for i, v in enumerate(losses)],
             step=args.steps)
         clo.save(args.closure_out)
         print(f"saved research closure -> {args.closure_out} "

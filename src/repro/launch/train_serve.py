@@ -1,0 +1,291 @@
+"""Live train->serve launcher: one discrete-event clock through BOTH of
+MLitB's pillars — the elastic training fleet keeps improving the model
+(core/event_loop.py) while the serving engine answers prediction
+requests for it (repro.serving), and every ``publish_every`` iterations
+the master's post-step params are HOT-SWAPPED into the engine while
+requests are in flight (docs/serving.md §6).
+
+The paper's promise is a *single live system*: "prediction to the
+public at large" against the very model the browser swarm is training.
+Here that is literal — the training loop's discrete-event clock and the
+serving session's clock are the same axis; a publish at training time
+``t`` reaches clients admitted after ``t``, while requests already in
+flight finish under the version they pinned at admission. The printed
+version histogram reads as "how stale was the model each client saw".
+
+  PYTHONPATH=src python -m repro.launch.train_serve \
+      --iterations 12 --publish-every 2 --requests 64
+  PYTHONPATH=src python -m repro.launch.train_serve \
+      --snapshot-out ts.npz              # save the TrainState at the end
+  PYTHONPATH=src python -m repro.launch.train_serve \
+      --from-snapshot ts.npz             # resume training AND seed the
+                                         # engine from the same snapshot
+
+``run_train_serve`` is the reusable driver: the CLI, the gate bench
+(benchmarks/bench_train_serve.py) and the fuzz tests
+(tests/test_train_serve.py) all call it.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+PyTree = Any
+
+# tiny default LM: big enough to have real train/serve dynamics, small
+# enough that CI runs the whole live loop in seconds
+TINY_SERVE_LM = dict(
+    name="train-serve-tiny", arch_type="dense", n_layers=2, d_model=32,
+    n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=128, head_dim=16,
+    param_dtype="float32", activ_dtype="float32", tie_embeddings=True)
+
+
+def tiny_cfg():
+    from repro.configs.base import ArchConfig
+    return ArchConfig(**TINY_SERVE_LM)
+
+
+def build_training(cfg, *, T: float = 0.5, seed: int = 0,
+                   n_data: int = 512, seq_len: int = 16,
+                   lr: float = 0.1, frac: float = 0.1,
+                   churny: bool = True, publish_every: int = 0,
+                   publish_fn=None):
+    """An elastic training stack over ``cfg``'s LM: fused top-k
+    compressed reduce, deadline partial participation, and (when
+    ``churny``) a heterogeneous fleet with a probabilistic straggler —
+    the regime the hot-swap bench publishes from."""
+    import jax
+
+    from repro.core import (GradientCompressor, JoinEvent, MasterEventLoop,
+                            MasterReducer, UploadDataEvent)
+    from repro.core.scheduler import AdaptiveScheduler
+    from repro.core.simulation import (DeviceProfile, SimulatedCluster,
+                                       make_lm_problem)
+    from repro.models import transformer as tf
+    from repro.optim import adagrad
+
+    (X, y), grad_fn = make_lm_problem(cfg, n_data=n_data, seq_len=seq_len,
+                                      seed=seed)
+    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
+    red = MasterReducer(params, adagrad(lr=lr),
+                        compressor=GradientCompressor("topk", frac=frac),
+                        fused=True)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=seed)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster,
+        scheduler=AdaptiveScheduler(T=T, prior_power=300.0,
+                                    min_budget=0.05),
+        deadline_quantile=0.5 if churny else None, deadline_slack=1.5,
+        publish_every=publish_every, publish_fn=publish_fn)
+    loop.submit(UploadDataEvent(range(n_data)))
+    profiles = [DeviceProfile("ws0", 300.0, 0.010, 0.20),
+                DeviceProfile("ws1", 300.0, 0.012, 0.20),
+                DeviceProfile("lap", 150.0, 0.030, 0.40)]
+    if churny:
+        profiles.append(DeviceProfile("strag", 200.0, 0.050, 0.40,
+                                      straggle_p=0.3, straggle_factor=8.0))
+    for i, prof in enumerate(profiles):
+        cluster.add_worker(f"w{i}", prof)
+        loop.submit(JoinEvent(f"w{i}", capacity=n_data))
+    return loop, cluster, params
+
+
+def run_train_serve(cfg, requests: Sequence[Any], *,
+                    iterations: int = 12, publish_every: int = 2,
+                    T: float = 0.5, seed: int = 0,
+                    max_batch: int = 4, max_seq: int = 64,
+                    prompt_cap: Optional[int] = 16,
+                    temperature: float = 0.0, top_k: int = 0,
+                    churny: bool = True,
+                    cost=None, lr: float = 0.1,
+                    engine_params: Optional[PyTree] = None,
+                    start_version: int = 0,
+                    resume_state=None) -> Dict[str, Any]:
+    """Drive ``iterations`` of elastic training and the serving engine on
+    ONE discrete-event clock, hot-swapping published params in-flight.
+
+    Returns a dict with the training ``logs``, serving ``stats``, the
+    ``engine``/``loop`` objects, ``published`` [(clock, version), ...]
+    and ``versions`` {version: params} — every tree the engine served
+    under, kept so callers can replay any completion solo under its
+    pinned version (the corruption oracle in tests/ and the bench)."""
+    from repro.core.simulation import ServeCostModel
+    from repro.serving import ServingEngine, SimulatedServeSession
+
+    cost = cost or ServeCostModel()
+    versions: Dict[int, PyTree] = {}
+    published: List[Tuple[float, int]] = []
+    session_box: List[SimulatedServeSession] = []
+
+    def publish(params, version, clock):
+        session_box[0].push_swap(clock, params, version)
+        versions[version] = params
+        published.append((clock, version))
+
+    loop, cluster, _ = build_training(
+        cfg, T=T, seed=seed, churny=churny, lr=lr,
+        publish_every=publish_every,
+        publish_fn=publish if publish_every > 0 else None)
+    if resume_state is not None:
+        resume_state.restore(loop, cluster)
+    if engine_params is None:
+        # default to the loop's CURRENT params/step — correct for both a
+        # fresh loop (== the init tree) and a restored snapshot (the
+        # trained weights, never a fresh re-init mislabeled as step N)
+        engine_params = loop.reducer.params
+        start_version = loop.step
+    engine = ServingEngine(engine_params, cfg, max_batch=max_batch,
+                           max_seq=max_seq, prompt_cap=prompt_cap,
+                           temperature=temperature, top_k=top_k,
+                           sample_seed=seed,
+                           start_version=start_version)
+    versions[int(start_version)] = engine_params
+    session = SimulatedServeSession(engine, cost, requests)
+    session_box.append(session)
+
+    first = loop.step
+    for it in range(iterations):
+        if churny:
+            _scripted_churn(loop, cluster, first + it + 1, iterations)
+        loop.iteration()
+        session.advance_to(loop.clock)
+    session.drain()
+    return {"logs": list(loop.history), "stats": session.stats(),
+            "engine": engine, "loop": loop, "cluster": cluster,
+            "published": published, "versions": versions}
+
+
+def _scripted_churn(loop, cluster, step: int, iterations: int) -> None:
+    """Deterministic membership churn on top of the probabilistic
+    straggler: a join a third of the way in, a mid-iteration death at
+    two thirds — the fleet the publishes come from is genuinely elastic."""
+    from repro.core import JoinEvent
+    from repro.core.simulation import DeviceProfile
+
+    if step == max(2, iterations // 3):
+        cluster.add_worker("joiner", DeviceProfile("joiner", 250.0, 0.015,
+                                                   0.20))
+        loop.submit(JoinEvent("joiner", capacity=1 << 20))
+    if step == max(3, (2 * iterations) // 3) and "w1" in cluster.workers:
+        cluster.kill("w1")
+
+
+def format_version_histogram(stats) -> List[str]:
+    """Render ``stats.versions_served`` as aligned bar lines — the
+    CLI-observable face of hot-swapping (version == training step)."""
+    lines = []
+    total = max(sum(stats.versions_served.values()), 1)
+    width = 40
+    for ver in sorted(stats.versions_served):
+        n = stats.versions_served[ver]
+        bar = "#" * max(1, round(width * n / total))
+        lines.append(f"  v{ver:<6} {n:5d}  {bar}")
+    return lines
+
+
+def main(argv=None):
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.simulation import generate_requests
+    from repro.models import transformer as tf
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    help="served/trained arch (default: built-in tiny LM)")
+    ap.add_argument("--iterations", type=int, default=12)
+    ap.add_argument("--publish-every", type=int, default=2)
+    ap.add_argument("--T", type=float, default=0.5,
+                    help="training iteration budget (s)")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=10.0,
+                    help="open-loop arrival rate (requests/s); spread the "
+                         "schedule across the training horizon so "
+                         "admissions straddle publishes")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--prompt-cap", type=int, default=16,
+                    help="largest prefill bucket; longer prompts chunk")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stable", action="store_true",
+                    help="homogeneous fleet, no churn")
+    ap.add_argument("--snapshot-out", default=None,
+                    help="save the final TrainState here")
+    ap.add_argument("--from-snapshot", default=None,
+                    help="resume training AND seed the engine from this "
+                         "TrainState snapshot")
+    args = ap.parse_args(argv)
+
+    if args.arch:
+        cfg = get_config(args.arch).reduced()
+    else:
+        cfg = tiny_cfg()
+    if cfg.arch_type not in ("dense", "moe"):
+        raise SystemExit(f"train_serve needs an engine-served arch "
+                         f"(dense/moe), not {cfg.arch_type}")
+
+    g_hi = max(2, args.max_seq // 4)
+    reqs = generate_requests(
+        args.requests, rate_rps=args.rate, vocab_size=cfg.vocab_size,
+        prompt_rng=(4, max(8, args.max_seq - g_hi - 1)),
+        gen_short=(2, max(3, g_hi // 2)), gen_long=(g_hi // 2 + 1, g_hi),
+        seed=args.seed + 1)
+
+    engine_params = None
+    start_version = 0
+    resume_state = None
+    if args.from_snapshot:
+        import jax
+
+        from repro.checkpoint.io import (load_train_state,
+                                         serving_params_from_train_state)
+        resume_state = load_train_state(args.from_snapshot)
+        template = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+        engine_params, start_version = serving_params_from_train_state(
+            resume_state, template)
+        print(f"seeded engine from {args.from_snapshot} "
+              f"(training step {start_version})")
+
+    out = run_train_serve(
+        cfg, reqs, iterations=args.iterations,
+        publish_every=args.publish_every, T=args.T, seed=args.seed,
+        max_batch=args.max_batch, max_seq=args.max_seq,
+        prompt_cap=args.prompt_cap, temperature=args.temperature,
+        top_k=args.top_k, churny=not args.stable,
+        engine_params=engine_params, start_version=start_version,
+        resume_state=resume_state)
+
+    logs, stats, engine = out["logs"], out["stats"], out["engine"]
+    losses = [lg.loss for lg in logs if lg.loss == lg.loss]
+    print(f"train: {len(logs)} iterations, clock={out['loop'].clock:.2f}s, "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"{len(out['published'])} publishes"
+          if losses else f"train: {len(logs)} iterations (no reduces)")
+    print(f"serve: {stats.n_requests} requests, {stats.gen_tokens} tokens "
+          f"in {stats.makespan:.2f}s ({stats.tokens_per_s:.1f} tok/s), "
+          f"p50={stats.p50_latency:.3f}s p95={stats.p95_latency:.3f}s")
+    print(f"engine: {stats.engine_steps} steps, {stats.prefill_chunks} "
+          f"prefill chunks, {stats.decode_dispatches} decode dispatches, "
+          f"{stats.swap_count} swaps, {stats.trace_count} traces over "
+          f"buckets {engine.buckets_seen}")
+    print("served version histogram (version == training step):")
+    for line in format_version_histogram(stats):
+        print(line)
+    first = min(stats.completions, key=lambda c: c.rid)
+    print(f"sample (rid {first.rid}, v{first.version}):",
+          np.asarray(first.tokens[:12]))
+
+    if args.snapshot_out:
+        from repro.checkpoint.io import TrainState, save_train_state
+        save_train_state(args.snapshot_out,
+                         TrainState.capture(out["loop"], out["cluster"]))
+        print(f"wrote TrainState snapshot to {args.snapshot_out} "
+              f"(step {out['loop'].step})")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -249,6 +249,48 @@ def attention_decode_ragged(p: Params, x: jnp.ndarray, pos: jnp.ndarray, *,
     return _out_proj(p, o), {"k": ck, "v": cv}
 
 
+def attention_prefill_chunk(p: Params, x: jnp.ndarray, off: jnp.ndarray,
+                            clen: jnp.ndarray, *, cache: Params,
+                            use_rope: bool = True,
+                            rope_theta: float = 10000.0
+                            ) -> Tuple[jnp.ndarray, Params]:
+    """One CHUNK of a chunked ragged prefill — the serving engine's path
+    for prompts longer than its largest prefill bucket (docs/serving.md).
+    x: (B,C,d); row b's chunk occupies absolute positions
+    ``[off_b, off_b + clen_b)`` of its slot, with ``clen_b <= C`` valid
+    tokens and the rest padding. The cache is the engine's LINEAR slot
+    cache (``{"k","v"}`` of (B,T,..), no ``kpos`` — same contract as
+    ``attention_decode_ragged``): columns ``[0, off_b)`` hold the
+    already-prefilled prefix, post-RoPE.
+
+    The chunk's k/v are scattered at columns ``off_b + i`` (padding
+    scatters out of bounds and is dropped), then query ``i`` attends
+    ``t <= off_b + i`` — the prefix plus the in-chunk causal triangle in
+    one mask, since in-chunk keys sit at exactly those columns. Stale
+    columns past ``off_b + clen_b`` are masked to exact zeros, so a
+    chunked prefill is bit-exact vs one unpadded full-prompt prefill.
+    Padding queries attend only ``t == 0`` (finite, discarded).
+    """
+    B, C, _ = x.shape
+    T = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, x)
+    i = jnp.arange(C, dtype=jnp.int32)
+    qpos = off[:, None].astype(jnp.int32) + i[None, :]       # (B,C) absolute
+    if use_rope:
+        q = apply_rope(q, qpos, rope_theta)
+        k = apply_rope(k, qpos, rope_theta)
+    valid_q = i[None, :] < clen[:, None]                     # (B,C)
+    col = jnp.where(valid_q, qpos, T)                        # pad -> dropped
+    bidx = jnp.arange(B)[:, None]
+    ck = cache["k"].at[bidx, col].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, col].set(v.astype(cache["v"].dtype))
+    t = jnp.arange(T, dtype=jnp.int32)
+    lim = jnp.where(valid_q, qpos, 0)                        # (B,C)
+    mask = (t[None, None, :] <= lim[..., None])[:, None, None, :, :]
+    o = grouped_attend(q, ck, cv, mask)
+    return _out_proj(p, o), {"k": ck, "v": cv}
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention KV (whisper decoder): computed once per sequence
 # ---------------------------------------------------------------------------

@@ -144,7 +144,7 @@ def init_params(key, cfg: ArchConfig) -> Params:
     if not cfg.tie_embeddings:
         p["lm_head"] = init_embed(keys[1], cfg.vocab_size, cfg.d_model, dtype)
 
-    pattern = cfg.block_pattern()
+    cfg.block_pattern()          # validates the arch family eagerly
     if cfg.arch_type in ("dense", "vlm"):
         p["blocks"] = _stack_init(lambda k: init_attn_block(k, cfg, dtype),
                                   keys[2], cfg.n_layers)
@@ -177,7 +177,6 @@ def init_params(key, cfg: ArchConfig) -> Params:
                                   keys[3], cfg.n_layers)
     else:
         raise ValueError(f"unknown arch_type {cfg.arch_type}")
-    del pattern
     return p
 
 
@@ -508,6 +507,56 @@ def decode_step_ragged(params: Params, cfg: ArchConfig, token: jnp.ndarray,
             y = mlp(bp["mlp"], hh, cfg.mlp_act)
         return h + y, new_c
     x, new_layers = scan(body, x, (params["blocks"], cache["layers"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x), {"layers": new_layers}
+
+
+def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                  off: jnp.ndarray, clen: jnp.ndarray, cache: Params,
+                  unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """One chunk of a CHUNKED ragged prefill into the serving engine's
+    slot cache (docs/serving.md). tokens: (B,C) int32 — row b's valid
+    tokens are ``tokens[b, :clen_b]``, occupying absolute positions
+    ``[off_b, off_b + clen_b)`` of its slot row; cache: ``{"layers":
+    {"k","v"}}`` with leading L axes over (B, T, ..) slot segments whose
+    columns ``[0, off_b)`` were written by earlier chunks.
+
+    Returns (per-row logits at the chunk's last VALID column (B,1,V),
+    updated cache). The logits are only meaningful on a request's FINAL
+    chunk (they are the next-token logits of the full prompt — bit-exact
+    vs an unpadded single-shot prefill, the same argument as ragged
+    ``prefill(lengths=)``); earlier chunks' logits are discarded by the
+    engine. Attention-cached archs only, like every ragged path."""
+    assert cfg.arch_type in ("dense", "moe"), \
+        f"chunked prefill needs an attention slot cache, not {cfg.arch_type}"
+    scan = functools.partial(scan_apply, unroll=unroll)
+    adt = dtype_of(cfg.activ_dtype)
+    x = embed(params["embed"], tokens).astype(adt)
+    is_moe = cfg.arch_type == "moe"
+
+    def body(h, xs):
+        bp, cl = xs
+        hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+        a, new_c = attn_mod.attention_prefill_chunk(
+            bp["attn"], hh, off, clen, cache=cl,
+            use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+        h = h + a
+        hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+        if is_moe:
+            moe_fn = moe_mod.moe_ffn_sorted if cfg.moe.impl == "sort" \
+                else moe_mod.moe_ffn
+            y, _ = moe_fn(bp["moe"], hh, cfg.moe)
+            if "shared" in bp:
+                y = y + mlp(bp["shared"], hh, "silu")
+            if "dense" in bp:
+                y = y + mlp(bp["dense"], hh, "silu")
+        else:
+            y = mlp(bp["mlp"], hh, cfg.mlp_act)
+        return h + y, new_c
+    x, new_layers = scan(body, x, (params["blocks"], cache["layers"]))
+    idx = jnp.clip(clen.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+    x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     x = apply_norm(params["final_norm"], x, cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     return unembed(head, x), {"layers": new_layers}

@@ -10,7 +10,8 @@ from repro.optim.base import Optimizer
 def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
     def init(params):
-        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def z(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
                 "step": jnp.zeros((), jnp.int32)}
 

@@ -7,35 +7,55 @@ so requests of arbitrary prompt/generation length join and leave
 mid-flight without retracing:
 
   - **admission queue**: submitted requests wait FIFO until a slot frees;
-  - **prefill**: each engine step admits every waiting request that fits,
-    pads the group to a power-of-two ``(batch_cap, prompt_cap)`` bucket,
-    runs ONE ragged prefill (per-row true lengths, per-row last-valid
-    logits) and scatters the bucket's KV rows into the shared cache at the
-    assigned slots — step fns are keyed on the bucket exactly like the
-    reducer's capacity padding (core/reducer.py), so the trace cache is
-    bounded by the number of DISTINCT buckets, not by request count;
+  - **chunked prefill**: each engine step feeds every slot that still has
+    prompt tokens pending one chunk of at most ``prompt_cap`` tokens,
+    padded to a power-of-two ``(batch_cap, chunk_cap)`` bucket, and
+    scatters the chunk's KV into the shared cache inside the same jitted
+    fn — step fns are keyed on the bucket exactly like the reducer's
+    capacity padding (core/reducer.py), so the trace cache is bounded by
+    the number of DISTINCT buckets, not by request count (and prompts
+    LONGER than the largest bucket simply take several steps);
   - **decode**: one fixed-shape ``(max_batch, max_seq)`` step over ALL
     slots with per-slot positions and a live mask — it traces exactly
     once, dead slots are masked out of the cache write, and finished
     requests free their slot for the next admission.
+
+**Hot-swap** (the live train->serve loop, docs/serving.md §6):
+``swap_params(params, version)`` atomically replaces the served model
+WHILE requests are in flight. Every slot pins the version it was
+admitted under and finishes its whole generation there; new admissions
+use the latest version. The engine keeps a small ring of live param
+trees — the pinned versions plus the latest — and runs one
+prefill/decode dispatch per version present, so a swap never retraces
+(the trees are trace-compatible by construction) and never corrupts an
+in-flight request (each completion is bit-equal to a solo replay under
+its pinned version; fuzzed in tests/test_train_serve.py). Versions
+retire from the ring as their last pinned slot completes.
+
+**Sampling**: greedy by default (``temperature=0``), or temperature /
+top-k sampling with a per-request PRNG key folded per generated token —
+the key depends only on (engine seed, request id, token index), so a
+request's stream is deterministic and independent of co-batching.
 
 Slot invariant: cache row ``s`` is valid exactly on ``[0, pos_s]`` and
 decode at position ``p`` overwrites index ``p`` before attending to it,
 so freed rows never need scrubbing and a slot's previous occupant can
 never leak into its successor (tested in tests/test_serving.py).
 
-Timing is pluggable: ``run_simulated`` drives the engine on a
+Timing is pluggable: ``SimulatedServeSession`` drives the engine on a
 discrete-event clock charged by a ``ServeCostModel`` over the PADDED
-bucket shapes (what the accelerator actually pays), which is what
-benchmarks/bench_serve.py gates against the one-batch-at-a-time
-``serve_batch`` baseline; ``run_closed_loop`` measures real wall-clock.
+bucket shapes (what the accelerator actually pays) and accepts
+timestamped arrivals AND timestamped param swaps, which is how
+launch/train_serve.py threads one clock through training and serving;
+``run_simulated`` wraps it for a closed schedule, ``run_closed_loop``
+measures real wall-clock.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Deque, Dict, List, Optional, Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -43,9 +63,11 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.layers import dtype_of
-from repro.train.step import build_decode_step, build_prefill_step
+from repro.train.step import build_decode_step, build_prefill_chunk_step
 
 PyTree = Any
+
+NEG_INF = -1e30
 
 
 def pow2_bucket(n: int, lo: int = 1, hi: Optional[int] = None) -> int:
@@ -62,7 +84,7 @@ class ServeRequest:
     """One prediction request: an open-loop arrival from a client."""
     rid: int
     prompt: np.ndarray              # (P,) int32 prompt tokens
-    max_new: int                    # tokens to generate (greedy)
+    max_new: int                    # tokens to generate
     arrival: float = 0.0            # open-loop arrival time (s)
     client_latency: float = 0.0     # one-way client network latency (s)
 
@@ -74,13 +96,16 @@ class Completion:
     tokens: np.ndarray              # (max_new,) int32 generated tokens
     finish: float = 0.0             # clock at completion (stamped by run_*)
     latency: float = 0.0            # finish - arrival + 2*client_latency
+    version: int = 0                # param version the request was served
+                                    # under (pinned at admission)
 
 
 @dataclass
 class StepReport:
     """What one engine step executed — the unit the cost model charges."""
     admitted: int
-    prefill_shape: Optional[Tuple[int, int]]    # (batch_cap, prompt_cap)
+    prefill_shapes: List[Tuple[int, int]]       # (batch_cap, chunk_cap)*
+    decode_dispatches: int                      # one per live version
     decode_batch: int                           # max_batch, or 0 if idle
     completed: List[Completion] = field(default_factory=list)
 
@@ -95,24 +120,35 @@ class ServeStats:
     p95_latency: float
     engine_steps: int
     prefill_tokens: int             # padded prefill tokens charged
-    decode_rows_live: int           # live rows across all decode steps
-    decode_rows_total: int          # max_batch * decode steps (padded)
+    decode_rows_live: int           # live rows across all decode dispatches
+    decode_rows_total: int          # max_batch * decode dispatches (padded)
     trace_count: int
     completions: List[Completion] = field(default_factory=list)
+    prefill_chunks: int = 0         # chunk dispatches (== prefills when no
+                                    # prompt exceeds prompt_cap)
+    decode_dispatches: int = 0
+    swap_count: int = 0             # param swaps applied during the run
+    versions_served: Dict[int, int] = field(default_factory=dict)
 
 
 @dataclass
 class _SlotState:
     req: ServeRequest
     gen: List[int]
+    ver: int                        # pinned param version
+    filled: int = 0                 # prompt tokens prefilled so far
 
 
 class ServingEngine:
-    """Admission queue + continuous batching over a shared slot KV cache."""
+    """Admission queue + continuous batching over a shared slot KV cache,
+    with in-flight param hot-swap and temperature/top-k sampling."""
 
     def __init__(self, params: PyTree, cfg: ArchConfig, *,
                  max_batch: int, max_seq: int,
-                 prompt_bucket_min: int = 8, unroll: bool = False):
+                 prompt_bucket_min: int = 8, unroll: bool = False,
+                 prompt_cap: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0, start_version: int = 0):
         if cfg.arch_type not in ("dense", "moe"):
             raise ValueError(
                 f"ServingEngine supports attention-cached LM archs "
@@ -137,12 +173,29 @@ class ServingEngine:
                 f"{cfg.moe.n_experts / cfg.moe.experts_per_token:.2f} for "
                 f"exactness); outputs are approximate when an expert "
                 f"overflows", stacklevel=2)
-        self.params = params
         self.cfg = cfg
         self.max_batch = int(max_batch)
         self.max_seq = int(max_seq)
         self.prompt_bucket_min = int(prompt_bucket_min)
+        self.prompt_cap = int(prompt_cap) if prompt_cap is not None \
+            else self.max_seq
+        if not 1 <= self.prompt_cap <= self.max_seq:
+            raise ValueError(f"prompt_cap={self.prompt_cap} must lie in "
+                             f"[1, max_seq={self.max_seq}]")
+        if temperature < 0.0:
+            raise ValueError(f"temperature={temperature} must be >= 0")
+        self._temperature = float(temperature)
+        self._top_k = int(top_k)
+        self._sample_seed = int(sample_seed)
         self._unroll = unroll
+        # the version ring: pinned live versions + the latest. A swap
+        # installs a new latest; a version retires when its last pinned
+        # slot completes, so the ring never exceeds max_batch + 1 trees.
+        # ``start_version`` seeds the numbering when the initial params
+        # come from a training checkpoint (version == training step).
+        self.version = int(start_version)
+        self._versions: Dict[int, PyTree] = {self.version: params}
+        self.swap_count = 0
         adt = dtype_of(cfg.activ_dtype)
         shape = (cfg.n_layers, self.max_batch, self.max_seq,
                  cfg.n_kv_heads, cfg.head_dim)
@@ -153,20 +206,28 @@ class ServingEngine:
         self._tok = np.zeros(self.max_batch, np.int32)
         self._live = np.zeros(self.max_batch, bool)
         self._queue: Deque[ServeRequest] = deque()
-        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._chunk_fns: Dict[Tuple[int, int], Any] = {}
         self._decode_fn = None
         self._trace_count = 0
         self.engine_steps = 0
         self.prefill_tokens = 0
+        self.prefill_chunks = 0
+        self.decode_dispatches = 0
         self.decode_rows_live = 0
         self.decode_rows_total = 0
 
     # ------------------------------------------------------------------
     @property
+    def params(self) -> PyTree:
+        """The LATEST param tree — what new admissions are served under."""
+        return self._versions[self.version]
+
+    @property
     def trace_count(self) -> int:
         """Number of ACTUAL jit traces taken (the counter increments
         inside the traced python body, so cache hits don't count). The
-        property test bounds this by distinct buckets, not requests."""
+        property test bounds this by distinct buckets, not requests —
+        and a hot-swap must not move it at all."""
         return self._trace_count
 
     @property
@@ -179,7 +240,12 @@ class ServingEngine:
 
     @property
     def buckets_seen(self) -> List[Tuple[int, int]]:
-        return sorted(self._prefill_fns)
+        return sorted(self._chunk_fns)
+
+    @property
+    def live_versions(self) -> List[int]:
+        """Versions currently held in the ring (pinned and/or latest)."""
+        return sorted(self._versions)
 
     # ------------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
@@ -193,32 +259,97 @@ class ServingEngine:
         self._queue.append(req)
 
     # ------------------------------------------------------------------
-    def _get_prefill_fn(self, bcap: int, pcap: int):
-        fn = self._prefill_fns.get((bcap, pcap))
+    def swap_params(self, params: PyTree, version: Optional[int] = None
+                    ) -> int:
+        """Atomically install ``params`` as the latest served version,
+        while requests are in flight: slots already admitted keep
+        decoding under the version they pinned at admission; every
+        admission from now on uses the new tree. The tree must be
+        TRACE-COMPATIBLE with the current one (same structure, leaf
+        shapes and dtypes) — that is what makes the swap free of
+        retraces. Returns the installed version number."""
+        cur = self._versions[self.version]
+        if jax.tree.structure(params) != jax.tree.structure(cur):
+            raise ValueError(
+                "swap_params: tree structure differs from the served "
+                "model — not trace-compatible")
+        for new, old in zip(jax.tree.leaves(params), jax.tree.leaves(cur)):
+            if (jnp.shape(new) != jnp.shape(old)
+                    or jnp.asarray(new).dtype != jnp.asarray(old).dtype):
+                raise ValueError(
+                    f"swap_params: leaf {jnp.shape(new)}/"
+                    f"{jnp.asarray(new).dtype} differs from served "
+                    f"{jnp.shape(old)}/{jnp.asarray(old).dtype} — not "
+                    f"trace-compatible")
+        if version is None:
+            version = self.version + 1
+        if version <= self.version:
+            raise ValueError(f"swap_params: version {version} must exceed "
+                             f"the current latest {self.version}")
+        self._versions[int(version)] = params
+        self.version = int(version)
+        self.swap_count += 1
+        self._gc_versions()
+        return self.version
+
+    def _gc_versions(self) -> None:
+        pinned = {st.ver for st in self._slots if st is not None}
+        pinned.add(self.version)
+        for v in [v for v in self._versions if v not in pinned]:
+            del self._versions[v]
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits: jnp.ndarray, rids: jnp.ndarray,
+                gidx: jnp.ndarray) -> jnp.ndarray:
+        """Traced next-token choice over (B,V) logits. ``temperature=0``
+        is EXACTLY the greedy argmax (the oracle-pinned path); otherwise
+        each row draws from its own PRNG key, folded from (engine seed,
+        request id, generated-token index) — never from slot or co-batch
+        state, so streams replay identically solo vs co-batched."""
+        if self._temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        lg = logits.astype(jnp.float32) / self._temperature
+        if self._top_k > 0 and self._top_k < lg.shape[-1]:
+            kth = jax.lax.top_k(lg, self._top_k)[0][:, -1:]
+            lg = jnp.where(lg < kth, NEG_INF, lg)
+        base = jax.random.PRNGKey(self._sample_seed)
+
+        def draw(rid, g, row):
+            key = jax.random.fold_in(jax.random.fold_in(base, rid), g)
+            return jax.random.categorical(key, row)
+        return jax.vmap(draw)(rids, gidx, lg).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def _get_chunk_fn(self, bcap: int, ccap: int):
+        fn = self._chunk_fns.get((bcap, ccap))
         if fn is not None:
             return fn
-        pstep = build_prefill_step(self.cfg, unroll=self._unroll,
-                                   cache_len=pcap)
+        cstep = build_prefill_chunk_step(self.cfg, unroll=self._unroll)
+        last = self.max_batch - 1
 
-        def prefill_and_scatter(params, tokens, lengths, slots, cache):
+        def chunk_and_scatter(params, tokens, off, clen, slots, rids,
+                              cache):
             self._trace_count += 1          # trace-time only side effect
-            logits, pc = pstep(params, {"tokens": tokens,
-                                        "lengths": lengths})
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            # gather the group's slot rows; padding rows carry slot ==
+            # max_batch — clip for the gather (junk is fine, their
+            # outputs are dropped), keep OOB for the scatter (dropped)
+            rows = jax.tree.map(lambda c: c[:, jnp.clip(slots, 0, last)],
+                                cache)
+            logits, rows = cstep(params, tokens, off, clen, rows)
+            nxt = self._sample(logits[:, -1, :], rids,
+                               jnp.zeros_like(rids))
             new = {}
             for name in ("k", "v"):
                 buf = cache["layers"][name]
-                upd = pc["layers"][name].astype(buf.dtype)
-                # padding rows carry slot == max_batch: out-of-bounds
-                # scatter indices are dropped, so they write nothing
-                new[name] = buf.at[:, slots, :upd.shape[2]].set(upd)
+                upd = rows["layers"][name].astype(buf.dtype)
+                new[name] = buf.at[:, slots].set(upd)
             return nxt, {"layers": new}
 
         # donate the cache: step() overwrites self.cache with the return
         # value, so aliasing in-place avoids copying the full slot
         # buffers (the dominant memory traffic) every engine step
-        fn = jax.jit(prefill_and_scatter, donate_argnums=(4,))
-        self._prefill_fns[(bcap, pcap)] = fn
+        fn = jax.jit(chunk_and_scatter, donate_argnums=(6,))
+        self._chunk_fns[(bcap, ccap)] = fn
         return fn
 
     def _get_decode_fn(self):
@@ -226,10 +357,10 @@ class ServingEngine:
             return self._decode_fn
         dstep = build_decode_step(self.cfg, unroll=self._unroll, ragged=True)
 
-        def decode_all_slots(params, tok, pos, live, cache):
+        def decode_all_slots(params, tok, pos, live, cache, rids, gidx):
             self._trace_count += 1
             logits, cache = dstep(params, tok, pos, cache, live)
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            nxt = self._sample(logits[:, -1, :], rids, gidx)
             return nxt, cache
 
         self._decode_fn = jax.jit(decode_all_slots, donate_argnums=(4,))
@@ -242,88 +373,146 @@ class ServingEngine:
         self._live[s] = False
         self._pos[s] = 0
         self._tok[s] = 0
+        self._gc_versions()
         return Completion(rid=st.req.rid, prompt_len=len(st.req.prompt),
-                          tokens=np.asarray(st.gen, np.int32))
+                          tokens=np.asarray(st.gen, np.int32),
+                          version=st.ver)
+
+    def _run_chunks(self, completed: List[Completion]
+                    ) -> List[Tuple[int, int]]:
+        """Feed one <=prompt_cap chunk to every slot with prompt tokens
+        pending, one bucketed dispatch per pinned version present. A
+        slot whose prompt completes samples its first token and goes
+        live (decodable this same step)."""
+        shapes: List[Tuple[int, int]] = []
+        todo = [s for s in range(self.max_batch)
+                if self._slots[s] is not None
+                and self._slots[s].filled < len(self._slots[s].req.prompt)]
+        for ver in sorted({self._slots[s].ver for s in todo}):
+            group = [s for s in todo if self._slots[s].ver == ver]
+            clens = [min(len(self._slots[s].req.prompt)
+                         - self._slots[s].filled, self.prompt_cap)
+                     for s in group]
+            bcap = pow2_bucket(len(group))
+            ccap = pow2_bucket(max(clens), lo=self.prompt_bucket_min,
+                               hi=self.prompt_cap)
+            tokens = np.zeros((bcap, ccap), np.int32)
+            off = np.zeros(bcap, np.int32)
+            cl = np.zeros(bcap, np.int32)
+            slots = np.full(bcap, self.max_batch, np.int32)
+            rids = np.zeros(bcap, np.int32)
+            for i, s in enumerate(group):
+                st = self._slots[s]
+                tokens[i, :clens[i]] = \
+                    st.req.prompt[st.filled:st.filled + clens[i]]
+                off[i] = st.filled
+                cl[i] = clens[i]
+                slots[i] = s
+                rids[i] = st.req.rid % (2 ** 31)
+            fn = self._get_chunk_fn(bcap, ccap)
+            nxt, self.cache = fn(self._versions[ver], jnp.asarray(tokens),
+                                 jnp.asarray(off), jnp.asarray(cl),
+                                 jnp.asarray(slots), jnp.asarray(rids),
+                                 self.cache)
+            nxt = np.asarray(nxt)
+            self.prefill_tokens += bcap * ccap
+            self.prefill_chunks += 1
+            shapes.append((bcap, ccap))
+            for i, s in enumerate(group):
+                st = self._slots[s]
+                st.filled += clens[i]
+                self._pos[s] = st.filled
+                if st.filled == len(st.req.prompt):
+                    st.gen = [int(nxt[i])]
+                    self._tok[s] = int(nxt[i])
+                    self._live[s] = True
+                    if st.req.max_new <= 1:
+                        completed.append(self._finish(s))
+        return shapes
 
     def step(self) -> StepReport:
         """One engine iteration: admit waiting requests into free slots,
-        prefill the admitted group (bucketed), then one decode across all
-        live slots. Returns what ran, for the cost model to charge."""
+        run one prefill chunk for every slot with prompt pending
+        (bucketed, grouped by pinned version), then one decode dispatch
+        per live version across all slots. Returns what ran, for the
+        cost model to charge."""
         completed: List[Completion] = []
         free = [s for s in range(self.max_batch) if self._slots[s] is None]
-        admitted: List[Tuple[ServeRequest, int]] = []
+        admitted = 0
         while self._queue and free:
-            admitted.append((self._queue.popleft(), free.pop(0)))
+            req = self._queue.popleft()
+            s = free.pop(0)
+            self._slots[s] = _SlotState(req=req, gen=[], ver=self.version)
+            self._pos[s] = 0
+            self._live[s] = False
+            admitted += 1
 
-        prefill_shape = None
-        if admitted:
-            n = len(admitted)
-            bcap = pow2_bucket(n)
-            pcap = pow2_bucket(max(len(r.prompt) for r, _ in admitted),
-                               lo=self.prompt_bucket_min, hi=self.max_seq)
-            tokens = np.zeros((bcap, pcap), np.int32)
-            lengths = np.ones(bcap, np.int32)
-            slots = np.full(bcap, self.max_batch, np.int32)
-            for i, (req, s) in enumerate(admitted):
-                p = len(req.prompt)
-                tokens[i, :p] = req.prompt
-                lengths[i] = p
-                slots[i] = s
-            fn = self._get_prefill_fn(bcap, pcap)
-            nxt, self.cache = fn(self.params, jnp.asarray(tokens),
-                                 jnp.asarray(lengths), jnp.asarray(slots),
-                                 self.cache)
-            nxt = np.asarray(nxt)
-            self.prefill_tokens += bcap * pcap
-            for i, (req, s) in enumerate(admitted):
-                self._slots[s] = _SlotState(req=req, gen=[int(nxt[i])])
-                self._pos[s] = len(req.prompt)
-                self._tok[s] = int(nxt[i])
-                self._live[s] = True
-                if req.max_new <= 1:
-                    completed.append(self._finish(s))
-            prefill_shape = (bcap, pcap)
+        prefill_shapes = self._run_chunks(completed)
 
-        decode_batch = 0
+        dispatches = 0
         if self._live.any():
             fn = self._get_decode_fn()
-            nxt, self.cache = fn(self.params,
-                                 jnp.asarray(self._tok[:, None]),
-                                 jnp.asarray(self._pos),
-                                 jnp.asarray(self._live), self.cache)
-            nxt = np.asarray(nxt)
-            decode_batch = self.max_batch
-            self.decode_rows_live += int(self._live.sum())
-            self.decode_rows_total += self.max_batch
+            rids = np.zeros(self.max_batch, np.int32)
+            gidx = np.zeros(self.max_batch, np.int32)
             for s in range(self.max_batch):
-                if not self._live[s]:
-                    continue
-                st = self._slots[s]
-                st.gen.append(int(nxt[s]))
-                self._pos[s] += 1
-                self._tok[s] = int(nxt[s])
-                if len(st.gen) >= st.req.max_new:
-                    completed.append(self._finish(s))
+                if self._live[s]:
+                    rids[s] = self._slots[s].req.rid % (2 ** 31)
+                    gidx[s] = len(self._slots[s].gen)
+            vers = sorted({self._slots[s].ver
+                           for s in range(self.max_batch) if self._live[s]})
+            for ver in vers:
+                group = np.array([self._live[s]
+                                  and self._slots[s].ver == ver
+                                  for s in range(self.max_batch)], bool)
+                nxt, self.cache = fn(self._versions[ver],
+                                     jnp.asarray(self._tok[:, None]),
+                                     jnp.asarray(self._pos),
+                                     jnp.asarray(group), self.cache,
+                                     jnp.asarray(rids), jnp.asarray(gidx))
+                nxt = np.asarray(nxt)
+                dispatches += 1
+                self.decode_dispatches += 1
+                self.decode_rows_live += int(group.sum())
+                self.decode_rows_total += self.max_batch
+                for s in range(self.max_batch):
+                    if not group[s]:
+                        continue
+                    st = self._slots[s]
+                    st.gen.append(int(nxt[s]))
+                    self._pos[s] += 1
+                    self._tok[s] = int(nxt[s])
+                    if len(st.gen) >= st.req.max_new:
+                        completed.append(self._finish(s))
 
         self.engine_steps += 1
-        return StepReport(len(admitted), prefill_shape, decode_batch,
-                          completed)
+        return StepReport(admitted, prefill_shapes, dispatches,
+                          self.max_batch if dispatches else 0, completed)
 
     # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
     def _begin_run(self):
-        assert not self._queue and not self._live.any(), \
+        assert not self.has_work, \
             "engine already has work in flight; one run_* call at a time"
         # throughput counters are PER RUN (trace_count and the step-fn
         # cache are engine-lifetime: reuse across runs shares traces)
         self.engine_steps = 0
         self.prefill_tokens = 0
+        self.prefill_chunks = 0
+        self.decode_dispatches = 0
         self.decode_rows_live = 0
         self.decode_rows_total = 0
+        self.swap_count = 0
 
     def _stats(self, completions: List[Completion],
                makespan: float) -> ServeStats:
         lats = [c.latency for c in completions]
         gen = sum(int(c.tokens.size) for c in completions)
+        versions: Dict[int, int] = {}
+        for c in completions:
+            versions[c.version] = versions.get(c.version, 0) + 1
         return ServeStats(
             n_requests=len(completions), gen_tokens=gen,
             makespan=makespan,
@@ -334,39 +523,26 @@ class ServingEngine:
             prefill_tokens=self.prefill_tokens,
             decode_rows_live=self.decode_rows_live,
             decode_rows_total=self.decode_rows_total,
-            trace_count=self._trace_count, completions=completions)
+            trace_count=self._trace_count, completions=completions,
+            prefill_chunks=self.prefill_chunks,
+            decode_dispatches=self.decode_dispatches,
+            swap_count=self.swap_count, versions_served=versions)
 
     def run_simulated(self, requests: Sequence[ServeRequest],
-                      cost: "Any") -> ServeStats:
+                      cost: "Any",
+                      swaps: Sequence[Tuple[float, PyTree, int]] = ()
+                      ) -> ServeStats:
         """Open-loop run on a discrete-event clock: requests arrive at
         ``req.arrival``, each engine step advances the clock by the cost
-        model's charge for the PADDED shapes it executed. Outputs are the
-        real model's tokens; only time is simulated."""
-        self._begin_run()
-        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        by_rid = {r.rid: r for r in reqs}
-        assert len(by_rid) == len(reqs), "duplicate request ids"
-        clock, i, out = 0.0, 0, []
-        while len(out) < len(reqs):
-            while i < len(reqs) and reqs[i].arrival <= clock + 1e-12:
-                self.submit(reqs[i])
-                i += 1
-            if not self._queue and not self._live.any():
-                clock = max(clock, reqs[i].arrival)   # idle: jump ahead
-                continue
-            rep = self.step()
-            dt = 0.0
-            if rep.prefill_shape is not None:
-                dt += cost.prefill_time(*rep.prefill_shape)
-            if rep.decode_batch:
-                dt += cost.decode_time(rep.decode_batch)
-            clock += dt
-            for c in rep.completed:
-                req = by_rid[c.rid]
-                c.finish = clock
-                c.latency = clock - req.arrival + 2.0 * req.client_latency
-                out.append(c)
-        return self._stats(out, makespan=clock)
+        model's charge for the PADDED shapes it executed, and optional
+        ``swaps`` — ``(t, params, version)`` triples — hot-swap the model
+        when the clock reaches ``t``. Outputs are the real model's
+        tokens; only time is simulated."""
+        session = SimulatedServeSession(self, cost, requests)
+        for t, params, version in swaps:
+            session.push_swap(t, params, version)
+        session.drain()
+        return session.stats()
 
     def run_closed_loop(self,
                         requests: Sequence[ServeRequest]) -> ServeStats:
@@ -384,3 +560,109 @@ class ServingEngine:
                 c.latency = now
                 out.append(c)
         return self._stats(out, makespan=time.perf_counter() - t0)
+
+
+class SimulatedServeSession:
+    """Incremental discrete-event driver over one engine: feed it
+    timestamped arrivals and param swaps, then ``advance_to(t)`` — this
+    is how launch/train_serve.py threads ONE clock through the training
+    event loop and the serving engine (training iterations advance the
+    shared clock; the session catches the engine up to it, applying the
+    published params at their publish times)."""
+
+    def __init__(self, engine: ServingEngine, cost: Any,
+                 requests: Sequence[ServeRequest] = ()):
+        engine._begin_run()
+        self.engine = engine
+        self.cost = cost
+        self._reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        self._by_rid = {r.rid: r for r in self._reqs}
+        assert len(self._by_rid) == len(self._reqs), "duplicate request ids"
+        self._i = 0
+        self._swaps: Deque[Tuple[float, PyTree, Optional[int]]] = deque()
+        self.clock = 0.0
+        self.completions: List[Completion] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return len(self.completions) == len(self._reqs)
+
+    def push_swap(self, t: float, params: PyTree,
+                  version: Optional[int] = None) -> None:
+        """Schedule a hot-swap at clock time ``t`` (pushes must arrive in
+        time order — the natural order of a training loop's publishes)."""
+        if self._swaps and t < self._swaps[-1][0]:
+            raise ValueError("swaps must be pushed in time order")
+        self._swaps.append((float(t), params, version))
+
+    # ------------------------------------------------------------------
+    def _apply_due(self) -> None:
+        while self._swaps and self._swaps[0][0] <= self.clock + 1e-12:
+            _, params, version = self._swaps.popleft()
+            self.engine.swap_params(params, version)
+            swap_time = getattr(self.cost, "swap_time", None)
+            if swap_time is not None:
+                self.clock += swap_time()
+        while self._i < len(self._reqs) \
+                and self._reqs[self._i].arrival <= self.clock + 1e-12:
+            self.engine.submit(self._reqs[self._i])
+            self._i += 1
+
+    def _next_event(self) -> Optional[float]:
+        times = []
+        if self._i < len(self._reqs):
+            times.append(self._reqs[self._i].arrival)
+        if self._swaps:
+            times.append(self._swaps[0][0])
+        return min(times) if times else None
+
+    def _step_once(self) -> None:
+        rep = self.engine.step()
+        dt = 0.0
+        for shape in rep.prefill_shapes:
+            dt += self.cost.prefill_time(*shape)
+        dt += rep.decode_dispatches \
+            * self.cost.decode_time(self.engine.max_batch)
+        self.clock += dt
+        for c in rep.completed:
+            req = self._by_rid[c.rid]
+            c.finish = self.clock
+            c.latency = self.clock - req.arrival + 2.0 * req.client_latency
+            self.completions.append(c)
+
+    def advance_to(self, t_end: float) -> None:
+        """Run the engine until the clock reaches ``t_end`` (idle gaps
+        jump the clock; work in progress may overshoot — time is charged
+        when a step completes, never sliced)."""
+        while self.clock < t_end:
+            self._apply_due()
+            if self.engine.has_work:
+                self._step_once()
+            else:
+                nxt = self._next_event()
+                if nxt is None or nxt > t_end:
+                    self.clock = t_end
+                else:
+                    self.clock = max(self.clock, nxt)
+        self._apply_due()
+
+    def drain(self) -> None:
+        """Run until every submitted-or-future request has completed."""
+        while not self.done:
+            self._apply_due()
+            if self.engine.has_work:
+                self._step_once()
+            else:
+                nxt = self._next_event()
+                assert nxt is not None, "no work left but requests missing"
+                self.clock = max(self.clock, nxt)
+
+    def stats(self) -> ServeStats:
+        # makespan is the LAST COMPLETION's clock, not the session clock:
+        # advance_to() may have idled the clock past the serving work
+        # (e.g. a training horizon longer than the request schedule), and
+        # throughput must not be diluted by that idle tail
+        makespan = max((c.finish for c in self.completions),
+                       default=self.clock)
+        return self.engine._stats(self.completions, makespan=makespan)

@@ -12,7 +12,6 @@ zeroes per-worker row ranges without recompiling (see core/mesh_engine).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -81,6 +80,18 @@ def build_prefill_step(cfg: ArchConfig, unroll: bool = False,
                                    lengths=batch.get("lengths"), **kw)
         return logits, cache
     return prefill_step
+
+
+def build_prefill_chunk_step(cfg: ArchConfig, unroll: bool = False):
+    """Chunked-prefill step fn ``(params, tokens (B,C), off (B,), clen
+    (B,), cache) -> (last-valid logits (B,1,V), cache)`` — one chunk of a
+    long prompt into the serving engine's slot cache segments
+    (``tf.prefill_chunk``; docs/serving.md). The engine buckets (B, C)
+    to powers of two so the trace count stays bounded by buckets."""
+    def prefill_chunk_step(params, tokens, off, clen, cache):
+        return tf.prefill_chunk(params, cfg, tokens, off, clen, cache,
+                                unroll=unroll)
+    return prefill_chunk_step
 
 
 def build_decode_step(cfg: ArchConfig, unroll: bool = False,

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.attention import (attention, attention_decode,
                                     attention_prefill, cross_attend,

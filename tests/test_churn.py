@@ -137,8 +137,8 @@ def _run_fuzz(seed, iters):
         reduces += int(log.wire_bytes > 0)
     # the fuzz actually trained (not a degenerate all-empty schedule)
     assert reduces > iters // 2
-    assert all(np.isfinite(np.asarray(l)).all()
-               for l in jax.tree.leaves(loop.reducer.params))
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(loop.reducer.params))
     return loop
 
 
@@ -181,12 +181,12 @@ def test_deadline_excludes_straggler_and_caps_wall():
     logs = loop.run(6)
     tail = logs[2:]                     # let EWMAs settle
     # the straggler misses every deadline once the fleet is measured
-    assert all(l.n_late >= 1 for l in tail)
-    assert any("late:slow" in l.events for l in tail)
+    assert all(lg.n_late >= 1 for lg in tail)
+    assert any("late:slow" in lg.events for lg in tail)
     # the iteration closes at the deadline, not at the straggler
-    for l in tail:
-        assert l.deadline is not None
-        assert l.wall_time < 2.0        # straggler alone takes >= 2s
+    for lg in tail:
+        assert lg.deadline is not None
+        assert lg.wall_time < 2.0       # straggler alone takes >= 2s
     # the straggler's unsent mass is preserved in its residual
     assert "slow" in loop.reducer._residuals
     assert float(jnp.abs(loop.reducer._residuals["slow"]).sum()) > 0
@@ -197,9 +197,9 @@ def test_deadline_excludes_straggler_and_caps_wall():
 def test_stall_on_slowest_baseline_pays_the_straggler():
     loop = _straggler_loop(deadline_quantile=None)
     logs = loop.run(4)
-    assert all(l.n_late == 0 for l in logs)
+    assert all(lg.n_late == 0 for lg in logs)
     # without the deadline the straggler sets every iteration's wall
-    assert all(l.wall_time > 2.0 for l in logs[1:])
+    assert all(lg.wall_time > 2.0 for lg in logs[1:])
 
 
 def test_upload_bound_fleet_does_not_livelock():
@@ -223,7 +223,8 @@ def test_upload_bound_fleet_does_not_livelock():
         loop.submit(JoinEvent(f"w{i}", capacity=200))
     logs = loop.run(10)
     # the upload EWMA grows the deadline until replies fit inside it
-    assert any(l.wire_bytes > 0 for l in logs), "livelock: no reduce ever"
+    assert any(lg.wire_bytes > 0
+               for lg in logs), "livelock: no reduce ever"
     assert logs[-1].n_late == 0, "livelock: still all-late after settling"
     assert red.step > 0
 

@@ -95,15 +95,15 @@ def test_empty_fleet_iterations_advance_step():
     emitted duplicate step numbers in the history."""
     loop, cluster, _, _ = _make_loop(n_workers=0)
     logs = loop.run(3)                      # nobody ever joined
-    assert [l.step for l in logs] == [1, 2, 3]
-    assert all(l.n_workers == 0 for l in logs)
+    assert [lg.step for lg in logs] == [1, 2, 3]
+    assert all(lg.n_workers == 0 for lg in logs)
     assert loop.clock == pytest.approx(3 * loop.scheduler.T)
     # a worker joining afterwards continues the monotone numbering
     cluster.add_worker("w0", GRID_NODE)
     loop.submit(JoinEvent("w0", capacity=3000))
     log = loop.iteration()
     assert log.step == 4
-    assert [l.step for l in loop.history] == [1, 2, 3, 4]
+    assert [lg.step for lg in loop.history] == [1, 2, 3, 4]
 
 
 def test_convergence_reaches_low_test_error():

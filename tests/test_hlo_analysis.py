@@ -1,6 +1,4 @@
 """HLO collective parser: handcrafted lines + a real compiled module."""
-import jax
-import jax.numpy as jnp
 
 from repro.distributed.hlo_analysis import (collective_bytes, count_ops,
                                             roofline_terms, shape_bytes)

@@ -5,7 +5,7 @@ import numpy as np
 
 from repro.core.local_sgd import build_local_sgd_round, communication_ratio
 from repro.core.reducer import weighted_reduce
-from repro.optim import adagrad, sgd
+from repro.optim import sgd
 
 
 def _quadratic_grad(target):
@@ -74,7 +74,7 @@ def test_local_sgd_on_real_lm():
             logits, _ = tf.forward(p, cfg, mb["tokens"], remat=False)
             s, c = softmax_xent(logits, mb["labels"])
             return s / jnp.maximum(c, 1.0), c
-        (l, c), g = jax.value_and_grad(loss, has_aux=True)(p)
+        (_loss, c), g = jax.value_and_grad(loss, has_aux=True)(p)
         return g, c
 
     round_fn = jax.jit(build_local_sgd_round(grad_fn, sgd(lr=0.3)))

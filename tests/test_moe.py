@@ -88,5 +88,5 @@ def test_grads_flow_both_impls():
     for fn in (moe_ffn, moe_ffn_sorted):
         g = jax.grad(lambda p: fn(p, x, cfg)[0].sum())(p)
         leaves = jax.tree.leaves(g)
-        assert all(bool(jnp.isfinite(l).all()) for l in leaves)
-        assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+        assert all(bool(jnp.isfinite(x).all()) for x in leaves)
+        assert any(float(jnp.abs(x).max()) > 0 for x in leaves)

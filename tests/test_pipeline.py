@@ -1,5 +1,4 @@
 """Sharded pipeline <-> allocator protocol: ownership, churn, masks."""
-import numpy as np
 
 from repro.core.allocator import DataAllocator
 from repro.data.datasets import synthetic_lm, synthetic_mnist

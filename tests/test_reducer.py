@@ -8,7 +8,7 @@ import pytest
 from repro.core.reducer import MasterReducer, weighted_reduce
 from repro.core.compression import GradientCompressor
 from repro.models import cnn
-from repro.optim import adagrad, sgd
+from repro.optim import sgd
 
 
 def _grad_sum(params, X, y):
@@ -37,7 +37,8 @@ def test_weighted_reduce_equals_fullbatch_gradient():
 
 
 def test_reduce_order_invariance():
-    tree = lambda v: {"a": jnp.full((4,), v), "b": jnp.full((2, 2), 2 * v)}
+    def tree(v):
+        return {"a": jnp.full((4,), v), "b": jnp.full((2, 2), 2 * v)}
     msgs = [(tree(1.0), 2), (tree(3.0), 6), (tree(-2.0), 4)]
     r1 = weighted_reduce(msgs)
     r2 = weighted_reduce(list(reversed(msgs)))

@@ -91,6 +91,54 @@ def test_ragged_prefill_matches_unpadded():
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("cfg", [TINY_DENSE, TINY_MOE],
+                         ids=["dense", "moe"])
+def test_prefill_chunk_matches_unpadded(cfg):
+    """Chunked ragged prefill (tf.prefill_chunk over slot cache rows) is
+    bit-exact vs one unpadded single-shot prefill — logits AND cache."""
+    params = _params(cfg)
+    rng = np.random.RandomState(0)
+    T, B, CH = 32, 3, 8
+    lens = [13, 7, 21]
+    prompts = [rng.randint(0, cfg.vocab_size, L).astype(np.int32)
+               for L in lens]
+    shape = (cfg.n_layers, B, T, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"layers": {"k": jnp.zeros(shape, jnp.float32),
+                        "v": jnp.zeros(shape, jnp.float32)}}
+    filled = [0] * B
+    last_logits = [None] * B
+    while any(filled[b] < lens[b] for b in range(B)):
+        group = [b for b in range(B) if filled[b] < lens[b]]
+        clens = [min(lens[b] - filled[b], CH) for b in group]
+        toks = np.zeros((len(group), CH), np.int32)
+        off = np.zeros(len(group), np.int32)
+        cl = np.zeros(len(group), np.int32)
+        for i, b in enumerate(group):
+            toks[i, :clens[i]] = prompts[b][filled[b]:filled[b] + clens[i]]
+            off[i], cl[i] = filled[b], clens[i]
+        gi = jnp.asarray(group)
+        rows = jax.tree.map(lambda c: c[:, gi], cache)
+        lg, rows = tf.prefill_chunk(params, cfg, jnp.asarray(toks),
+                                    jnp.asarray(off), jnp.asarray(cl),
+                                    rows)
+        cache = jax.tree.map(lambda c, r: c.at[:, gi].set(r), cache, rows)
+        for i, b in enumerate(group):
+            filled[b] += clens[i]
+            if filled[b] == lens[b]:
+                last_logits[b] = np.asarray(lg[i, 0])
+    for b in range(B):
+        ref_lg, ref_cache = tf.prefill(params, cfg,
+                                       jnp.asarray(prompts[b][None, :]),
+                                       cache_len=T)
+        np.testing.assert_allclose(last_logits[b], np.asarray(ref_lg[0, 0]),
+                                   rtol=1e-5, atol=1e-5)
+        for name in ("k", "v"):
+            np.testing.assert_allclose(
+                np.asarray(cache["layers"][name][:, b, :lens[b]]),
+                np.asarray(ref_cache["layers"][name][:, 0, :lens[b]]),
+                rtol=1e-5, atol=1e-6)
+
+
 def test_ragged_prefill_rejects_recurrent_archs():
     from repro.configs import get_config
     cfg = get_config("mamba2-780m").reduced()
@@ -160,6 +208,97 @@ def test_engine_fuzz_no_leaks_and_neighbor_independence():
         if c.rid in solo:
             assert c.tokens.tolist() == solo[c.rid].tokens.tolist(), (
                 f"request {c.rid}: co-batched output differs from solo run")
+
+
+def test_engine_chunked_prefill_matches_oracle():
+    """Prompts LONGER than the largest prefill bucket (prompt_cap) enter
+    the slot cache chunk by chunk over several engine steps — outputs
+    must still match the no-cache oracle, and the chunk buckets must
+    stay capped at prompt_cap."""
+    cfg = TINY_DENSE
+    params = _params(cfg)
+    rng = np.random.RandomState(9)
+    lens = [30, 3, 17, 8, 25]
+    reqs = [ServeRequest(rid=i, prompt=rng.randint(
+        0, cfg.vocab_size, L).astype(np.int32), max_new=4)
+        for i, L in enumerate(lens)]
+    engine = ServingEngine(params, cfg, max_batch=3, max_seq=64,
+                           prompt_cap=8)
+    stats = engine.run_closed_loop(reqs)
+    assert stats.n_requests == len(reqs)
+    # chunking really happened: more chunk dispatches than admissions
+    # would need in one shot, and no bucket wider than prompt_cap
+    assert stats.prefill_chunks > len([L for L in lens if L > 8])
+    assert all(c <= 8 for _, c in engine.buckets_seen)
+    assert engine.trace_count == 1 + len(engine.buckets_seen)
+    for c in stats.completions:
+        req = reqs[c.rid]
+        oracle = _full_forward_greedy(params, cfg, req.prompt, req.max_new)
+        assert c.tokens.tolist() == oracle, (
+            f"chunked request {c.rid} (prompt_len={c.prompt_len}): "
+            f"{c.tokens.tolist()} != no-cache oracle {oracle}")
+
+
+# ---------------------------------------------------------------------------
+# sampling: temperature=0 IS the greedy oracle; seeded streams replay
+# identically solo vs co-batched
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [TINY_DENSE, TINY_MOE],
+                         ids=["dense", "moe"])
+def test_temperature_zero_matches_greedy_oracle(cfg):
+    params = _params(cfg)
+    rng = np.random.RandomState(13)
+    reqs = _mk_requests(cfg, rng, n=4)
+    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32,
+                           temperature=0.0, sample_seed=123)
+    stats = engine.run_closed_loop(reqs)
+    for c in stats.completions:
+        req = reqs[c.rid]
+        oracle = _full_forward_greedy(params, cfg, req.prompt, req.max_new)
+        assert c.tokens.tolist() == oracle
+
+
+def test_top_k_one_matches_greedy_oracle():
+    """top_k=1 leaves only the argmax in the categorical's support, so
+    ANY temperature must reproduce the greedy stream — pins the top-k
+    mask and the categorical draw to the same logits the argmax sees."""
+    cfg = TINY_DENSE
+    params = _params(cfg)
+    rng = np.random.RandomState(17)
+    reqs = _mk_requests(cfg, rng, n=4)
+    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32,
+                           temperature=1.7, top_k=1, sample_seed=5)
+    stats = engine.run_closed_loop(reqs)
+    for c in stats.completions:
+        req = reqs[c.rid]
+        oracle = _full_forward_greedy(params, cfg, req.prompt, req.max_new)
+        assert c.tokens.tolist() == oracle
+
+
+def test_sampling_deterministic_solo_vs_cobatched():
+    """A request's sampled stream depends only on (engine seed, rid,
+    token index): co-batched and solo runs of the same engine config
+    produce identical tokens, and a different seed produces different
+    ones somewhere."""
+    cfg = TINY_DENSE
+    params = _params(cfg)
+    rng = np.random.RandomState(21)
+    reqs = _mk_requests(cfg, rng, n=6, max_prompt=8, max_new=8)
+
+    def run(engine, rs):
+        return {c.rid: c.tokens.tolist()
+                for c in engine.run_closed_loop(rs).completions}
+
+    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32,
+                           temperature=0.8, top_k=7, sample_seed=42)
+    together = run(engine, reqs)
+    solo = {}
+    for r in reqs:
+        solo.update(run(engine, [r]))       # same engine: traces shared
+    assert together == solo
+    other = ServingEngine(params, cfg, max_batch=4, max_seq=32,
+                          temperature=0.8, top_k=7, sample_seed=43)
+    assert run(other, reqs) != together, "seed does not reach sampling"
 
 
 def test_engine_reuses_freed_slots_without_scrubbing():

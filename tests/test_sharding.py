@@ -6,7 +6,7 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.all_configs import ASSIGNED_ARCHS
-from repro.distributed.sharding import (batch_spec, param_spec, param_specs,
+from repro.distributed.sharding import (batch_spec, param_specs,
                                         sanitize_spec)
 from repro.models import transformer as tf
 
@@ -104,7 +104,6 @@ def test_fsdp_remap_has_no_model_axis_on_params():
 
     def check(spec):
         for ax in spec:
-            axes = ax if isinstance(ax, tuple) else (ax,)
             # model may only appear inside the fsdp tuple
             if ax == "model":
                 raise AssertionError(spec)
@@ -116,8 +115,7 @@ def test_fsdp_remap_has_no_model_axis_on_params():
 def test_serve_fsdp_moe_no_duplicate_axes():
     """llama4 serve_fsdp regression: expert ff must NOT reuse `data`
     when the d dim already shards over it (DuplicateSpecError)."""
-    from jax.sharding import NamedSharding
-    from repro.distributed.sharding import parse_layout, to_shardings
+    from repro.distributed.sharding import parse_layout
     cfg = get_config("llama4-scout-17b-a16e")
     params = tf.abstract_params(cfg)
     specs = param_specs(params, cfg, MESH, "serve",

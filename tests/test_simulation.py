@@ -1,7 +1,7 @@
 """Simulator fidelity vs the paper's §3.5 observations."""
 import numpy as np
 
-from repro.core.simulation import (GRID_NODE, NetworkModel, SimulatedCluster)
+from repro.core.simulation import GRID_NODE, SimulatedCluster
 from repro.core import (JoinEvent, MasterEventLoop, MasterReducer,
                         UploadDataEvent)
 from repro.core.scheduler import AdaptiveScheduler
@@ -22,8 +22,8 @@ def _power_at(n_workers: int, T=4.0, iters=6) -> tuple:
         loop.submit(JoinEvent(w, capacity=3000))
     logs = loop.run(iters)
     tail = logs[2:]
-    return (float(np.mean([l.power for l in tail])),
-            float(np.mean([l.mean_latency for l in tail])))
+    return (float(np.mean([lg.power for lg in tail])),
+            float(np.mean([lg.mean_latency for lg in tail])))
 
 
 def test_power_scales_linearly_small_n():

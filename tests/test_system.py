@@ -50,8 +50,8 @@ def test_full_paper_workflow(tmp_path):
         algorithm={"optimizer": "adagrad", "lr": 0.02, "T": 1.0,
                    "reduce": "weighted-mean"},
         params=red.params, step=loop.step,
-        metrics=[{"step": l.step, "loss": float(l.loss)}
-                 for l in loop.history])
+        metrics=[{"step": lg.step, "loss": float(lg.loss)}
+                 for lg in loop.history])
     path = str(tmp_path / "model.json")
     clo.save(path)
 

@@ -1,0 +1,238 @@
+"""Live train->serve loop tests (docs/serving.md §6):
+
+  - ``swap_params`` validation: trace-compatibility is enforced, version
+    numbers are monotone, retired versions leave the ring;
+  - in-flight pinning: a request admitted before a swap finishes its
+    WHOLE generation (including chunked-prefill remainders) under the
+    version it pinned, co-batched with requests on the new version, and
+    its output is bit-equal to a solo replay under that version;
+  - trace discipline: hot-swaps never retrace — the trace count stays
+    1 + distinct prefill buckets through arbitrarily many swaps;
+  - the publish path: MasterEventLoop hands post-step params to
+    ``publish_fn`` every ``publish_every`` iterations, and
+    ``run_train_serve`` threads them onto the serving clock (seeded
+    fuzz: every completion solo-replays bit-equal under its pinned
+    version);
+  - checkpoint seeding: ``serving_params_from_train_state`` recovers the
+    master's params bit-exactly, so snapshots seed the engine directly.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.simulation import ServeCostModel, generate_requests
+from repro.launch.train_serve import (build_training, run_train_serve,
+                                      tiny_cfg)
+from repro.models import transformer as tf
+from repro.serving import (ServeRequest, ServingEngine,
+                           SimulatedServeSession)
+
+CFG = tiny_cfg()
+
+
+def _params(seed=0):
+    return tf.init_params(jax.random.PRNGKey(seed), CFG)
+
+
+def _solo_replay(params, req, **engine_kw):
+    engine = ServingEngine(params, CFG, max_batch=2, max_seq=64,
+                           **engine_kw)
+    c = engine.run_closed_loop([ServeRequest(
+        rid=req.rid, prompt=req.prompt, max_new=req.max_new)])
+    return c.completions[0].tokens.tolist()
+
+
+# ---------------------------------------------------------------------------
+# swap_params validation + ring lifecycle
+# ---------------------------------------------------------------------------
+def test_swap_params_validation_and_ring():
+    engine = ServingEngine(_params(0), CFG, max_batch=2, max_seq=32)
+    assert engine.live_versions == [0]
+    with pytest.raises(ValueError, match="structure"):
+        engine.swap_params({"not": "a model"})
+    bad = jax.tree.map(lambda a: a[..., None], _params(1))
+    with pytest.raises(ValueError, match="trace-compatible"):
+        engine.swap_params(bad)
+    assert engine.swap_params(_params(1)) == 1
+    with pytest.raises(ValueError, match="must exceed"):
+        engine.swap_params(_params(2), version=1)
+    assert engine.swap_params(_params(2), version=7) == 7
+    # nothing in flight: intermediate versions retire immediately
+    assert engine.live_versions == [7]
+    assert engine.version == 7
+
+
+def test_versions_retire_when_last_pinned_slot_completes():
+    p0, p1 = _params(0), _params(1)
+    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=32)
+    rng = np.random.RandomState(0)
+    engine.submit(ServeRequest(rid=0, prompt=rng.randint(
+        0, CFG.vocab_size, 4).astype(np.int32), max_new=6))
+    engine.step()                              # rid 0 pinned to v0
+    engine.swap_params(p1)
+    assert engine.live_versions == [0, 1]      # v0 pinned, v1 latest
+    while engine.has_work:
+        engine.step()
+    assert engine.live_versions == [1]         # v0 retired with its slot
+
+
+# ---------------------------------------------------------------------------
+# in-flight pinning: old slots finish under old params, new under new
+# ---------------------------------------------------------------------------
+def test_in_flight_requests_finish_under_pinned_version():
+    p0, p1 = _params(0), _params(1)
+    rng = np.random.RandomState(3)
+    old = ServeRequest(rid=0, prompt=rng.randint(
+        0, CFG.vocab_size, 6).astype(np.int32), max_new=10)
+    new = ServeRequest(rid=1, prompt=rng.randint(
+        0, CFG.vocab_size, 5).astype(np.int32), max_new=6)
+    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=64)
+    engine.submit(old)
+    rep = engine.step()                        # old admitted+prefilled @v0
+    assert rep.admitted == 1
+    engine.swap_params(p1)
+    engine.submit(new)                         # admitted under v1
+    done = {}
+    while engine.has_work:
+        for c in engine.step().completed:
+            done[c.rid] = c
+    assert done[0].version == 0 and done[1].version == 1
+    assert done[0].tokens.tolist() == _solo_replay(p0, old)
+    assert done[1].tokens.tolist() == _solo_replay(p1, new)
+    # and the pinning mattered: the swapped tree decodes differently
+    assert done[0].tokens.tolist() != _solo_replay(p1, old)
+
+
+def test_swap_mid_chunked_prefill_stays_pinned():
+    """A swap landing BETWEEN a long prompt's chunks must not leak the
+    new params into its remaining chunks."""
+    p0, p1 = _params(0), _params(1)
+    rng = np.random.RandomState(5)
+    req = ServeRequest(rid=0, prompt=rng.randint(
+        0, CFG.vocab_size, 30).astype(np.int32), max_new=5)
+    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=64, prompt_cap=8)
+    engine.submit(req)
+    engine.step()                              # chunk 1 of 4 @v0
+    engine.swap_params(p1)
+    done = []
+    while engine.has_work:
+        done += engine.step().completed
+    assert done[0].version == 0
+    solo = ServingEngine(p0, CFG, max_batch=2, max_seq=64, prompt_cap=8)
+    ref = solo.run_closed_loop([req]).completions[0]
+    assert done[0].tokens.tolist() == ref.tokens.tolist()
+
+
+def test_trace_count_invariant_under_swaps():
+    engine = ServingEngine(_params(0), CFG, max_batch=4, max_seq=64,
+                           prompt_cap=16)
+    reqs = generate_requests(
+        16, rate_rps=200.0, vocab_size=CFG.vocab_size, prompt_rng=(1, 24),
+        gen_short=(1, 5), gen_long=(6, 10), long_frac=0.3, seed=2)
+    engine.run_simulated(reqs, ServeCostModel())
+    t1, buckets = engine.trace_count, set(engine.buckets_seen)
+    assert t1 == 1 + len(buckets)
+    swaps = [(0.002 * k, _params(k), k) for k in range(1, 9)]
+    reqs2 = generate_requests(
+        16, rate_rps=200.0, vocab_size=CFG.vocab_size, prompt_rng=(1, 24),
+        gen_short=(1, 5), gen_long=(6, 10), long_frac=0.3, seed=3)
+    stats = engine.run_simulated(reqs2, ServeCostModel(), swaps=swaps)
+    assert stats.swap_count == 8
+    assert len(stats.versions_served) > 1, "swaps never reached clients"
+    # swaps add traces ONLY if a genuinely new bucket appeared
+    assert engine.trace_count - t1 == \
+        len(set(engine.buckets_seen) - buckets)
+
+
+# ---------------------------------------------------------------------------
+# the publish path + the end-to-end fuzz
+# ---------------------------------------------------------------------------
+def test_event_loop_publishes_every_n_iterations():
+    published = []
+    loop, cluster, _ = build_training(
+        CFG, T=0.2, seed=0, churny=False, publish_every=3,
+        publish_fn=lambda p, v, t: published.append((v, t)))
+    for _ in range(7):
+        loop.iteration()
+    assert [v for v, _ in published] == [3, 6]
+    clocks = [t for _, t in published]
+    assert clocks == sorted(clocks)
+    # the published tree IS the master's current params
+    loop.publish_fn = lambda p, v, t: published.append(p)
+    loop.publish_every = 1
+    loop.iteration()
+    for a, b in zip(jax.tree.leaves(published[-1]),
+                    jax.tree.leaves(loop.reducer.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_serve_fuzz_every_completion_replays_under_pinned_version():
+    """The acceptance fuzz: a churny training fleet publishes into a live
+    serving session; every request completes exactly once and its tokens
+    are bit-equal to a solo replay under its pinned version."""
+    reqs = generate_requests(
+        24, rate_rps=8.0, vocab_size=CFG.vocab_size, prompt_rng=(4, 40),
+        gen_short=(2, 8), gen_long=(9, 14), long_frac=0.3, seed=11)
+    out = run_train_serve(CFG, reqs, iterations=10, publish_every=2,
+                          T=0.4, seed=0, max_batch=4, max_seq=64,
+                          prompt_cap=16)
+    stats, versions = out["stats"], out["versions"]
+    assert sorted(c.rid for c in stats.completions) == \
+        sorted(r.rid for r in reqs)
+    assert stats.swap_count >= 2, "no swap landed inside the serve run"
+    assert len(stats.versions_served) >= 2, "every client saw one version"
+    assert out["engine"].trace_count == 1 + len(out["engine"].buckets_seen)
+    assert not out["engine"].has_work
+    by_rid = {r.rid: r for r in reqs}
+    replayers = {}
+    for c in stats.completions:
+        assert c.tokens.size == by_rid[c.rid].max_new
+        if c.version not in replayers:
+            replayers[c.version] = ServingEngine(
+                versions[c.version], CFG, max_batch=4, max_seq=64,
+                prompt_cap=16)
+        solo = replayers[c.version].run_closed_loop(
+            [ServeRequest(rid=c.rid, prompt=by_rid[c.rid].prompt,
+                          max_new=by_rid[c.rid].max_new)]).completions[0]
+        assert c.tokens.tolist() == solo.tokens.tolist(), (
+            f"rid {c.rid} corrupted under swaps (version {c.version})")
+
+
+def test_session_clock_monotone_and_swap_ordering():
+    engine = ServingEngine(_params(0), CFG, max_batch=2, max_seq=32)
+    session = SimulatedServeSession(engine, ServeCostModel(), [])
+    session.push_swap(1.0, _params(1), 1)
+    with pytest.raises(ValueError, match="time order"):
+        session.push_swap(0.5, _params(2), 2)
+    session.advance_to(2.0)
+    assert session.clock == 2.0 and engine.version == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint -> engine seeding
+# ---------------------------------------------------------------------------
+def test_train_state_snapshot_seeds_engine(tmp_path):
+    from repro.checkpoint.io import (TrainState, load_train_state,
+                                     save_train_state,
+                                     serving_params_from_train_state)
+
+    loop, cluster, _ = build_training(CFG, T=0.2, seed=0, churny=False)
+    for _ in range(3):
+        loop.iteration()
+    path = str(tmp_path / "ts.npz")
+    save_train_state(path, TrainState.capture(loop, cluster))
+    template = _params(0)
+    params, step = serving_params_from_train_state(
+        load_train_state(path), template)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(loop.reducer.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the recovered tree drives the engine directly
+    engine = ServingEngine(params, CFG, max_batch=2, max_seq=32)
+    rng = np.random.RandomState(1)
+    req = ServeRequest(rid=0, prompt=rng.randint(
+        0, CFG.vocab_size, 5).astype(np.int32), max_new=4)
+    stats = engine.run_closed_loop([req])
+    assert stats.completions[0].tokens.size == 4

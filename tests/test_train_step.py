@@ -2,7 +2,6 @@
 masking rows must equal removing them from the batch."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as tf
