@@ -1,0 +1,299 @@
+"""Chaos-hardened train->serve gate (docs/robustness.md).
+
+MLitB's premise is a fleet the master does not control; PR 5's live
+train->serve loop survived slowness and churn, this bench gates what it
+does about *bad data and overload*. Three arms, one seeded fault
+schedule, all on the deterministic discrete-event clock:
+
+  - **unguarded fault-free**: exactly the PR-5 configuration (adagrad,
+    churny fleet, unbounded queue) — the reference throughput;
+  - **guarded fault-free**: the same run with every guardrail ARMED
+    (finite-ness screen, divergence watchdog, canary-gated publish,
+    bounded queue + admission deadline). Gate: tokens/s within 5% of
+    the unguarded arm with ZERO sheds, ZERO rollbacks, ZERO refusals —
+    robustness must be free when nothing is wrong;
+  - **chaos**: a NaN-spewing worker (quarantined, then evicted), a
+    garbage-scaling worker (its step diverges the loss -> last-good
+    rollback; plain sgd so the step is NOT scale-invariant), a flaky
+    uplink (drop + retry/backoff), a poisoned publish candidate every
+    4th version (canary refusal), and an 8x arrival burst against a
+    6-deep queue (explicit sheds). Gates: training reaches the target
+    loss within 1.5x the fault-free arm's simulated time, every
+    non-shed completion is bit-equal to its pinned-version solo replay,
+    completed+shed rids partition the schedule exactly, and queue depth
+    never exceeds the bound.
+
+``--smoke`` (CI): shorter schedule, same gates, easier loss target
+(the full target lands past the smoke horizon), emits BENCH_chaos.json.
+
+    PYTHONPATH=src python benchmarks/bench_chaos.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Optional
+
+N_REQ = 280
+SMOKE_REQ = 140
+CHAOS_REQ = 80
+SMOKE_CHAOS_REQ = 60
+ITERS = 16
+SMOKE_ITERS = 12
+RATE_RPS = 30.0
+MAX_BATCH = 4
+MAX_SEQ = 64
+PROMPT_CAP = 16
+PUBLISH_EVERY = 3
+TRAIN_T = 0.5
+GUARDED_GATE = 0.95            # guarded fault-free tokens/s vs unguarded
+TIME_GATE = 1.5                # chaos time-to-target vs fault-free (sgd)
+MAX_QUEUE = 6
+BURST = (0.5, 1.0, 8.0)        # 8x arrivals for 1s, 0.5s in
+LOSS_TARGET = 71.0             # full: ~iter 12 fault-free
+SMOKE_LOSS_TARGET = 74.5       # smoke: inside the 12-iteration horizon
+
+
+def _requests(n: int, cfg, seed: int, burst=None):
+    from repro.core.simulation import generate_requests
+    return generate_requests(
+        n, rate_rps=RATE_RPS, vocab_size=cfg.vocab_size,
+        prompt_rng=(4, 36), gen_short=(2, 8), gen_long=(18, 26),
+        long_frac=0.3, burst=burst, seed=seed)
+
+
+def _cost():
+    from repro.core.simulation import ServeCostModel
+    return ServeCostModel(step_overhead=2e-3, prefill_tok=1e-4,
+                          decode_row=2e-3)
+
+
+def _gate(cfg, seed=0):
+    import numpy as np
+
+    from repro.core.guardrails import CanaryGate, make_lm_probe
+    rng = np.random.RandomState(seed)
+    X = rng.randint(0, cfg.vocab_size, (4, 8)).astype(np.int32)
+    y = rng.randint(0, cfg.vocab_size, (4, 8)).astype(np.int32)
+    return CanaryGate(make_lm_probe(cfg, X, y))
+
+
+def _time_to_target(logs, target: float) -> Optional[float]:
+    """bench_churn's time-to-target on the training clock: first time
+    the loss EWMA crosses ``target``. Rolled-back rounds are excluded —
+    their loss was measured at params the rollback discarded."""
+    ew, t = None, 0.0
+    for lg in logs:
+        t += lg.wall_time
+        if lg.rolled_back or lg.loss != lg.loss:
+            continue
+        ew = lg.loss if ew is None else 0.7 * ew + 0.3 * lg.loss
+        if ew < target:
+            return t
+    return None
+
+
+def _replay_corrupted(stats, versions, reqs, cfg) -> int:
+    from repro.serving import ServeRequest, ServingEngine
+
+    by_rid = {r.rid: r for r in reqs}
+    replayers: Dict[int, ServingEngine] = {}
+    corrupted = 0
+    for c in stats.completions:
+        if c.version not in replayers:
+            # smaller batch: an independent decode trace, so the replay
+            # does not share the co-batched path's bugs
+            replayers[c.version] = ServingEngine(
+                versions[c.version], cfg, max_batch=2, max_seq=MAX_SEQ,
+                prompt_cap=PROMPT_CAP)
+        r = by_rid[c.rid]
+        solo = replayers[c.version].run_closed_loop(
+            [ServeRequest(rid=r.rid, prompt=r.prompt,
+                          max_new=r.max_new)]).completions[0]
+        if c.tokens.tolist() != solo.tokens.tolist():
+            corrupted += 1
+    return corrupted
+
+
+def run(n_req: int, n_chaos_req: int, iters: int, target: float,
+        seed: int = 0) -> Dict:
+    import jax
+    import numpy as np
+
+    from repro.core.guardrails import GuardrailConfig, TrainingGuardrails
+    from repro.core.simulation import FaultProfile
+    from repro.launch.train_serve import run_train_serve, tiny_cfg
+    from repro.optim import sgd
+
+    cfg = tiny_cfg()
+    cost = _cost()
+
+    # ---- arm 1: unguarded fault-free (the PR-5 configuration) ----
+    base_reqs = _requests(n_req, cfg, seed + 1)
+    base = run_train_serve(cfg, base_reqs, iterations=iters,
+                           publish_every=PUBLISH_EVERY, T=TRAIN_T,
+                           seed=seed, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                           prompt_cap=PROMPT_CAP, cost=cost)
+
+    # ---- arm 2: guarded fault-free — robustness must be free ----
+    g_ff = TrainingGuardrails()
+    gate_ff = _gate(cfg)
+    guarded = run_train_serve(
+        cfg, _requests(n_req, cfg, seed + 1), iterations=iters,
+        publish_every=PUBLISH_EVERY, T=TRAIN_T, seed=seed,
+        max_batch=MAX_BATCH, max_seq=MAX_SEQ, prompt_cap=PROMPT_CAP,
+        cost=cost, guardrails=g_ff, canary=gate_ff,
+        max_queue=64, shed_policy="reject", admission_deadline=60.0)
+
+    # ---- arm 3+4: chaos vs its fault-free reference (both sgd) ----
+    def chaos_run(faulty: bool):
+        g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=3))
+        gate = _gate(cfg)
+
+        def corrupt(params, version):
+            if faulty and version % 4 == 0:
+                return jax.tree.map(
+                    lambda a: np.full_like(np.asarray(a), np.nan), params)
+            return params
+
+        out = run_train_serve(
+            cfg, _requests(n_chaos_req, cfg, seed + 2,
+                           burst=BURST if faulty else None),
+            iterations=iters, publish_every=PUBLISH_EVERY, T=TRAIN_T,
+            seed=seed, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+            prompt_cap=PROMPT_CAP, cost=cost, churny=False,
+            guardrails=g, canary=gate, optimizer=sgd(lr=0.05),
+            publish_filter=corrupt,
+            fault_profiles={
+                "w1": FaultProfile(nan_p=0.25),      # NaN spewer
+                "w0": FaultProfile(garbage_p=0.10),  # diverges the step
+                "w2": FaultProfile(drop_p=0.2),      # flaky uplink
+            } if faulty else None,
+            max_queue=MAX_QUEUE, shed_policy="reject")
+        out["g"], out["gate"] = g, gate
+        return out
+
+    ff = chaos_run(faulty=False)
+    chaos = chaos_run(faulty=True)
+
+    t_ff = _time_to_target(ff["logs"], target)
+    t_chaos = _time_to_target(chaos["logs"], target)
+    cs, g, gate = chaos["stats"], chaos["g"], chaos["gate"]
+    done = {c.rid for c in cs.completions}
+    shed = {s.rid for s in cs.shed}
+    all_rids = {r.rid for r in _requests(n_chaos_req, cfg, seed + 2)}
+
+    return {
+        "n_requests": n_req,
+        "n_chaos_requests": n_chaos_req,
+        "train_iterations": iters,
+        "loss_target": target,
+        "guarded": {
+            "tokens_per_s": guarded["stats"].tokens_per_s,
+            "throughput_ratio": (guarded["stats"].tokens_per_s
+                                 / base["stats"].tokens_per_s),
+            "n_shed": guarded["stats"].n_shed,
+            "n_rollbacks": g_ff.n_rollbacks,
+            "n_quarantined": g_ff.n_quarantined,
+            "n_refused": gate_ff.n_refused,
+        },
+        "base_tokens_per_s": base["stats"].tokens_per_s,
+        "chaos": {
+            "tokens_per_s": cs.tokens_per_s,
+            "gen_tokens": cs.gen_tokens,
+            "n_completed": len(cs.completions),
+            "n_shed": cs.n_shed,
+            "shed_reasons": sorted({s.reason for s in cs.shed}),
+            "queue_peak": cs.queue_peak,
+            "n_quarantined": g.n_quarantined,
+            "n_rollbacks": g.n_rollbacks,
+            "evicted": list(g.evicted),
+            "n_refused": gate.n_refused,
+            "refused_versions": [v for _, v in chaos["refused"]],
+            "time_to_target_s": t_chaos,
+            "corrupted": _replay_corrupted(
+                cs, chaos["versions"],
+                _requests(n_chaos_req, cfg, seed + 2, burst=BURST), cfg),
+            "accounting_exact": (done.isdisjoint(shed)
+                                 and (done | shed) == all_rids),
+        },
+        "fault_free_time_to_target_s": t_ff,
+        "time_to_target_ratio": (t_chaos / t_ff
+                                 if t_chaos and t_ff else None),
+    }
+
+
+def check_and_report(out: Dict) -> None:
+    gd, ch = out["guarded"], out["chaos"]
+    print(f"requests={out['n_requests']} (chaos arm "
+          f"{out['n_chaos_requests']}) iters={out['train_iterations']} "
+          f"target={out['loss_target']}")
+    print(f"  unguarded fault-free: {out['base_tokens_per_s']:8.1f} tok/s")
+    print(f"    guarded fault-free: {gd['tokens_per_s']:8.1f} tok/s "
+          f"({gd['throughput_ratio']:.3f}x)  sheds={gd['n_shed']} "
+          f"rollbacks={gd['n_rollbacks']} refused={gd['n_refused']}")
+    print(f"                 chaos: {ch['tokens_per_s']:8.1f} tok/s  "
+          f"{ch['n_completed']} completed + {ch['n_shed']} shed "
+          f"({ch['shed_reasons']}), queue peak {ch['queue_peak']}")
+    print(f"  chaos guardrails: {ch['n_quarantined']} quarantined, "
+          f"evicted {ch['evicted'] or 'none'}, {ch['n_rollbacks']} "
+          f"rollbacks, {ch['n_refused']} canary refusals "
+          f"(versions {ch['refused_versions']})")
+    print(f"  time-to-target: fault-free "
+          f"{out['fault_free_time_to_target_s']:.2f}s vs chaos "
+          f"{ch['time_to_target_s']:.2f}s "
+          f"({out['time_to_target_ratio']:.3f}x)"
+          if ch["time_to_target_s"] and out["fault_free_time_to_target_s"]
+          else "  time-to-target: NOT REACHED")
+
+    # robustness must be free when nothing is wrong
+    assert gd["throughput_ratio"] >= GUARDED_GATE, (
+        f"guarded fault-free serving {gd['throughput_ratio']:.3f}x < "
+        f"{GUARDED_GATE}x unguarded — the guardrails are not free")
+    assert gd["n_shed"] == 0, "fault-free arm shed requests"
+    assert gd["n_rollbacks"] == 0, "fault-free arm rolled back"
+    assert gd["n_quarantined"] == 0, "fault-free arm quarantined a worker"
+    assert gd["n_refused"] == 0, "fault-free arm refused a publish"
+    # the chaos arm must actually exercise every layer...
+    assert ch["n_quarantined"] >= 1, "NaN faults never screened"
+    assert ch["n_rollbacks"] >= 1, "garbage step never rolled back"
+    assert ch["n_refused"] >= 1, "poisoned publish never refused"
+    assert ch["n_shed"] >= 1, "burst never shed"
+    # ...and degrade gracefully, not collapse
+    assert out["fault_free_time_to_target_s"] is not None, \
+        "fault-free arm never reached the loss target"
+    assert ch["time_to_target_s"] is not None, \
+        "chaos arm never reached the loss target"
+    assert out["time_to_target_ratio"] <= TIME_GATE, (
+        f"chaos training {out['time_to_target_ratio']:.2f}x slower than "
+        f"fault-free to loss {out['loss_target']} (gate {TIME_GATE}x)")
+    assert ch["corrupted"] == 0, (
+        f"{ch['corrupted']} chaos completions differ from their "
+        f"pinned-version solo replay")
+    assert ch["accounting_exact"], \
+        "completed + shed do not partition the request schedule"
+    assert ch["queue_peak"] <= MAX_QUEUE, \
+        f"queue depth {ch['queue_peak']} exceeded max_queue={MAX_QUEUE}"
+    print(f"OK: guardrails free fault-free "
+          f"({gd['throughput_ratio']:.3f}x >= {GUARDED_GATE}x); chaos "
+          f"converged at {out['time_to_target_ratio']:.2f}x fault-free "
+          f"time (gate {TIME_GATE}x) with 0 corrupted, "
+          f"{ch['n_shed']} explicit sheds, queue <= {MAX_QUEUE}")
+
+
+def main(argv: List[str]) -> None:
+    from _bench_io import emit_bench_json
+
+    smoke = "--smoke" in argv
+    out = run(SMOKE_REQ if smoke else N_REQ,
+              SMOKE_CHAOS_REQ if smoke else CHAOS_REQ,
+              SMOKE_ITERS if smoke else ITERS,
+              SMOKE_LOSS_TARGET if smoke else LOSS_TARGET)
+    out["mode"] = "smoke" if smoke else "full"
+    # record the measured numbers BEFORE gating, so a regression still
+    # leaves its artifact to diagnose from
+    emit_bench_json("chaos", out)
+    check_and_report(out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

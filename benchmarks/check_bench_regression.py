@@ -48,6 +48,12 @@ HEADLINES = {
         ("swap.p95_latency_s", "lower", None),
         ("swap.trace_count", "lower", None),
     ],
+    "chaos": [
+        ("guarded.throughput_ratio", "higher", None),
+        ("chaos.tokens_per_s", "higher", None),
+        ("time_to_target_ratio", "lower", None),
+        ("chaos.queue_peak", "lower", None),
+    ],
 }
 
 

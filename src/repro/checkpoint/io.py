@@ -18,6 +18,9 @@ is BIT-EXACT with the uninterrupted one (tests/test_churn.py).
 from __future__ import annotations
 
 import json
+import os
+import tempfile
+import zipfile
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -53,19 +56,52 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> PyTree:
     return tree
 
 
+def _atomic_savez(path: str, **arrays: Any) -> None:
+    """Crash-safe ``np.savez``: write to a temp file in the SAME
+    directory, fsync, then ``os.replace`` onto ``path`` — a crash (or a
+    full disk) mid-write leaves the previous checkpoint intact instead
+    of a torn half-zip that poisons the next resume
+    (docs/robustness.md). ``np.savez`` appends ``.npz`` to bare names;
+    normalizing first keeps the replace target and the written file in
+    agreement."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp-",
+                               suffix=os.path.basename(path))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def save_npz(path: str, params: PyTree, *, cfg: Optional[ArchConfig] = None,
              meta: Optional[Dict[str, Any]] = None) -> None:
     flat = _flatten(params)
     header = {"meta": meta or {}}
     if cfg is not None:
         header["config"] = config_to_json(cfg)
-    np.savez(path, __header__=json.dumps(header), **flat)
+    _atomic_savez(path, __header__=json.dumps(header), **flat)
 
 
 def load_npz(path: str) -> Tuple[PyTree, Dict[str, Any]]:
-    with np.load(path, allow_pickle=False) as z:
-        header = json.loads(str(z["__header__"]))
-        flat = {k: z[k] for k in z.files if k != "__header__"}
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            header = json.loads(str(z["__header__"]))
+            flat = {k: z[k] for k in z.files if k != "__header__"}
+    except (zipfile.BadZipFile, KeyError, EOFError, OSError) as e:
+        if isinstance(e, FileNotFoundError):
+            raise
+        raise ValueError(
+            f"corrupt or truncated checkpoint {path!r}: {e}") from e
     return _unflatten(flat), header
 
 
@@ -149,13 +185,19 @@ def save_train_state(path: str, state: TrainState) -> None:
     arrays: Dict[str, np.ndarray] = {}
     skeleton = _pack({"version": state.version, "loop": state.loop,
                       "cluster": state.cluster}, "s", arrays)
-    np.savez(path, __train_state__=json.dumps(skeleton), **arrays)
+    _atomic_savez(path, __train_state__=json.dumps(skeleton), **arrays)
 
 
 def load_train_state(path: str) -> TrainState:
-    with np.load(path, allow_pickle=False) as z:
-        skeleton = json.loads(str(z["__train_state__"]))
-        arrays = {k: z[k] for k in z.files if k != "__train_state__"}
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            skeleton = json.loads(str(z["__train_state__"]))
+            arrays = {k: z[k] for k in z.files if k != "__train_state__"}
+    except (zipfile.BadZipFile, KeyError, EOFError, OSError) as e:
+        if isinstance(e, FileNotFoundError):
+            raise
+        raise ValueError(
+            f"corrupt or truncated TrainState {path!r}: {e}") from e
     obj = _unpack(skeleton, arrays)
     if int(obj["version"]) != TRAIN_STATE_VERSION:
         raise ValueError(f"unsupported TrainState version {obj['version']}")

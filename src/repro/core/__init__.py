@@ -10,5 +10,7 @@ from repro.core.elastic import (JoinEvent, LeaveEvent,  # noqa: F401
                                 UploadDataEvent)
 from repro.core.event_loop import MasterEventLoop  # noqa: F401
 from repro.core.flatbuf import FlatSpec, flat_spec  # noqa: F401
+from repro.core.guardrails import (CanaryGate,  # noqa: F401
+                                   GuardrailConfig, TrainingGuardrails)
 from repro.core.reducer import MasterReducer, weighted_reduce  # noqa: F401
 from repro.core.scheduler import AdaptiveScheduler  # noqa: F401

@@ -25,6 +25,7 @@ from repro.core.adaptive_frac import AdaptiveFracController
 from repro.core.allocator import DataAllocator
 from repro.core.elastic import (EventQueue, JoinEvent, LeaveEvent,
                                 UploadDataEvent, WorkerRegistry)
+from repro.core.guardrails import TrainingGuardrails
 from repro.core.reducer import MasterReducer
 from repro.core.scheduler import AdaptiveScheduler
 
@@ -72,6 +73,10 @@ class IterationLog:
     max_upload: float = 0.0      # slowest worker's reduce-step upload (s)
     n_late: int = 0              # workers excluded by the deadline
     deadline: Optional[float] = None   # this iteration's close time (s)
+    n_quarantined: int = 0       # NaN/Inf messages screened out this round
+                                 # (docs/robustness.md)
+    rolled_back: bool = False    # divergence detected: reducer restored to
+                                 # its last-good snapshot, reduce skipped
 
 
 class MasterEventLoop:
@@ -79,6 +84,7 @@ class MasterEventLoop:
                  scheduler: Optional[AdaptiveScheduler] = None,
                  allocator: Optional[DataAllocator] = None,
                  frac_controller: Optional["AdaptiveFracController"] = None,
+                 guardrails: Optional["TrainingGuardrails"] = None,
                  T: float = 4.0,
                  deadline_quantile: Optional[float] = None,
                  deadline_slack: float = 1.5,
@@ -89,6 +95,11 @@ class MasterEventLoop:
         self.cluster = cluster
         self.scheduler = scheduler or AdaptiveScheduler(T=T)
         self.allocator = allocator or DataAllocator()
+        # NaN/divergence watchdog (docs/robustness.md): screens worker
+        # messages for finite-ness before the reduce, detects loss
+        # divergence, and rolls the reducer back to its last-good
+        # snapshot. None = trust every message (the paper's behavior).
+        self.guardrails = guardrails
         # deadline-based partial participation (docs/elastic_training.md):
         # when set, each iteration closes at scheduler.deadline(live,
         # quantile, slack); replies landing later are excluded from the
@@ -207,6 +218,20 @@ class MasterEventLoop:
             self.submit(LeaveEvent(w))
             notes.append(f"lost:{w}")
 
+        # ---- guardrail layer 1: finite-ness screen (docs/robustness.md)
+        # a NaN/Inf message is quarantined BEFORE the reduce — excluded
+        # from the weighted average, the loss, and its own error-feedback
+        # residual (deferring poisoned mass would poison the residual) —
+        # and repeat offenders leave through the ordinary membership path
+        quarantined: List[str] = []
+        if self.guardrails is not None and messages:
+            messages, quarantined = self.guardrails.screen(messages)
+            for w in quarantined:
+                notes.append(f"quarantine:{w}")
+                if self.guardrails.record_offense(w):
+                    self.submit(LeaveEvent(w))
+                    notes.append(f"evict:{w}")
+
         # synthetic-compute clusters send empty gradient trees (throughput
         # studies): count vectors but skip the parameter update
         has_grads = any(
@@ -241,37 +266,61 @@ class MasterEventLoop:
         for w in late:
             notes.append(f"late:{w}")
 
-        # ---- (c) reduce step (on-time workers only) ----
+        # ---- (c) reduce step (on-time, unquarantined workers only) ----
         loss = float("nan")
         wire_bytes = 0
         per_bytes: Dict[str, int] = {}
-        on_time = {w: r for w, r in results.items() if w not in late}
+        rolled_back = False
+        on_time = {w: r for w, r in results.items()
+                   if w not in late and w not in quarantined}
         vectors = sum(r.n_vectors for r in on_time.values())
         if messages and has_grads:
             late_msgs = [w for w in late if w in messages]
             if len(late_msgs) < len(messages):
-                if self.reducer.fused:
-                    # late workers ride the reduce dispatch live-masked
-                    # to zero; their corrected gradient parks in their
-                    # error-feedback residual
-                    self.reducer.reduce_and_step(messages, keep=keep,
-                                                 defer=late_msgs)
-                else:
-                    # dense path: residual-preserve late mass when a
-                    # compressor channel exists, else drop it
-                    if self.reducer.compressor is not None:
-                        for w in late_msgs:
-                            self.reducer.defer_to_residual(
-                                w, messages[w][0])
-                    self.reducer.reduce_and_step(
-                        {w: m for w, m in messages.items()
-                         if w not in late}, keep=keep)
-                wire_bytes = self.reducer.last_wire_bytes
-                per_bytes = dict(self.reducer.last_per_worker_bytes)
+                # the round's loss is computable BEFORE the step: it is
+                # evaluated at the CURRENT params (the previous step's
+                # output), which is exactly what the divergence watchdog
+                # must judge before letting another step compound it
                 tot = sum(messages[w][1] for w in messages
                           if w not in late)
                 loss = (sum(r.loss_sum for w, r in on_time.items())
                         / max(tot, 1))
+                if self.guardrails is not None \
+                        and self.guardrails.check_divergence(loss):
+                    # guardrail layer 2: the previous step poisoned the
+                    # params (garbage-scaled gradients pass the finite
+                    # screen). Restore the last-good snapshot and SKIP
+                    # this round's reduce — gradients computed against
+                    # diverged params are garbage too.
+                    self.guardrails.rollback(self.reducer)
+                    rolled_back = True
+                    notes.append("rollback")
+                else:
+                    if self.guardrails is not None:
+                        # this loss just vouched for the pre-step
+                        # params: refresh the last-good snapshot BEFORE
+                        # stepping, so a future rollback lands on
+                        # verified state
+                        self.guardrails.observe_healthy(loss)
+                        self.guardrails.snapshot(self.reducer)
+                    if self.reducer.fused:
+                        # late workers ride the reduce dispatch
+                        # live-masked to zero; their corrected gradient
+                        # parks in their error-feedback residual
+                        self.reducer.reduce_and_step(messages, keep=keep,
+                                                     defer=late_msgs)
+                    else:
+                        # dense path: residual-preserve late mass when a
+                        # compressor channel exists, else drop it
+                        if self.reducer.compressor is not None:
+                            for w in late_msgs:
+                                self.reducer.defer_to_residual(
+                                    w, messages[w][0])
+                        self.reducer.reduce_and_step(
+                            {w: m for w, m in messages.items()
+                             if w not in late}, keep=keep)
+                    wire_bytes = self.reducer.last_wire_bytes
+                    per_bytes = dict(self.reducer.last_per_worker_bytes)
             elif self.reducer.supports_defer:
                 # every reply missed the deadline: no update this
                 # iteration, but none of the mass is lost
@@ -310,7 +359,8 @@ class MasterEventLoop:
             mean_latency=sum(lat) / len(lat), loss=loss, events=notes,
             wire_bytes=wire_bytes, per_worker_wire_bytes=per_bytes,
             max_upload=max(uploads.values()) if uploads else 0.0,
-            n_late=len(late), deadline=deadline)
+            n_late=len(late), deadline=deadline,
+            n_quarantined=len(quarantined), rolled_back=rolled_back)
         self.history.append(log)
         self._maybe_publish()
         return log
@@ -353,6 +403,8 @@ class MasterEventLoop:
         }
         if self.frac_controller is not None:
             st["frac_controller"] = self.frac_controller.state_dict()
+        if self.guardrails is not None:
+            st["guardrails"] = self.guardrails.state_dict()
         return st
 
     def load_state_dict(self, st: Dict[str, Any]) -> None:
@@ -384,6 +436,12 @@ class MasterEventLoop:
                 f"one")
         if self.frac_controller is not None:
             self.frac_controller.load_state_dict(st["frac_controller"])
+        if self.guardrails is not None and "guardrails" in st:
+            # older snapshots predate the watchdog: a loop built with
+            # guardrails resumes them fresh (strikes/window re-arm),
+            # which is safe — unlike frac hysteresis, no numerical
+            # trajectory depends on watchdog memory
+            self.guardrails.load_state_dict(st["guardrails"])
 
     # ------------------------------------------------------------------
     def run(self, n_iterations: int,

@@ -62,6 +62,28 @@ class DeviceProfile:
     straggle_factor: float = 8.0   # reply's latency by straggle_factor
 
 
+@dataclass(frozen=True)
+class FaultProfile:
+    """Seeded per-worker fault model (docs/robustness.md): the ways a
+    volunteer browser goes BAD rather than merely slow. Gradient faults
+    are mutually exclusive per reply (one seeded draw chooses); the
+    flaky-uplink model is independent and applies to whatever reply the
+    gradient faults produced. Workers without a profile draw nothing
+    extra from their RNG stream, so fault-free runs stay bit-identical
+    to pre-fault-injection behavior."""
+    nan_p: float = 0.0          # P(reply gradient poisoned NaN/Inf —
+                                # fp16 overflow, a broken kernel, malice)
+    garbage_p: float = 0.0      # P(reply finite but garbage-scaled:
+    garbage_scale: float = 1e6  # passes a finite screen, diverges the step)
+    stale_p: float = 0.0        # P(reply duplicates the worker's previous
+                                # message — a re-send of a stale payload)
+    drop_p: float = 0.0         # P(one uplink send attempt is lost)
+    max_retries: int = 2        # bounded retransmits before the reply is
+                                # lost for good (master sees no message)
+    retry_backoff: float = 0.25  # s added per retransmit, doubling
+                                 # (charged to the reply's sim latency)
+
+
 WORKSTATION = DeviceProfile("workstation", 400.0, 0.010, 0.20,
                             uplink_bps=12.5e6)       # ~100 Mb/s ethernet
 LAPTOP = DeviceProfile("laptop", 150.0, 0.030, 0.40,
@@ -132,16 +154,37 @@ class SimulatedCluster:
         # remaining replies] latency multipliers, and one-shot kills
         self._straggle: Dict[str, List[float]] = {}
         self._kill_pending: Set[str] = set()
+        # fault injection (docs/robustness.md): per-worker seeded fault
+        # profiles, scripted poison hooks (worker -> [kind, remaining
+        # replies]), and the last CLEAN reply per worker (what a stale
+        # fault re-sends). The stale cache is intentionally NOT part of
+        # state_dict: it holds full gradient trees, and a resume simply
+        # lets the first post-resume stale draw fall through.
+        self._faults: Dict[str, FaultProfile] = {}
+        self._poison: Dict[str, List[Any]] = {}
+        self._last_reply: Dict[str, Tuple[PyTree, int, float]] = {}
 
     # ------------------------------------------------------------------
     def add_worker(self, worker: str, profile: DeviceProfile) -> None:
-        # a rejoining tab starts clean: scripted stalls/kills aimed at a
-        # previous incarnation of this name must not leak onto it
+        # a rejoining tab starts clean: scripted stalls/kills/poison
+        # aimed at a previous incarnation of this name must not leak
+        # onto it
         self._straggle.pop(worker, None)
         self._kill_pending.discard(worker)
+        self._poison.pop(worker, None)
+        self._last_reply.pop(worker, None)
         self.workers[worker] = SimWorker(
             worker, profile,
             np.random.RandomState(self._rng.randint(2 ** 31)))
+
+    def set_faults(self, worker: str,
+                   faults: Optional[FaultProfile]) -> None:
+        """Attach (or clear, with None) a seeded fault profile to the
+        worker — the probabilistic counterpart of ``poison``."""
+        if faults is None:
+            self._faults.pop(worker, None)
+        else:
+            self._faults[worker] = faults
 
     # ------------------------------------------------------------------
     # scripted churn (deterministic counterpart of reliability/straggle_p)
@@ -152,11 +195,23 @@ class SimulatedCluster:
         LeaveEvent, paper footnote 5)."""
         self._kill_pending.add(worker)
         self._straggle.pop(worker, None)       # the stall died with it
+        self._poison.pop(worker, None)         # so did the poison
 
     def straggle(self, worker: str, factor: float, iters: int = 1) -> None:
         """Multiply the worker's next ``iters`` reply latencies by
         ``factor`` — a scripted GC pause / backgrounded tab."""
         self._straggle[worker] = [float(factor), int(iters)]
+
+    def poison(self, worker: str, kind: str, iters: int = 1) -> None:
+        """Corrupt the worker's next ``iters`` replies deterministically
+        — the scripted counterpart of ``FaultProfile`` (tests pin exact
+        rounds). ``kind``: 'nan' | 'inf' (non-finite gradient),
+        'garbage' (finite, scaled by the profile's ``garbage_scale`` or
+        1e6), 'stale' (re-send the previous clean reply), 'drop' (the
+        reply is lost on the uplink after its bounded retries)."""
+        if kind not in ("nan", "inf", "garbage", "stale", "drop"):
+            raise ValueError(f"unknown poison kind {kind!r}")
+        self._poison[worker] = [kind, int(iters)]
 
     # ------------------------------------------------------------------
     def _sample_latency(self, sw: SimWorker, n_live: int) -> float:
@@ -173,6 +228,56 @@ class SimulatedCluster:
               and sw.rng.rand() < sw.profile.straggle_p):
             stall = sw.profile.straggle_factor
         return base * stall + self.network.reduce_congestion(n_live)
+
+    # ------------------------------------------------------------------
+    # fault injection (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def _fault_kind(self, sw: SimWorker) -> Optional[str]:
+        """This reply's gradient fault, if any: the scripted poison
+        schedule wins (no RNG), else one seeded draw against the
+        worker's FaultProfile. Profile-less workers draw NOTHING, so
+        their streams match pre-fault-injection runs bit-exactly."""
+        sched = self._poison.get(sw.worker)
+        if sched is not None:
+            kind = sched[0]
+            sched[1] -= 1
+            if sched[1] <= 0:
+                del self._poison[sw.worker]
+            return kind
+        fp = self._faults.get(sw.worker)
+        if fp is None or (fp.nan_p + fp.garbage_p + fp.stale_p) <= 0.0:
+            return None
+        u = sw.rng.rand()
+        if u < fp.nan_p:
+            return "nan" if sw.rng.rand() < 0.5 else "inf"
+        if u < fp.nan_p + fp.garbage_p:
+            return "garbage"
+        if u < fp.nan_p + fp.garbage_p + fp.stale_p:
+            return "stale"
+        return None
+
+    def _uplink_delivery(self, sw: SimWorker,
+                         kind: Optional[str]) -> Tuple[bool, float]:
+        """(delivered, extra_latency) for the reply's flaky uplink:
+        each send attempt is lost with ``drop_p``; bounded retransmits
+        back off exponentially, charged to the sim clock; past
+        ``max_retries`` the reply is lost for good (the master sees a
+        live worker with nothing to contribute this round). A scripted
+        'drop' burns the full retry budget then loses the reply."""
+        fp = self._faults.get(sw.worker)
+        if kind == "drop":
+            backoff = fp.retry_backoff if fp else 0.25
+            retries = fp.max_retries if fp else 2
+            return False, sum(backoff * 2.0 ** a for a in range(retries))
+        if fp is None or fp.drop_p <= 0.0:
+            return True, 0.0
+        extra, attempt = 0.0, 0
+        while sw.rng.rand() < fp.drop_p:
+            attempt += 1
+            if attempt > fp.max_retries:
+                return False, extra
+            extra += fp.retry_backoff * 2.0 ** (attempt - 1)
+        return True, extra
 
     def compute(self, worker: str, params: PyTree, budget: float,
                 indices: List[int]) -> Optional[ComputeResult]:
@@ -193,12 +298,43 @@ class SimulatedCluster:
         take = sw.rng.choice(len(indices), size=n, replace=False)
         idx = np.asarray(indices)[take]
         if self.mode == "synthetic":
+            kind = self._fault_kind(sw)      # keeps schedules in step
+            delivered, extra = self._uplink_delivery(sw, kind)
+            if not delivered:
+                return ComputeResult({}, 0, n / sw.profile.power_vps,
+                                     latency + extra, 0.0)
             return ComputeResult({}, int(n), n / sw.profile.power_vps,
-                                 latency, 0.0)
+                                 latency + extra, 0.0)
         X, y = self.data
         grad_sum, loss_sum = self.grad_fn(params, X[idx], y[idx])
-        return ComputeResult(grad_sum, int(n), n / sw.profile.power_vps,
-                             latency, float(loss_sum))
+        reply_n = int(n)
+        loss_sum = float(loss_sum)
+        kind = self._fault_kind(sw)
+        if kind in ("nan", "inf"):
+            import jax
+            import jax.numpy as jnp
+            bad = float("nan") if kind == "nan" else float("inf")
+            grad_sum = jax.tree.map(lambda g: jnp.full_like(g, bad),
+                                    grad_sum)
+            loss_sum = bad
+        elif kind == "garbage":
+            import jax
+            fp = self._faults.get(worker)
+            scale = fp.garbage_scale if fp else 1e6
+            grad_sum = jax.tree.map(lambda g: g * scale, grad_sum)
+        elif kind == "stale" and worker in self._last_reply:
+            grad_sum, reply_n, loss_sum = self._last_reply[worker]
+        if kind is None:
+            # only CLEAN replies seed the stale cache: a stale fault
+            # re-sends the last genuine message, not a poisoned one
+            self._last_reply[worker] = (grad_sum, reply_n, loss_sum)
+        delivered, extra = self._uplink_delivery(sw, kind)
+        latency += extra
+        if not delivered:
+            return ComputeResult({}, 0, n / sw.profile.power_vps,
+                                 latency, 0.0)
+        return ComputeResult(grad_sum, reply_n, n / sw.profile.power_vps,
+                             latency, loss_sum)
 
     def upload_time(self, worker: str, nbytes: float) -> float:
         """Seconds worker's reduce-step message spends on ITS uplink —
@@ -233,6 +369,9 @@ class SimulatedCluster:
             "total_grad_bytes": self.total_grad_bytes,
             "straggle": {w: list(v) for w, v in self._straggle.items()},
             "kill_pending": sorted(self._kill_pending),
+            "faults": {w: dataclasses.asdict(fp)
+                       for w, fp in self._faults.items()},
+            "poison": {w: list(v) for w, v in self._poison.items()},
             "workers": {w: {"profile": dataclasses.asdict(sw.profile),
                             "rng": self._rng_state(sw.rng)}
                         for w, sw in self.workers.items()},
@@ -244,6 +383,15 @@ class SimulatedCluster:
         self._straggle = {w: [float(v[0]), int(v[1])]
                           for w, v in st["straggle"].items()}
         self._kill_pending = set(st["kill_pending"])
+        # lenient for pre-fault-injection snapshots; _last_reply is
+        # deliberately NOT restored (it holds gradient trees) — the
+        # first post-resume stale draw just falls through to a clean
+        # reply, which is a superset of correct behavior
+        self._faults = {w: FaultProfile(**d)
+                        for w, d in st.get("faults", {}).items()}
+        self._poison = {w: [str(v[0]), int(v[1])]
+                        for w, v in st.get("poison", {}).items()}
+        self._last_reply = {}
         self.workers = {}
         for w, d in st["workers"].items():
             sw = SimWorker(w, DeviceProfile(**d["profile"]),
@@ -292,12 +440,19 @@ def generate_requests(n: int, *, rate_rps: float = 60.0,
                       profiles: Tuple[DeviceProfile, ...] = (
                           WORKSTATION, LAPTOP, PHONE),
                       profile_weights: Tuple[float, ...] = (0.35, 0.4, 0.25),
+                      burst: Optional[Tuple[float, float, float]] = None,
                       seed: int = 0) -> List["Any"]:
     """Seeded open-loop request schedule: Poisson arrivals at ``rate_rps``,
     uniform prompt lengths, a short/long generation mixture (the heavy
     tail is what makes one-batch-at-a-time serving pay G_max for every
     row), and per-request client latencies drawn from the same
-    heterogeneous device profiles as the training fleet."""
+    heterogeneous device profiles as the training fleet.
+
+    ``burst=(start_s, duration_s, rate_multiplier)`` overlays an overload
+    window: arrivals landing inside ``[start, start+duration)`` come at
+    ``rate_multiplier x rate_rps`` (the inter-arrival scale flips based
+    on the CURRENT clock, so the schedule stays a single seeded stream
+    and ``burst=None`` reproduces the historical one bit-exactly)."""
     from repro.serving.engine import ServeRequest
 
     rng = np.random.RandomState(seed)
@@ -306,7 +461,10 @@ def generate_requests(n: int, *, rate_rps: float = 60.0,
     clock = 0.0
     out: List[ServeRequest] = []
     for rid in range(n):
-        clock += float(rng.exponential(1.0 / rate_rps))
+        rate = rate_rps
+        if burst is not None and burst[0] <= clock < burst[0] + burst[1]:
+            rate = rate_rps * burst[2]
+        clock += float(rng.exponential(1.0 / rate))
         p = int(rng.randint(prompt_rng[0], prompt_rng[1] + 1))
         if rng.rand() < long_frac:
             g = int(rng.randint(gen_long[0], gen_long[1] + 1))

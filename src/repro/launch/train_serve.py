@@ -49,7 +49,9 @@ def build_training(cfg, *, T: float = 0.5, seed: int = 0,
                    n_data: int = 512, seq_len: int = 16,
                    lr: float = 0.1, frac: float = 0.1,
                    churny: bool = True, publish_every: int = 0,
-                   publish_fn=None):
+                   publish_fn=None, guardrails=None,
+                   fault_profiles: Optional[Dict[str, Any]] = None,
+                   optimizer=None):
     """An elastic training stack over ``cfg``'s LM: fused top-k
     compressed reduce, deadline partial participation, and (when
     ``churny``) a heterogeneous fleet with a probabilistic straggler —
@@ -67,7 +69,11 @@ def build_training(cfg, *, T: float = 0.5, seed: int = 0,
     (X, y), grad_fn = make_lm_problem(cfg, n_data=n_data, seq_len=seq_len,
                                       seed=seed)
     params = tf.init_params(jax.random.PRNGKey(seed), cfg)
-    red = MasterReducer(params, adagrad(lr=lr),
+    # adagrad's per-coordinate normalization makes the step nearly
+    # scale-invariant — robust by default, but chaos harnesses that
+    # need a garbage gradient to ACTUALLY diverge the params override
+    # with plain sgd (tests/test_guardrails.py, bench_chaos.py)
+    red = MasterReducer(params, optimizer or adagrad(lr=lr),
                         compressor=GradientCompressor("topk", frac=frac),
                         fused=True)
     cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
@@ -77,7 +83,8 @@ def build_training(cfg, *, T: float = 0.5, seed: int = 0,
         scheduler=AdaptiveScheduler(T=T, prior_power=300.0,
                                     min_budget=0.05),
         deadline_quantile=0.5 if churny else None, deadline_slack=1.5,
-        publish_every=publish_every, publish_fn=publish_fn)
+        publish_every=publish_every, publish_fn=publish_fn,
+        guardrails=guardrails)
     loop.submit(UploadDataEvent(range(n_data)))
     profiles = [DeviceProfile("ws0", 300.0, 0.010, 0.20),
                 DeviceProfile("ws1", 300.0, 0.012, 0.20),
@@ -88,6 +95,8 @@ def build_training(cfg, *, T: float = 0.5, seed: int = 0,
     for i, prof in enumerate(profiles):
         cluster.add_worker(f"w{i}", prof)
         loop.submit(JoinEvent(f"w{i}", capacity=n_data))
+    for w, fp in (fault_profiles or {}).items():
+        cluster.set_faults(w, fp)
     return loop, cluster, params
 
 
@@ -101,24 +110,48 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
                     cost=None, lr: float = 0.1,
                     engine_params: Optional[PyTree] = None,
                     start_version: int = 0,
-                    resume_state=None) -> Dict[str, Any]:
+                    resume_state=None,
+                    guardrails=None, canary=None,
+                    fault_profiles: Optional[Dict[str, Any]] = None,
+                    publish_filter=None, optimizer=None,
+                    max_queue: Optional[int] = None,
+                    shed_policy: str = "reject",
+                    admission_deadline: Optional[float] = None
+                    ) -> Dict[str, Any]:
     """Drive ``iterations`` of elastic training and the serving engine on
     ONE discrete-event clock, hot-swapping published params in-flight.
 
+    Robustness wiring (docs/robustness.md): ``guardrails`` arms the
+    training watchdog, ``fault_profiles`` ({worker: FaultProfile})
+    injects seeded faults into the cluster, ``canary`` screens every
+    publish — a refused candidate is recorded in ``refused`` and never
+    reaches the engine — and ``max_queue``/``shed_policy``/
+    ``admission_deadline`` bound the serving queue. ``publish_filter``
+    (params, version) -> params lets chaos harnesses corrupt candidates
+    BETWEEN the training loop and the canary, which is exactly the fault
+    the canary exists to catch.
+
     Returns a dict with the training ``logs``, serving ``stats``, the
-    ``engine``/``loop`` objects, ``published`` [(clock, version), ...]
-    and ``versions`` {version: params} — every tree the engine served
-    under, kept so callers can replay any completion solo under its
-    pinned version (the corruption oracle in tests/ and the bench)."""
+    ``engine``/``loop`` objects, ``published`` [(clock, version), ...],
+    ``refused`` [(clock, version), ...] and ``versions``
+    {version: params} — every tree the engine served under, kept so
+    callers can replay any completion solo under its pinned version
+    (the corruption oracle in tests/ and the bench)."""
     from repro.core.simulation import ServeCostModel
     from repro.serving import ServingEngine, SimulatedServeSession
 
     cost = cost or ServeCostModel()
     versions: Dict[int, PyTree] = {}
     published: List[Tuple[float, int]] = []
+    refused: List[Tuple[float, int]] = []
     session_box: List[SimulatedServeSession] = []
 
     def publish(params, version, clock):
+        if publish_filter is not None:
+            params = publish_filter(params, version)
+        if canary is not None and not canary.check(params, version):
+            refused.append((clock, version))
+            return
         session_box[0].push_swap(clock, params, version)
         versions[version] = params
         published.append((clock, version))
@@ -126,7 +159,9 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
     loop, cluster, _ = build_training(
         cfg, T=T, seed=seed, churny=churny, lr=lr,
         publish_every=publish_every,
-        publish_fn=publish if publish_every > 0 else None)
+        publish_fn=publish if publish_every > 0 else None,
+        guardrails=guardrails, fault_profiles=fault_profiles,
+        optimizer=optimizer)
     if resume_state is not None:
         resume_state.restore(loop, cluster)
     if engine_params is None:
@@ -139,7 +174,9 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
                            max_seq=max_seq, prompt_cap=prompt_cap,
                            temperature=temperature, top_k=top_k,
                            sample_seed=seed,
-                           start_version=start_version)
+                           start_version=start_version,
+                           max_queue=max_queue, shed_policy=shed_policy,
+                           admission_deadline=admission_deadline)
     versions[int(start_version)] = engine_params
     session = SimulatedServeSession(engine, cost, requests)
     session_box.append(session)
@@ -153,7 +190,9 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
     session.drain()
     return {"logs": list(loop.history), "stats": session.stats(),
             "engine": engine, "loop": loop, "cluster": cluster,
-            "published": published, "versions": versions}
+            "published": published, "versions": versions,
+            "refused": refused, "canary": canary,
+            "guardrails": guardrails}
 
 
 def _scripted_churn(loop, cluster, step: int, iterations: int) -> None:
@@ -212,6 +251,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stable", action="store_true",
                     help="homogeneous fleet, no churn")
+    ap.add_argument("--guardrails", action="store_true",
+                    help="arm the NaN/divergence watchdog and the "
+                         "canary-gated publish (docs/robustness.md)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue; overflow sheds")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=("reject", "drop_oldest"))
+    ap.add_argument("--admission-deadline", type=float, default=None,
+                    help="shed queued requests waiting longer than this")
     ap.add_argument("--snapshot-out", default=None,
                     help="save the final TrainState here")
     ap.add_argument("--from-snapshot", default=None,
@@ -249,6 +297,16 @@ def main(argv=None):
         print(f"seeded engine from {args.from_snapshot} "
               f"(training step {start_version})")
 
+    guardrails = canary = None
+    if args.guardrails:
+        from repro.core.guardrails import (CanaryGate, TrainingGuardrails,
+                                           make_lm_probe)
+        from repro.core.simulation import make_lm_problem
+        guardrails = TrainingGuardrails()
+        (Xp, yp), _ = make_lm_problem(cfg, n_data=32, seq_len=16,
+                                      seed=args.seed + 7)
+        canary = CanaryGate(make_lm_probe(cfg, Xp[:8], yp[:8]))
+
     out = run_train_serve(
         cfg, reqs, iterations=args.iterations,
         publish_every=args.publish_every, T=args.T, seed=args.seed,
@@ -256,7 +314,9 @@ def main(argv=None):
         prompt_cap=args.prompt_cap, temperature=args.temperature,
         top_k=args.top_k, churny=not args.stable,
         engine_params=engine_params, start_version=start_version,
-        resume_state=resume_state)
+        resume_state=resume_state, guardrails=guardrails, canary=canary,
+        max_queue=args.max_queue, shed_policy=args.shed_policy,
+        admission_deadline=args.admission_deadline)
 
     logs, stats, engine = out["logs"], out["stats"], out["engine"]
     losses = [lg.loss for lg in logs if lg.loss == lg.loss]
@@ -271,6 +331,16 @@ def main(argv=None):
           f"prefill chunks, {stats.decode_dispatches} decode dispatches, "
           f"{stats.swap_count} swaps, {stats.trace_count} traces over "
           f"buckets {engine.buckets_seen}")
+    if guardrails is not None:
+        print(f"guardrails: {guardrails.n_quarantined} quarantined, "
+              f"{guardrails.n_rollbacks} rollbacks, "
+              f"evicted {guardrails.evicted or 'none'}; canary "
+              f"{canary.n_passed} passed / {canary.n_refused} refused")
+    if stats.n_shed or engine.max_queue is not None \
+            or args.admission_deadline is not None:
+        print(f"backpressure: {stats.n_shed} shed "
+              f"({[s.reason for s in stats.shed]}), "
+              f"queue peak {stats.queue_peak}")
     print("served version histogram (version == training step):")
     for line in format_version_histogram(stats):
         print(line)

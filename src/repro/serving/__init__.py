@@ -1,5 +1,5 @@
 from repro.serving.engine import (Completion, ServeRequest,  # noqa: F401
-                                  ServeStats, ServingEngine,
+                                  ServeStats, ServingEngine, Shed,
                                   SimulatedServeSession, StepReport,
                                   pow2_bucket)
 from repro.serving.baseline import simulate_static_batches  # noqa: F401

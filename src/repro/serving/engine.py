@@ -32,6 +32,13 @@ in-flight request (each completion is bit-equal to a solo replay under
 its pinned version; fuzzed in tests/test_train_serve.py). Versions
 retire from the ring as their last pinned slot completes.
 
+**Backpressure** (docs/robustness.md): ``max_queue`` bounds the
+admission queue; overload sheds explicitly under ``shed_policy`` —
+``"reject"`` refuses the newcomer, ``"drop_oldest"`` displaces the
+stalest wait — and per-request admission deadlines shed queued requests
+whose client has already given up. Every shed is recorded in
+``shed_log`` (reason + clock); an admitted request always finishes.
+
 **Sampling**: greedy by default (``temperature=0``), or temperature /
 top-k sampling with a per-request PRNG key folded per generated token —
 the key depends only on (engine seed, request id, token index), so a
@@ -87,6 +94,19 @@ class ServeRequest:
     max_new: int                    # tokens to generate
     arrival: float = 0.0            # open-loop arrival time (s)
     client_latency: float = 0.0     # one-way client network latency (s)
+    deadline: Optional[float] = None  # max queue wait (s) before this
+                                      # request sheds; None defers to the
+                                      # engine's admission_deadline
+
+
+@dataclass(frozen=True)
+class Shed:
+    """One load-shedding decision — the explicit record that a request
+    was REFUSED rather than served (docs/robustness.md: sheds are part
+    of the engine's output contract, never silently lost)."""
+    rid: int
+    reason: str                     # "queue_full" | "displaced" | "deadline"
+    t: float = 0.0                  # clock at the shedding decision
 
 
 @dataclass
@@ -108,6 +128,7 @@ class StepReport:
     decode_dispatches: int                      # one per live version
     decode_batch: int                           # max_batch, or 0 if idle
     completed: List[Completion] = field(default_factory=list)
+    shed: List[Shed] = field(default_factory=list)  # deadline sheds this step
 
 
 @dataclass
@@ -129,6 +150,9 @@ class ServeStats:
     decode_dispatches: int = 0
     swap_count: int = 0             # param swaps applied during the run
     versions_served: Dict[int, int] = field(default_factory=dict)
+    n_shed: int = 0                 # requests shed (never silently lost)
+    queue_peak: int = 0             # deepest the admission queue got
+    shed: List[Shed] = field(default_factory=list)
 
 
 @dataclass
@@ -148,7 +172,10 @@ class ServingEngine:
                  prompt_bucket_min: int = 8, unroll: bool = False,
                  prompt_cap: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0, start_version: int = 0):
+                 sample_seed: int = 0, start_version: int = 0,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 admission_deadline: Optional[float] = None):
         if cfg.arch_type not in ("dense", "moe"):
             raise ValueError(
                 f"ServingEngine supports attention-cached LM archs "
@@ -206,6 +233,20 @@ class ServingEngine:
         self._tok = np.zeros(self.max_batch, np.int32)
         self._live = np.zeros(self.max_batch, bool)
         self._queue: Deque[ServeRequest] = deque()
+        # backpressure (docs/robustness.md): bound the admission queue
+        # and shed the overflow EXPLICITLY — a shed is an answer ("try
+        # later"), a silently growing queue is a lie about capacity
+        if shed_policy not in ("reject", "drop_oldest"):
+            raise ValueError(f"shed_policy={shed_policy!r}: expected "
+                             f"'reject' or 'drop_oldest'")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} must be >= 1")
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.admission_deadline = admission_deadline
+        self.shed_log: List[Shed] = []
+        self.queue_peak = 0
+        self._rids_active: set = set()  # queued or in-flight rids
         self._chunk_fns: Dict[Tuple[int, int], Any] = {}
         self._decode_fn = None
         self._trace_count = 0
@@ -248,7 +289,13 @@ class ServingEngine:
         return sorted(self._versions)
 
     # ------------------------------------------------------------------
-    def submit(self, req: ServeRequest) -> None:
+    def submit(self, req: ServeRequest, now: float = 0.0) -> bool:
+        """Enqueue ``req``. Returns True when admitted to the queue,
+        False when shed by backpressure (the shed is recorded in
+        ``shed_log`` — refusals are reported, never silent). A duplicate
+        rid (already queued or in flight) is a protocol error — it would
+        corrupt completion bookkeeping AND the sampling key stream (keys
+        fold in the rid) — and raises ``ValueError``."""
         p = int(np.asarray(req.prompt).size)
         if p < 1 or req.max_new < 1:
             raise ValueError(f"request {req.rid}: empty prompt or max_new")
@@ -256,7 +303,21 @@ class ServingEngine:
             raise ValueError(
                 f"request {req.rid}: prompt({p}) + max_new({req.max_new}) "
                 f"exceeds max_seq={self.max_seq}")
+        if req.rid in self._rids_active:
+            raise ValueError(
+                f"request {req.rid}: duplicate rid already queued or in "
+                f"flight")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            if self.shed_policy == "reject":
+                self.shed_log.append(Shed(req.rid, "queue_full", float(now)))
+                return False
+            victim = self._queue.popleft()       # drop_oldest: the victim
+            self._rids_active.discard(victim.rid)  # is the stalest wait
+            self.shed_log.append(Shed(victim.rid, "displaced", float(now)))
         self._queue.append(req)
+        self._rids_active.add(req.rid)
+        self.queue_peak = max(self.queue_peak, len(self._queue))
+        return True
 
     # ------------------------------------------------------------------
     def swap_params(self, params: PyTree, version: Optional[int] = None
@@ -373,6 +434,7 @@ class ServingEngine:
         self._live[s] = False
         self._pos[s] = 0
         self._tok[s] = 0
+        self._rids_active.discard(st.req.rid)
         self._gc_versions()
         return Completion(rid=st.req.rid, prompt_len=len(st.req.prompt),
                           tokens=np.asarray(st.gen, np.int32),
@@ -430,13 +492,34 @@ class ServingEngine:
                         completed.append(self._finish(s))
         return shapes
 
-    def step(self) -> StepReport:
+    def step(self, now: Optional[float] = None) -> StepReport:
         """One engine iteration: admit waiting requests into free slots,
         run one prefill chunk for every slot with prompt pending
         (bucketed, grouped by pinned version), then one decode dispatch
         per live version across all slots. Returns what ran, for the
-        cost model to charge."""
+        cost model to charge.
+
+        When the caller supplies ``now``, queued requests whose wait has
+        exceeded their admission deadline (``req.deadline``, else the
+        engine's ``admission_deadline``) are shed BEFORE admission — a
+        stale request must not occupy a slot for a client that has
+        already given up. In-flight requests never shed: an admitted
+        request always finishes."""
         completed: List[Completion] = []
+        shed: List[Shed] = []
+        if now is not None and self._queue:
+            kept: Deque[ServeRequest] = deque()
+            for req in self._queue:
+                dl = req.deadline if req.deadline is not None \
+                    else self.admission_deadline
+                if dl is not None and now - req.arrival > dl:
+                    self._rids_active.discard(req.rid)
+                    s = Shed(req.rid, "deadline", float(now))
+                    self.shed_log.append(s)
+                    shed.append(s)
+                else:
+                    kept.append(req)
+            self._queue = kept
         free = [s for s in range(self.max_batch) if self._slots[s] is None]
         admitted = 0
         while self._queue and free:
@@ -486,7 +569,8 @@ class ServingEngine:
 
         self.engine_steps += 1
         return StepReport(admitted, prefill_shapes, dispatches,
-                          self.max_batch if dispatches else 0, completed)
+                          self.max_batch if dispatches else 0, completed,
+                          shed)
 
     # ------------------------------------------------------------------
     @property
@@ -505,6 +589,10 @@ class ServingEngine:
         self.decode_rows_live = 0
         self.decode_rows_total = 0
         self.swap_count = 0
+        self.shed_log = []
+        self.queue_peak = 0
+        self._rids_active = set()   # rids are scoped per run: a replay
+                                    # reuses the same ids legitimately
 
     def _stats(self, completions: List[Completion],
                makespan: float) -> ServeStats:
@@ -526,7 +614,9 @@ class ServingEngine:
             trace_count=self._trace_count, completions=completions,
             prefill_chunks=self.prefill_chunks,
             decode_dispatches=self.decode_dispatches,
-            swap_count=self.swap_count, versions_served=versions)
+            swap_count=self.swap_count, versions_served=versions,
+            n_shed=len(self.shed_log), queue_peak=self.queue_peak,
+            shed=list(self.shed_log))
 
     def run_simulated(self, requests: Sequence[ServeRequest],
                       cost: "Any",
@@ -549,10 +639,10 @@ class ServingEngine:
         """All requests available at t=0; real wall-clock timing."""
         self._begin_run()
         for r in sorted(requests, key=lambda r: r.rid):
-            self.submit(r)
-        t0 = time.perf_counter()
+            self.submit(r)          # may shed under max_queue: the loop
+        t0 = time.perf_counter()    # below drains whatever was admitted
         out: List[Completion] = []
-        while len(out) < len(requests):
+        while self.has_work:
             rep = self.step()
             now = time.perf_counter() - t0
             for c in rep.completed:
@@ -586,7 +676,11 @@ class SimulatedServeSession:
     # ------------------------------------------------------------------
     @property
     def done(self) -> bool:
-        return len(self.completions) == len(self._reqs)
+        """Every request is ANSWERED: completed, or explicitly shed
+        (``engine.shed_log`` is reset at session start, so its length is
+        exactly this session's shed count)."""
+        return len(self.completions) + len(self.engine.shed_log) \
+            == len(self._reqs)
 
     def push_swap(self, t: float, params: PyTree,
                   version: Optional[int] = None) -> None:
@@ -606,7 +700,9 @@ class SimulatedServeSession:
                 self.clock += swap_time()
         while self._i < len(self._reqs) \
                 and self._reqs[self._i].arrival <= self.clock + 1e-12:
-            self.engine.submit(self._reqs[self._i])
+            # a False return means the request shed at admission — the
+            # refusal is already in engine.shed_log, nothing to track
+            self.engine.submit(self._reqs[self._i], now=self.clock)
             self._i += 1
 
     def _next_event(self) -> Optional[float]:
@@ -618,7 +714,7 @@ class SimulatedServeSession:
         return min(times) if times else None
 
     def _step_once(self) -> None:
-        rep = self.engine.step()
+        rep = self.engine.step(now=self.clock)
         dt = 0.0
         for shape in rep.prefill_shapes:
             dt += self.cost.prefill_time(*shape)

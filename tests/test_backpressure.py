@@ -1,0 +1,175 @@
+"""Serving admission control (docs/robustness.md): the bounded queue,
+the two shed policies, per-request admission deadlines, the
+duplicate-rid guard, and the session-level accounting contract — every
+request is ANSWERED (completed or explicitly shed), never silently
+lost, and an admitted request always finishes."""
+import numpy as np
+import pytest
+
+from repro.core.simulation import ServeCostModel, generate_requests
+from repro.launch.train_serve import tiny_cfg
+from repro.models import transformer as tf
+from repro.serving import (ServeRequest, ServingEngine,
+                           SimulatedServeSession)
+
+import jax
+
+CFG = tiny_cfg()
+
+
+def _params(seed=0):
+    return tf.init_params(jax.random.PRNGKey(seed), CFG)
+
+
+def _req(rid, plen=4, max_new=4, seed=None, **kw):
+    rng = np.random.RandomState(rid if seed is None else seed)
+    return ServeRequest(rid=rid, prompt=rng.randint(
+        0, CFG.vocab_size, plen).astype(np.int32), max_new=max_new, **kw)
+
+
+# ---------------------------------------------------------------------------
+# duplicate rid: protocol error, not silent corruption
+# ---------------------------------------------------------------------------
+def test_duplicate_rid_rejected_while_queued():
+    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=32)
+    engine.submit(_req(7))
+    with pytest.raises(ValueError, match="duplicate rid"):
+        engine.submit(_req(7))
+
+
+def test_duplicate_rid_rejected_while_in_flight():
+    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=32)
+    engine.submit(_req(7, max_new=6))
+    engine.step()                              # rid 7 now holds a slot
+    assert engine.n_queued == 0
+    with pytest.raises(ValueError, match="duplicate rid"):
+        engine.submit(_req(7))
+    while engine.has_work:                     # after completion the rid
+        engine.step()                          # is legal again
+    assert engine.submit(_req(7))
+
+
+def test_rid_reusable_across_runs():
+    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=32)
+    engine.run_closed_loop([_req(0)])
+    stats = engine.run_closed_loop([_req(0)])  # replay: same rid is fine
+    assert stats.n_requests == 1
+
+
+# ---------------------------------------------------------------------------
+# bounded queue + shed policies
+# ---------------------------------------------------------------------------
+def test_reject_policy_sheds_newcomer():
+    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
+                           max_queue=2, shed_policy="reject")
+    assert engine.submit(_req(0))
+    assert engine.submit(_req(1))
+    assert not engine.submit(_req(2), now=3.5)
+    assert engine.n_queued == 2 and engine.queue_peak == 2
+    assert [(s.rid, s.reason, s.t) for s in engine.shed_log] == \
+        [(2, "queue_full", 3.5)]
+    # the shed rid was never admitted, so it may retry later
+    engine.step()                              # rid 0 -> slot, queue drains
+    assert engine.submit(_req(2))
+
+
+def test_drop_oldest_policy_displaces_stalest_wait():
+    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
+                           max_queue=2, shed_policy="drop_oldest")
+    for rid in range(3):
+        assert engine.submit(_req(rid), now=float(rid))
+    assert [r.rid for r in engine._queue] == [1, 2]
+    assert [(s.rid, s.reason) for s in engine.shed_log] == \
+        [(0, "displaced")]
+    assert engine.queue_peak == 2
+
+
+def test_shed_policy_validated():
+    with pytest.raises(ValueError, match="shed_policy"):
+        ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
+                      max_queue=1, shed_policy="explode")
+    with pytest.raises(ValueError, match="max_queue"):
+        ServingEngine(_params(), CFG, max_batch=1, max_seq=32, max_queue=0)
+
+
+# ---------------------------------------------------------------------------
+# admission deadlines: stale queued requests shed, in-flight never
+# ---------------------------------------------------------------------------
+def test_queued_request_sheds_past_deadline():
+    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
+                           admission_deadline=1.0)
+    engine.submit(_req(0, max_new=8, arrival=0.0))
+    engine.submit(_req(1, arrival=0.0))
+    engine.step(now=0.5)                       # rid 0 admitted; 1 queued
+    rep = engine.step(now=2.0)                 # rid 1 waited 2.0 > 1.0
+    assert [(s.rid, s.reason) for s in rep.shed] == [(1, "deadline")]
+    assert engine.n_queued == 0
+    while engine.has_work:                     # rid 0 is IN FLIGHT: it
+        rep = engine.step(now=99.0)            # finishes regardless
+    done = [c.rid for c in rep.completed]
+    assert done == [0]
+
+
+def test_per_request_deadline_overrides_engine_default():
+    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
+                           admission_deadline=10.0)
+    engine.submit(_req(0, max_new=8, arrival=0.0))
+    engine.submit(_req(1, arrival=0.0, deadline=0.5))   # impatient client
+    engine.submit(_req(2, arrival=0.0))                 # patient default
+    engine.step(now=0.0)
+    rep = engine.step(now=1.0)
+    assert [(s.rid, s.reason) for s in rep.shed] == [(1, "deadline")]
+    assert [r.rid for r in engine._queue] == [2]
+
+
+def test_step_without_now_never_deadline_sheds():
+    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
+                           admission_deadline=0.001)
+    engine.submit(_req(0))
+    engine.submit(_req(1))
+    while engine.has_work:                     # closed-loop: no clock, no
+        engine.step()                          # deadline pressure
+    assert engine.shed_log == []
+
+
+# ---------------------------------------------------------------------------
+# session accounting: completed + shed == submitted, bit-equal outputs
+# ---------------------------------------------------------------------------
+def test_session_overload_burst_sheds_are_accounted_and_bounded():
+    reqs = generate_requests(
+        40, rate_rps=30.0, vocab_size=CFG.vocab_size, prompt_rng=(4, 20),
+        gen_short=(2, 6), gen_long=(8, 12), long_frac=0.3,
+        burst=(0.2, 0.5, 8.0), seed=9)
+    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=64,
+                           prompt_cap=16, max_queue=3,
+                           shed_policy="reject")
+    session = SimulatedServeSession(engine, ServeCostModel(), reqs)
+    session.drain()
+    stats = session.stats()
+    assert stats.n_shed > 0, "burst never overflowed the queue"
+    assert stats.queue_peak <= 3
+    done = {c.rid for c in stats.completions}
+    shed = {s.rid for s in stats.shed}
+    assert done.isdisjoint(shed)
+    assert done | shed == {r.rid for r in reqs}
+    # survivors are uncorrupted: bit-equal to a solo replay
+    by_rid = {r.rid: r for r in reqs}
+    solo = ServingEngine(_params(), CFG, max_batch=2, max_seq=64,
+                         prompt_cap=16)
+    for c in stats.completions[:5]:
+        ref = solo.run_closed_loop([ServeRequest(
+            rid=c.rid, prompt=by_rid[c.rid].prompt,
+            max_new=by_rid[c.rid].max_new)]).completions[0]
+        assert c.tokens.tolist() == ref.tokens.tolist()
+
+
+def test_session_unbounded_queue_unchanged():
+    """No max_queue, no deadlines: the historical contract holds — every
+    request completes, zero sheds."""
+    reqs = generate_requests(
+        12, rate_rps=50.0, vocab_size=CFG.vocab_size, prompt_rng=(4, 16),
+        gen_short=(2, 5), gen_long=(6, 8), long_frac=0.2, seed=3)
+    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=32)
+    stats = engine.run_simulated(reqs, ServeCostModel())
+    assert stats.n_shed == 0 and len(stats.completions) == len(reqs)
+    assert stats.queue_peak >= 1

@@ -1,7 +1,11 @@
-"""Checkpoint store: npz round-trip + closure sidecar."""
+"""Checkpoint store: npz round-trip + closure sidecar + crash safety
+(atomic replace, torn-write detection — docs/robustness.md)."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import load_closure, load_npz, save_closure, save_npz
 from repro.configs import get_config
@@ -41,3 +45,61 @@ def test_closure_with_sidecar(tmp_path):
     npz, header = load_npz(path + ".npz")
     assert np.array_equal(npz["w"], [7.0] * 3)
     assert header["meta"]["arch"] == "mlitb-cnn"
+
+
+# ---------------------------------------------------------------------------
+# crash safety: atomic writes + torn-write detection
+# ---------------------------------------------------------------------------
+def test_torn_npz_gives_clean_error_not_traceback(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    save_npz(path, {"w": jnp.arange(8.0)})
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:          # a crash mid-write: half a zip
+        f.truncate(size // 2)
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_npz(path)
+
+
+def test_torn_train_state_gives_clean_error(tmp_path):
+    from repro.checkpoint.io import (TrainState, load_train_state,
+                                     save_train_state)
+    from repro.launch.train_serve import build_training, tiny_cfg
+
+    loop, cluster, _ = build_training(tiny_cfg(), T=0.2, seed=0,
+                                      churny=False)
+    loop.iteration()
+    path = str(tmp_path / "ts.npz")
+    save_train_state(path, TrainState.capture(loop, cluster))
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_train_state(path)
+
+
+def test_failed_save_leaves_old_checkpoint_intact(tmp_path, monkeypatch):
+    """The atomic-replace contract: a save that dies mid-write must not
+    touch the existing checkpoint, and must not leave a temp file."""
+    import repro.checkpoint.io as io
+
+    path = str(tmp_path / "ckpt.npz")
+    save_npz(path, {"w": jnp.full((4,), 3.0)})
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+    monkeypatch.setattr(io.np, "savez", boom)
+    with pytest.raises(OSError, match="disk full"):
+        save_npz(path, {"w": jnp.full((4,), 9.0)})
+    monkeypatch.undo()
+    back, _ = load_npz(path)                   # old contents survive
+    assert np.array_equal(back["w"], [3.0] * 4)
+    assert os.listdir(tmp_path) == ["ckpt.npz"], "temp file leaked"
+
+
+def test_save_appends_npz_suffix_like_numpy(tmp_path):
+    """np.savez appends .npz to bare paths; the atomic path must keep
+    that contract so pre-existing callers find their files."""
+    bare = str(tmp_path / "ckpt")
+    save_npz(bare, {"w": jnp.arange(3.0)})
+    assert os.path.exists(bare + ".npz")
+    back, _ = load_npz(bare + ".npz")
+    assert np.array_equal(back["w"], np.arange(3.0))

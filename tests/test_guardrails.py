@@ -1,0 +1,428 @@
+"""Chaos-hardening tests (docs/robustness.md): fault injection in the
+simulated cluster, the three guardrail layers (finite-ness screen +
+quarantine/eviction, divergence watchdog + last-good rollback, the
+canary-gated publish), and their interaction with checkpoint/resume.
+
+The load-bearing invariants:
+
+  - a NaN message NEVER touches the params or its own error-feedback
+    residual (quarantine is full exclusion, not defer);
+  - an all-NaN round performs NO step and leaves the reducer state
+    bit-identical;
+  - rollback restores the reducer bit-exactly to the last snapshot a
+    healthy loss vouched for;
+  - fault-free runs are bit-identical to runs before fault injection
+    existed (profile-less workers draw nothing extra);
+  - a refused publish never reaches the engine, and in-flight requests
+    complete bit-equal to a solo replay regardless.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.guardrails import (CanaryGate, GuardrailConfig,
+                                   TrainingGuardrails, make_lm_probe,
+                                   tree_finite)
+from repro.core.simulation import FaultProfile, generate_requests
+from repro.launch.train_serve import (build_training, run_train_serve,
+                                      tiny_cfg)
+from repro.models import transformer as tf
+from repro.optim import sgd
+from repro.serving import ServeRequest, ServingEngine
+
+CFG = tiny_cfg()
+
+
+def _params(seed=0):
+    return tf.init_params(jax.random.PRNGKey(seed), CFG)
+
+
+def _nan_like(tree):
+    return jax.tree.map(lambda a: np.full_like(np.asarray(a), np.nan),
+                        tree)
+
+
+def _reducer_state_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# layer 1 units: screen / strikes
+# ---------------------------------------------------------------------------
+def test_tree_finite():
+    assert tree_finite({"a": np.ones(3), "b": {"c": np.zeros(2)}})
+    assert not tree_finite({"a": np.array([1.0, np.nan])})
+    assert not tree_finite({"a": np.ones(2), "b": np.array([np.inf])})
+
+
+def test_screen_quarantines_only_offenders():
+    g = TrainingGuardrails()
+    msgs = {"w0": ({"p": np.ones(4)}, 10),
+            "w1": ({"p": np.array([1.0, np.nan, 0.0, 0.0])}, 10),
+            "w2": ({"p": np.full(4, np.inf)}, 5)}
+    clean, offenders = g.screen(msgs)
+    assert offenders == ["w1", "w2"]
+    assert sorted(clean) == ["w0"]
+    assert g.n_quarantined == 2
+    clean2, off2 = g.screen({"w0": ({"p": np.zeros(2)}, 1)})
+    assert off2 == [] and sorted(clean2) == ["w0"]
+    assert g.n_quarantined == 2
+
+
+def test_strikes_cross_threshold_exactly_once():
+    g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=3))
+    assert [g.record_offense("w0") for _ in range(5)] == \
+        [False, False, True, False, False]
+    assert g.evicted == ["w0"]
+
+
+# ---------------------------------------------------------------------------
+# layer 2 units: divergence + rollback arming
+# ---------------------------------------------------------------------------
+def test_divergence_detector_arms_after_min_history():
+    g = TrainingGuardrails(GuardrailConfig(max_loss_ratio=2.0,
+                                           min_history=2))
+    assert g.check_divergence(float("nan"))         # non-finite: always
+    assert g.check_divergence(float("inf"))
+    assert not g.check_divergence(1e9)              # unarmed: any finite ok
+    g.observe_healthy(10.0)
+    assert not g.check_divergence(1e9)              # 1 healthy: still unarmed
+    g.observe_healthy(9.0)
+    assert not g.check_divergence(17.9)             # <= 2 * min(window)
+    assert g.check_divergence(18.1)                 # > 2 * 9.0
+
+
+def test_rollback_without_snapshot_refuses():
+    g = TrainingGuardrails()
+    assert not g.can_rollback
+    assert g.rollback(reducer=None) is False
+    assert g.n_rollbacks == 0
+
+
+# ---------------------------------------------------------------------------
+# integration: quarantine, eviction, the all-NaN round
+# ---------------------------------------------------------------------------
+def test_nan_worker_quarantined_then_evicted():
+    g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=2))
+    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
+                                      guardrails=g)
+    for _ in range(2):
+        loop.iteration()
+    cluster.poison("w0", "nan", iters=2)
+    lg1 = loop.iteration()
+    assert "quarantine:w0" in lg1.events and lg1.n_quarantined == 1
+    assert math.isfinite(lg1.loss), "quarantined loss_sum leaked into loss"
+    lg2 = loop.iteration()
+    assert "evict:w0" in lg2.events
+    loop.iteration()                       # LeaveEvent processed here
+    assert "w0" not in loop.registry.live_workers()
+    assert g.strikes["w0"] == 2 and g.evicted == ["w0"]
+    # and the params never absorbed the poison
+    assert tree_finite(loop.reducer.params)
+    lg = loop.iteration()
+    assert math.isfinite(lg.loss)
+
+
+def test_all_workers_nan_round_no_step_residuals_intact():
+    g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=99))
+    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
+                                      guardrails=g)
+    for _ in range(3):
+        loop.iteration()
+    before = loop.reducer.state_dict()     # params + residuals + step
+    for w in list(cluster.workers):
+        cluster.poison(w, "nan", iters=1)
+    lg = loop.iteration()
+    assert lg.n_quarantined == len(cluster.workers)
+    assert not lg.rolled_back
+    after = loop.reducer.state_dict()
+    assert int(after["step"]) == int(before["step"]), "a step happened"
+    _reducer_state_equal(before, after)
+    # the fleet recovers on the next round
+    lg = loop.iteration()
+    assert math.isfinite(lg.loss) and lg.n_quarantined == 0
+
+
+# ---------------------------------------------------------------------------
+# integration: garbage step -> divergence -> bit-exact rollback
+# ---------------------------------------------------------------------------
+def test_garbage_step_rolls_back_to_last_good_bit_exactly():
+    g = TrainingGuardrails()
+    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
+                                      guardrails=g,
+                                      optimizer=sgd(lr=0.05))
+    for _ in range(4):
+        lg = loop.iteration()
+        assert not lg.rolled_back
+    cluster.poison("w1", "garbage", iters=1)
+    loop.iteration()                       # garbage passes the screen...
+    snap = {k: v for k, v in g.state_dict()["last_good"].items()}
+    lg = loop.iteration()                  # ...and the next loss betrays it
+    assert lg.rolled_back and "rollback" in lg.events
+    assert g.n_rollbacks == 1
+    after = loop.reducer.state_dict()
+    assert int(after["step"]) == int(snap["step"])
+    _reducer_state_equal(snap, after)
+    # training continues at sane loss from the restored state
+    lg = loop.iteration()
+    assert not lg.rolled_back and lg.loss < 1000.0
+
+
+def test_probabilistic_nan_fault_profile_quarantines():
+    g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=99))
+    loop, cluster, _ = build_training(
+        CFG, T=0.3, seed=0, churny=False, guardrails=g,
+        fault_profiles={"w1": FaultProfile(nan_p=1.0)})
+    for _ in range(3):
+        lg = loop.iteration()
+        assert "quarantine:w1" in lg.events
+        assert math.isfinite(lg.loss)
+    assert g.n_quarantined == 3 and tree_finite(loop.reducer.params)
+
+
+# ---------------------------------------------------------------------------
+# fault injection mechanics
+# ---------------------------------------------------------------------------
+def test_fault_free_run_bit_identical_with_zero_profile():
+    """A FaultProfile with all probabilities at zero must draw NOTHING
+    from the worker's RNG stream — the run is bit-identical to one with
+    no profile at all (protects every pre-existing seeded test)."""
+    runs = []
+    for profiled in (False, True):
+        loop, cluster, _ = build_training(CFG, T=0.3, seed=3, churny=True)
+        if profiled:
+            cluster.set_faults("w0", FaultProfile())
+        runs.append([loop.iteration().loss for _ in range(5)])
+    assert runs[0] == runs[1]
+
+
+def test_flaky_uplink_drops_reply_but_worker_survives():
+    loop, cluster, _ = build_training(
+        CFG, T=0.3, seed=0, churny=False,
+        fault_profiles={"w2": FaultProfile(drop_p=1.0, max_retries=2,
+                                           retry_backoff=0.25)})
+    for _ in range(3):
+        lg = loop.iteration()
+        # a lost REPLY is not a lost WORKER: no LeaveEvent, the fleet
+        # keeps its member, only the round's contribution is missing
+        assert not any(e.startswith("lost:") for e in lg.events)
+        assert math.isfinite(lg.loss)
+    assert "w2" in loop.registry.live_workers()
+    idx = sorted(loop.allocator.workers["w2"].allocated)
+    res = cluster.compute("w2", loop.reducer.params,
+                          loop.scheduler.budget("w2"), idx)
+    assert res is not None and res.n_vectors == 0
+    assert len(jax.tree.leaves(res.grad_sum)) == 0
+
+
+def test_scripted_drop_charges_backoff_to_latency():
+    """Twin runs, identical RNG streams (scripted faults draw nothing):
+    the dropped round's mean latency carries exactly the retry backoff
+    (0.25 + 0.5 over 3 workers) and the lost vectors leave the round."""
+    def run(drop):
+        loop, cluster, _ = build_training(CFG, T=0.3, seed=0,
+                                          churny=False)
+        loop.iteration()
+        if drop:
+            cluster.poison("w0", "drop", iters=1)
+        return loop.iteration()
+    clean, dropped = run(False), run(True)
+    assert dropped.vectors < clean.vectors
+    np.testing.assert_allclose(
+        dropped.mean_latency - clean.mean_latency, 0.75 / 3, rtol=1e-9)
+
+
+def test_stale_reply_resends_last_clean_message():
+    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False)
+    loop.iteration()                       # seeds w0's stale cache
+    cached_grad, cached_n, cached_loss = cluster._last_reply["w0"]
+    cluster.poison("w0", "stale", iters=1)
+    idx = sorted(loop.allocator.workers["w0"].allocated)
+    res = cluster.compute("w0", loop.reducer.params,
+                          loop.scheduler.budget("w0"), idx)
+    assert res.n_vectors == cached_n and res.loss_sum == cached_loss
+    for a, b in zip(jax.tree.leaves(res.grad_sum),
+                    jax.tree.leaves(cached_grad)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_poison_validates_kind():
+    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False)
+    with pytest.raises(ValueError, match="kind"):
+        cluster.poison("w0", "meteor")
+
+
+def test_generate_requests_burst_overlays_rate():
+    base = generate_requests(60, rate_rps=10.0, vocab_size=64, seed=5)
+    burst = generate_requests(60, rate_rps=10.0, vocab_size=64, seed=5,
+                              burst=(1.0, 1.0, 10.0))
+    assert [r.arrival for r in base] == sorted(r.arrival for r in base)
+    in_win = lambda rs: sum(1.0 <= r.arrival < 2.0 for r in rs)  # noqa: E731
+    assert in_win(burst) > 2 * max(in_win(base), 1)
+    none = generate_requests(60, rate_rps=10.0, vocab_size=64, seed=5,
+                             burst=None)
+    assert [r.arrival for r in none] == [r.arrival for r in base]
+
+
+# ---------------------------------------------------------------------------
+# layer 3: the canary gate
+# ---------------------------------------------------------------------------
+def _probe():
+    (X, y) = (np.zeros((4, 8), np.int32), np.zeros((4, 8), np.int32))
+    rng = np.random.RandomState(0)
+    X[:] = rng.randint(0, CFG.vocab_size, X.shape)
+    y[:] = rng.randint(0, CFG.vocab_size, y.shape)
+    return make_lm_probe(CFG, X, y)
+
+
+def test_canary_refuses_nonfinite_and_diverged():
+    gate = CanaryGate(_probe(), max_loss_ratio=4.0)
+    assert gate.check(_params(0), version=1)
+    assert not gate.check(_nan_like(_params(0)), version=2)
+    # a finite tree whose probe loss explodes past ratio * best
+    huge = jax.tree.map(lambda a: np.asarray(a) * 1e3, _params(0))
+    assert not gate.check(huge, version=3)
+    assert gate.n_passed == 1 and gate.n_refused == 2
+    assert [v for v, _ in gate.refusals] == [2, 3]
+    reasons = [r for _, r in gate.refusals]
+    assert reasons[0] == "non-finite params"
+    assert reasons[1] == "diverged probe loss"
+
+
+def test_refused_publish_never_reaches_engine_mid_chunked_prefill():
+    """A NaN candidate arrives while a long prompt is mid-chunk under a
+    pinned version: the canary refuses it, the engine never sees it, and
+    the completion is bit-equal to a solo replay."""
+    gate = CanaryGate(_probe())
+    p0 = _params(0)
+    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=64, prompt_cap=8)
+    rng = np.random.RandomState(7)
+    req = ServeRequest(rid=0, prompt=rng.randint(
+        0, CFG.vocab_size, 30).astype(np.int32), max_new=5)
+    engine.submit(req)
+    engine.step()                              # chunk 1 of 4 @v0
+    bad = _nan_like(p0)
+    if gate.check(bad, version=1):             # the publish path's guard
+        engine.swap_params(bad, 1)
+    assert engine.version == 0 and gate.n_refused == 1
+    good = _params(1)
+    if gate.check(good, version=2):
+        engine.swap_params(good, 2)
+    assert engine.version == 2                 # good swaps still flow
+    done = []
+    while engine.has_work:
+        done += engine.step().completed
+    assert done[0].version == 0
+    solo = ServingEngine(p0, CFG, max_batch=2, max_seq=64, prompt_cap=8)
+    ref = solo.run_closed_loop([req]).completions[0]
+    assert done[0].tokens.tolist() == ref.tokens.tolist()
+
+
+def test_rollback_then_publish_ships_rolled_back_params():
+    """The satellite edge case: the canary refuses the poisoned step's
+    publish, and the publish right after the rollback ships the
+    RESTORED (healthy) params, which the canary accepts."""
+    g = TrainingGuardrails()
+    gate = CanaryGate(_probe(), max_loss_ratio=50.0)
+    published = []
+
+    def publish(params, version, clock):
+        if gate.check(params, version):
+            published.append((version, params))
+
+    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
+                                      guardrails=g, optimizer=sgd(lr=0.05),
+                                      publish_every=1, publish_fn=publish)
+    for _ in range(3):
+        loop.iteration()
+    cluster.poison("w1", "garbage", iters=1)
+    loop.iteration()                           # poisoned step: its publish
+    assert gate.n_refused == 1                 # is caught by the canary
+    lg = loop.iteration()                      # detect + rollback + publish
+    assert lg.rolled_back
+    assert published[-1][0] == lg.step         # the rollback round SHIPPED
+    assert tree_finite(published[-1][1])
+    for a, b in zip(jax.tree.leaves(published[-1][1]),
+                    jax.tree.leaves(loop.reducer.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# guardrails ride the TrainState resume contract
+# ---------------------------------------------------------------------------
+def test_guardrail_state_survives_train_state_roundtrip(tmp_path):
+    from repro.checkpoint.io import (TrainState, load_train_state,
+                                     save_train_state)
+
+    def fresh():
+        g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=99))
+        loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
+                                          guardrails=g)
+        return g, loop, cluster
+
+    g, loop, cluster = fresh()
+    for _ in range(2):
+        loop.iteration()
+    cluster.poison("w0", "nan", iters=1)
+    loop.iteration()
+    assert g.n_quarantined == 1
+    path = str(tmp_path / "ts.npz")
+    save_train_state(path, TrainState.capture(loop, cluster))
+    tail_a = [loop.iteration().loss for _ in range(3)]
+
+    g2, loop2, cluster2 = fresh()
+    load_train_state(path).restore(loop2, cluster2)
+    assert g2.n_quarantined == 1 and g2.strikes == {"w0": 1}
+    assert g2.can_rollback
+    tail_b = [loop2.iteration().loss for _ in range(3)]
+    assert tail_a == tail_b, "resume broke the bit-exact contract"
+
+
+def test_end_to_end_chaos_run_train_serve():
+    """Faulty fleet + canary + backpressure through the full driver:
+    completions all replay bit-equal, sheds are reported, refused
+    publishes never show up in the served version set."""
+    g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=99))
+    gate = CanaryGate(_probe())
+    reqs = generate_requests(
+        18, rate_rps=8.0, vocab_size=CFG.vocab_size, prompt_rng=(4, 30),
+        gen_short=(2, 6), gen_long=(8, 12), long_frac=0.3, seed=4)
+
+    def corrupt(params, version):
+        # poison every third candidate between loop and canary
+        if version % 3 == 0:
+            return _nan_like(params)
+        return params
+
+    out = run_train_serve(
+        CFG, reqs, iterations=8, publish_every=1, T=0.4, seed=0,
+        max_batch=4, max_seq=64, prompt_cap=16, churny=False,
+        guardrails=g, canary=gate, publish_filter=corrupt,
+        fault_profiles={"w1": FaultProfile(nan_p=0.5)},
+        max_queue=4, shed_policy="reject")
+    stats = out["stats"]
+    assert gate.n_refused >= 1 and out["refused"]
+    refused_v = {v for _, v in out["refused"]}
+    assert refused_v.isdisjoint(stats.versions_served)
+    done = {c.rid for c in stats.completions}
+    shed = {s.rid for s in stats.shed}
+    assert done.isdisjoint(shed)
+    assert done | shed == {r.rid for r in reqs}, "a request went missing"
+    assert stats.queue_peak <= 4
+    by_rid = {r.rid: r for r in reqs}
+    replayers = {}
+    for c in stats.completions:
+        if c.version not in replayers:
+            replayers[c.version] = ServingEngine(
+                out["versions"][c.version], CFG, max_batch=4, max_seq=64,
+                prompt_cap=16)
+        solo = replayers[c.version].run_closed_loop(
+            [ServeRequest(rid=c.rid, prompt=by_rid[c.rid].prompt,
+                          max_new=by_rid[c.rid].max_new)]).completions[0]
+        assert c.tokens.tolist() == solo.tokens.tolist()
