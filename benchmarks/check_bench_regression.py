@@ -54,6 +54,13 @@ HEADLINES = {
         ("time_to_target_ratio", "lower", None),
         ("chaos.queue_peak", "lower", None),
     ],
+    "reprolint": [
+        # static-analysis debt (tools/reprolint baseline size): growth
+        # past tolerance is a regression; shrinkage is burn-down progress
+        # and gets its own note in compare()
+        ("baseline_entries", "lower", None),
+        ("new_findings", "lower", None),
+    ],
 }
 
 
@@ -99,6 +106,11 @@ def compare(name, current, baseline, default_tol):
             failures.append("REGRESSION " + line)
         else:
             notes.append("ok " + line)
+        if name == "reprolint" and dotted == "baseline_entries" and cur < base:
+            notes.append(
+                f"reprolint baseline shrank {base:.0f} -> {cur:.0f} "
+                "finding(s) — static-analysis burn-down progress"
+            )
     return failures, notes
 
 

@@ -75,9 +75,14 @@ class FlatSpec:
 _CACHE: Dict[Any, FlatSpec] = {}
 
 
-def flat_spec(tree: PyTree) -> FlatSpec:
+def flat_spec(tree: PyTree) -> FlatSpec:  # reprolint: exempt[RL001]
     """FlatSpec for ``tree``'s layout, cached on (treedef, shapes,
-    dtypes) so repeated calls on every iteration are dict lookups."""
+    dtypes) so repeated calls on every iteration are dict lookups.
+
+    Exact-shape keying is deliberate (RL001 exempt): the spec's identity
+    feeds the jitted flat-compress cache, so bucketing here would merge
+    distinct layouts; distinct layouts are bounded by model configs, not
+    by data."""
     leaves, treedef = jax.tree.flatten(tree)
     shapes = tuple(tuple(x.shape) for x in leaves)
     dtypes = tuple(np.dtype(x.dtype) for x in leaves)

@@ -108,6 +108,10 @@ class MasterReducer:
             self.opt_state = optimizer.init(self._flat)
             self._unflatten = jax.jit(self._spec.unflatten)
             self._params_cache: Optional[PyTree] = None
+            # jit trace cache, rebuilt lazily after a resume — never
+            # checkpointed (trace_count restarting at 0 is asserted by
+            # the churn/resume tests)
+            # reprolint: exempt[RL005]
             self._step_fns: Dict[Tuple[int, Optional[int]], Any] = {}
             self._w_cap = 0              # monotone worker-axis capacity
             self._zero_tree: Optional[PyTree] = None

@@ -162,7 +162,7 @@ class SimulatedCluster:
         # lets the first post-resume stale draw fall through.
         self._faults: Dict[str, FaultProfile] = {}
         self._poison: Dict[str, List[Any]] = {}
-        self._last_reply: Dict[str, Tuple[PyTree, int, float]] = {}
+        self._last_reply: Dict[str, Tuple[PyTree, int, float]] = {}  # reprolint: exempt[RL005]
 
     # ------------------------------------------------------------------
     def add_worker(self, worker: str, profile: DeviceProfile) -> None:

@@ -172,7 +172,7 @@ def _combine(c1, c2, scale2, extra=None, extra_scale=0.0):
     ops = set(c1["coll"]) | set(c2["coll"]) | set(
         (extra or {}).get("coll", {}) if extra else {})
     coll = {}
-    for op in ops:
+    for op in sorted(ops):
         coll[op] = comb(c1["coll"].get(op, 0), c2["coll"].get(op, 0),
                         (extra or {"coll": {}})["coll"].get(op, 0)
                         if extra else 0.0)
@@ -214,7 +214,8 @@ def probe_costs(cfg, shape, mesh, optimizer_name, remat,
                  "hbm_bytes": sc[2]["hbm_bytes"] - sc[1]["hbm_bytes"],
                  "coll": {op: sc[2]["coll"].get(op, 0)
                           - sc[1]["coll"].get(op, 0)
-                          for op in set(sc[1]["coll"]) | set(sc[2]["coll"])}}
+                          for op in sorted(set(sc[1]["coll"])
+                                           | set(sc[2]["coll"]))}}
         extra_scale = cfg.n_layers % cfg.hybrid_attn_period
     return _combine(c[1], c[2], U - 1, extra, extra_scale)
 

@@ -634,9 +634,10 @@ class ServingEngine:
         session.drain()
         return session.stats()
 
-    def run_closed_loop(self,
+    def run_closed_loop(self,  # reprolint: exempt[RL002]
                         requests: Sequence[ServeRequest]) -> ServeStats:
-        """All requests available at t=0; real wall-clock timing."""
+        """All requests available at t=0; real wall-clock timing (the one
+        deliberately non-simulated entry point, hence the RL002 exempt)."""
         self._begin_run()
         for r in sorted(requests, key=lambda r: r.rid):
             self.submit(r)          # may shed under max_queue: the loop

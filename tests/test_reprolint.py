@@ -1,0 +1,556 @@
+"""reprolint fixture tests: per rule family, a true positive is flagged,
+an engineered near-miss stays silent, and pragmas suppress. Plus the
+self-check: the committed baseline keeps the real tree green, and the
+known past-bug shapes (PR 3's raw-set allocator iteration, PR 1's frozen
+PRNG key) seeded into a scratch file are caught.
+
+These run the linter in-process on source snippets — no jax import is
+needed (the linter only parses), so the whole file is tier-1 fast.
+"""
+
+import ast
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from tools.reprolint import core as rl_core  # noqa: E402
+from tools.reprolint import rules as rl_rules  # noqa: E402
+
+
+def lint(source, path="src/repro/core/mod.py"):
+    """Lint a snippet (pragma-filtered), returning findings."""
+    tree = ast.parse(source)
+    by_line, scoped = rl_core.collect_pragmas(source, tree)
+    raw = rl_rules.check_module(tree, source, path)
+    return [f for f in raw if not rl_core.is_exempt(f, by_line, scoped)]
+
+
+def codes(source, path="src/repro/core/mod.py"):
+    return [f.rule for f in lint(source, path)]
+
+
+JAX = "import jax\nimport jax.numpy as jnp\n"
+
+
+# ---------------------------------------------------------------------------
+# RL001 retrace hazards
+
+
+def test_rl001_dynamic_arg_to_jitted_fn_flagged():
+    src = JAX + (
+        "@jax.jit\n"
+        "def step(x, n):\n"
+        "    return x * n\n"
+        "def run(xs):\n"
+        "    return step(xs, len(xs))\n"
+    )
+    assert codes(src) == ["RL001"]
+
+
+def test_rl001_bucketed_arg_is_silent():
+    # the engine's idiom: route len() through a pow2/bucket helper
+    src = JAX + (
+        "from repro.serving.engine import pow2_bucket\n"
+        "@jax.jit\n"
+        "def step(x, n):\n"
+        "    return x * n\n"
+        "def run(xs):\n"
+        "    return step(xs, pow2_bucket(len(xs), 1, 64))\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl001_dynamic_cache_key_flagged_and_bucketed_silent():
+    bad = JAX + (
+        "def get_fn(fns, x):\n"
+        "    fns[(x.shape[0],)] = jax.jit(lambda a: a)\n"
+    )
+    assert codes(bad) == ["RL001"]
+    good = JAX + (
+        "def get_fn(fns, x, pow2_bucket):\n"
+        "    fns[(pow2_bucket(x.shape[0], 1, 64),)] = jax.jit(lambda a: a)\n"
+    )
+    assert codes(good) == []
+
+
+def test_rl001_fstring_cache_key_flagged():
+    src = JAX + (
+        "def get_fn(cache, x):\n"
+        "    cache[f'fn-{x.shape}'] = jax.jit(lambda a: a)\n"
+    )
+    assert codes(src) == ["RL001"]
+
+
+def test_rl001_array_index_assignment_not_a_cache_key():
+    # tuple subscript with a slice is numpy indexing, not a dict key
+    src = JAX + (
+        "def fill(tokens, i, clens, row):\n"
+        "    n = len(row)\n"
+        "    tokens[i, :n] = row\n"
+    )
+    assert codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# RL002 nondeterminism
+
+
+def test_rl002_raw_set_iteration_feeding_allocation_flagged():
+    # PR 3's allocator bug shape: iterate a set to make an assignment
+    # decision — order depends on insertion history
+    src = (
+        "def assign(workers, shards):\n"
+        "    pending = set(workers)\n"
+        "    out = {}\n"
+        "    for w in pending:\n"
+        "        out[w] = shards.pop()\n"
+        "    return out\n"
+    )
+    assert codes(src) == ["RL002"]
+
+
+def test_rl002_sorted_set_iteration_silent():
+    src = (
+        "def assign(workers, shards):\n"
+        "    pending = set(workers)\n"
+        "    return {w: shards.pop() for w in sorted(pending)}\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl002_set_comprehension_result_is_order_free():
+    # {f(x) for x in someset} lands in a set again: no order leak
+    src = "def f(s):\n    vals = set(s)\n    return {v + 1 for v in vals}\n"
+    assert codes(src) == []
+
+
+def test_rl002_order_insensitive_consumers_silent():
+    src = (
+        "def f(s):\n"
+        "    vals = set(s)\n"
+        "    return sum(v for v in vals), min(vals), sorted(vals)\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl002_list_of_set_flagged():
+    src = "def f(s):\n    return list(set(s))\n"
+    assert codes(src) == ["RL002"]
+
+
+def test_rl002_global_rng_flagged_seeded_stream_silent():
+    bad = "import numpy as np\ndef f():\n    return np.random.rand(3)\n"
+    assert codes(bad) == ["RL002"]
+    good = (
+        "import numpy as np\n"
+        "def f(seed):\n"
+        "    rng = np.random.RandomState(seed)\n"
+        "    return rng.rand(3)\n"
+    )
+    assert codes(good) == []
+
+
+def test_rl002_wall_clock_only_on_simulated_clock_paths():
+    src = "import time\ndef f():\n    return time.perf_counter()\n"
+    assert codes(src, path="src/repro/serving/x.py") == ["RL002"]
+    # benchmarks and launch scripts may time for real
+    assert codes(src, path="benchmarks/bench_x.py") == []
+
+
+def test_rl002_pragma_suppresses():
+    src = (
+        "import time\n"
+        "def f():  # reprolint: exempt[RL002]\n"
+        "    return time.perf_counter()\n"
+    )
+    assert codes(src, path="src/repro/serving/x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RL003 host sync in traced code
+
+
+def test_rl003_item_and_asarray_in_jitted_fn_flagged():
+    src = JAX + (
+        "import numpy as np\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    y = np.asarray(x)\n"
+        "    return y.sum().item()\n"
+    )
+    assert sorted(codes(src)) == ["RL003", "RL003"]
+
+
+def test_rl003_same_code_outside_traced_fn_silent():
+    src = JAX + (
+        "import numpy as np\n"
+        "def host_step(x):\n"
+        "    y = np.asarray(x)\n"
+        "    return y.sum().item()\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl003_tree_map_lambda_is_not_traced():
+    # jax.tree.map takes a host function: np.asarray inside it is fine
+    src = JAX + (
+        "import numpy as np\n"
+        "def nan_like(t):\n"
+        "    return jax.tree.map(lambda a: np.asarray(a) * 0, t)\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl003_truthiness_of_traced_param_flagged():
+    src = JAX + (
+        "@jax.jit\n"
+        "def step(x, flag):\n"
+        "    if flag:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert codes(src) == ["RL003"]
+
+
+def test_rl003_static_argname_truthiness_silent():
+    src = JAX + (
+        "import functools\n"
+        "@functools.partial(jax.jit, static_argnames=('flag',))\n"
+        "def step(x, flag):\n"
+        "    if flag:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl003_fn_passed_to_jit_by_name_is_traced():
+    src = JAX + (
+        "def step(x):\n"
+        "    return x.sum().item()\n"
+        "fast = jax.jit(step)\n"
+    )
+    assert codes(src) == ["RL003"]
+
+
+# ---------------------------------------------------------------------------
+# RL004 PRNG key hygiene
+
+
+def test_rl004_key_consumed_twice_flagged():
+    # PR 1's bug class: the same key feeds two draws
+    src = JAX + (
+        "def draws(seed):\n"
+        "    key = jax.random.PRNGKey(seed)\n"
+        "    a = jax.random.normal(key, (3,))\n"
+        "    b = jax.random.uniform(key, (3,))\n"
+        "    return a, b\n"
+    )
+    assert codes(src) == ["RL004"]
+
+
+def test_rl004_split_between_uses_silent():
+    src = JAX + (
+        "def draws(seed):\n"
+        "    key = jax.random.PRNGKey(seed)\n"
+        "    k1, k2 = jax.random.split(key)\n"
+        "    return jax.random.normal(k1, (3,)), jax.random.uniform(k2, (3,))\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl004_exclusive_branches_silent():
+    # if/elif arms cannot both run: reusing one key across them is fine
+    src = JAX + (
+        "def draw(kind, key):\n"
+        "    if kind == 'a':\n"
+        "        return jax.random.normal(key, (3,))\n"
+        "    elif kind == 'b':\n"
+        "        return jax.random.uniform(key, (3,))\n"
+        "    return None\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl004_equality_guarded_ifs_are_exclusive():
+    # two separate ifs on the same expr vs different constants (the
+    # vlm/audio arch_type dispatch): runtime-exclusive, stays silent
+    src = JAX + (
+        "def inputs(cfg, key):\n"
+        "    ks = jax.random.split(key, 2)\n"
+        "    out = {'toks': jax.random.normal(ks[0], (4,))}\n"
+        "    if cfg.arch_type == 'vlm':\n"
+        "        out['prefix'] = jax.random.normal(ks[1], (4,))\n"
+        "    if cfg.arch_type == 'audio':\n"
+        "        out['frames'] = jax.random.normal(ks[1], (4,))\n"
+        "    return out\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl004_same_branch_reuse_still_flagged():
+    src = JAX + (
+        "def inputs(cfg, key):\n"
+        "    ks = jax.random.split(key, 2)\n"
+        "    if cfg.arch_type == 'vlm':\n"
+        "        a = jax.random.normal(ks[1], (4,))\n"
+        "        b = jax.random.normal(ks[1], (4,))\n"
+        "        return a + b\n"
+    )
+    assert codes(src) == ["RL004"]
+
+
+def test_rl004_key_reuse_in_loop_flagged():
+    # the frozen-randk shape: one key, every iteration redraws the same
+    src = JAX + (
+        "def noisy(xs, seed):\n"
+        "    key = jax.random.PRNGKey(seed)\n"
+        "    out = []\n"
+        "    for x in xs:\n"
+        "        out.append(x + jax.random.normal(key, (3,)))\n"
+        "    return out\n"
+    )
+    assert codes(src) == ["RL004"]
+
+
+def test_rl004_fold_in_per_iteration_silent():
+    src = JAX + (
+        "def noisy(xs, seed):\n"
+        "    base = jax.random.PRNGKey(seed)\n"
+        "    out = []\n"
+        "    for i, x in enumerate(xs):\n"
+        "        k = jax.random.fold_in(base, i)\n"
+        "        out.append(x + jax.random.normal(k, (3,)))\n"
+        "    return out\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl004_indexed_elements_tracked_separately():
+    src = JAX + (
+        "def draws(seed):\n"
+        "    ks = jax.random.split(jax.random.PRNGKey(seed), 2)\n"
+        "    return jax.random.normal(ks[0], (3,)), "
+        "jax.random.uniform(ks[1], (3,))\n"
+    )
+    assert codes(src) == []
+    bad = JAX + (
+        "def draws(seed):\n"
+        "    ks = jax.random.split(jax.random.PRNGKey(seed), 2)\n"
+        "    return jax.random.normal(ks[1], (3,)), "
+        "jax.random.uniform(ks[1], (3,))\n"
+    )
+    assert codes(bad) == ["RL004"]
+
+
+def test_rl004_fold_in_constant_collision_flagged():
+    src = JAX + (
+        "def streams(base):\n"
+        "    ka = jax.random.fold_in(base, 1)\n"
+        "    kb = jax.random.fold_in(base, 1)\n"
+        "    return ka, kb\n"
+    )
+    assert codes(src) == ["RL004"]
+
+
+def test_rl004_fold_in_distinct_constants_silent():
+    src = JAX + (
+        "def streams(base):\n"
+        "    ka = jax.random.fold_in(base, 1)\n"
+        "    kb = jax.random.fold_in(base, 2)\n"
+        "    return ka, kb\n"
+    )
+    assert codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# RL005 state_dict completeness
+
+
+RL005_BAD = (
+    "class Loop:\n"
+    "    def __init__(self):\n"
+    "        self.history = []\n"
+    "        self._scratch = {}\n"
+    "    def state_dict(self):\n"
+    "        return {'history': list(self.history)}\n"
+)
+
+
+def test_rl005_unsaved_mutable_attr_flagged():
+    fs = lint(RL005_BAD)
+    assert [f.rule for f in fs] == ["RL005"]
+    assert "_scratch" in fs[0].message
+
+
+def test_rl005_saved_and_immutable_attrs_silent():
+    src = (
+        "class Loop:\n"
+        "    def __init__(self):\n"
+        "        self.history = []\n"
+        "        self.step = 0\n"  # immutable: not state-bearing storage
+        "    def state_dict(self):\n"
+        "        return {'history': list(self.history)}\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl005_string_key_reference_counts():
+    # `st['faults'] = ...` style saves reference the attr by name only
+    src = (
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self._faults = {}\n"
+        "    def state_dict(self):\n"
+        "        st = {}\n"
+        "        st['faults'] = dict(getattr(self, '_faults'))\n"
+        "        return st\n"
+    )
+    assert codes(src) == []
+
+
+def test_rl005_no_state_dict_no_opinion():
+    src = "class C:\n    def __init__(self):\n        self.cache = {}\n"
+    assert codes(src) == []
+
+
+def test_rl005_pragma_suppresses():
+    src = RL005_BAD.replace(
+        "self._scratch = {}", "self._scratch = {}  # reprolint: exempt[RL005]"
+    )
+    assert codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas, baseline, driver
+
+
+def test_standalone_pragma_line_applies_to_next_line():
+    src = (
+        "def f(s):\n"
+        "    vals = set(s)\n"
+        "    # reprolint: exempt[RL002]\n"
+        "    return list(vals)\n"
+    )
+    assert codes(src) == []
+
+
+def test_pragma_for_other_rule_does_not_suppress():
+    src = "def f(s):\n    return list(set(s))  # reprolint: exempt[RL005]\n"
+    assert codes(src) == ["RL002"]
+
+
+def test_baseline_absorbs_exactly_known_findings(tmp_path):
+    mod = tmp_path / "core" / "m.py"
+    mod.parent.mkdir()
+    mod.write_text("def f(s):\n    return list(set(s))\n")
+    pairs, _, _ = rl_core.run_paths([str(tmp_path)])
+    assert [f.rule for f, _ in pairs] == ["RL002"]
+    baseline = rl_core.load_baseline(tmp_path / "missing.json")
+    baselined, new = rl_core.split_new(pairs, baseline)
+    assert len(new) == 1 and not baselined
+    # absorb it, then the same scan is clean; a second copy is NEW again
+    import collections
+
+    baseline = collections.Counter(fp for _, fp in pairs)
+    baselined, new = rl_core.split_new(pairs, baseline)
+    assert len(baselined) == 1 and not new
+    mod.write_text(
+        "def f(s):\n    return list(set(s))\ndef g(s):\n"
+        "    return list(set(s))\n"
+    )
+    pairs2, _, _ = rl_core.run_paths([str(tmp_path)])
+    baselined, new = rl_core.split_new(pairs2, baseline)
+    assert len(baselined) == 1 and len(new) == 1
+
+
+def test_fingerprint_survives_line_drift(tmp_path):
+    mod = tmp_path / "core" / "m.py"
+    mod.parent.mkdir()
+    mod.write_text("def f(s):\n    return list(set(s))\n")
+    pairs, _, _ = rl_core.run_paths([str(tmp_path)])
+    fp0 = pairs[0][1]
+    # prepend unrelated code: line number shifts, fingerprint does not
+    mod.write_text("X = 1\n\n\ndef f(s):\n    return list(set(s))\n")
+    pairs2, _, _ = rl_core.run_paths([str(tmp_path)])
+    assert pairs2[0][0].line == 5 and pairs2[0][1] == fp0
+
+
+# ---------------------------------------------------------------------------
+# self-checks against the real tree
+
+
+def test_repo_tree_is_clean_modulo_baseline():
+    """The acceptance gate CI runs: src+tests+benchmarks, exit 0."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", "src", "tests", "benchmarks"],
+        cwd=REPO, capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_seeded_past_bug_shapes_are_flagged(tmp_path):
+    """Both historical bug shapes, seeded into a scratch file, fail the
+    driver: PR 3's raw-set iteration feeding an allocator decision and
+    PR 1's key consumed twice without split/fold_in."""
+    scratch = tmp_path / "core" / "scratch.py"
+    scratch.parent.mkdir()
+    scratch.write_text(
+        "import jax\n"
+        "def allocate(joined, shards):\n"
+        "    pending = set(joined)\n"
+        "    owner = {}\n"
+        "    for w in pending:\n"
+        "        owner[w] = shards.pop()\n"
+        "    return owner\n"
+        "def rand_mask(seed):\n"
+        "    key = jax.random.PRNGKey(seed)\n"
+        "    a = jax.random.uniform(key, (8,))\n"
+        "    b = jax.random.uniform(key, (8,))\n"
+        "    return a, b\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", str(tmp_path)],
+        cwd=REPO, capture_output=True, text=True,
+    )
+    assert proc.returncode == 1
+    assert "RL002" in proc.stdout and "RL004" in proc.stdout
+
+
+def test_emit_bench_json(tmp_path):
+    out = tmp_path / "BENCH_reprolint.json"
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "tools.reprolint", "src",
+            "--emit-bench-json", str(out),
+        ],
+        cwd=REPO, capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.loads(out.read_text())
+    assert doc["bench"] == "reprolint"
+    assert doc["results"]["new_findings"] == 0
+    assert doc["results"]["baseline_entries"] >= 0
+
+
+def test_write_baseline_round_trip(tmp_path):
+    mod = tmp_path / "core" / "m.py"
+    mod.parent.mkdir()
+    mod.write_text("def f(s):\n    return list(set(s))\n")
+    base = tmp_path / "baseline.json"
+    from tools.reprolint.__main__ import main as rl_main
+
+    assert rl_main([str(tmp_path), "--baseline", str(base),
+                    "--write-baseline"]) == 0
+    assert rl_main([str(tmp_path), "--baseline", str(base)]) == 0
+    assert rl_main([str(tmp_path), "--no-baseline"]) == 1
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

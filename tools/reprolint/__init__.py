@@ -1,0 +1,25 @@
+"""reprolint: AST static analysis for the repo's reproducibility invariants.
+
+Stdlib-only (``ast``-based, no third-party imports) so the CI lint leg
+can run it without installing the jax stack. Five rule families, each
+derived from a bug class this codebase has actually hit:
+
+- RL001 retrace hazards (dynamic shapes reaching jitted call sites or
+  trace-cache keys without a pow2/bucket helper)
+- RL002 nondeterminism (unsorted set iteration, global-state RNG calls,
+  wall-clock reads on simulated-clock paths)
+- RL003 host sync inside traced/hot code (``.item()``, ``float()``,
+  ``np.asarray``, truthiness on traced values)
+- RL004 PRNG key hygiene (key consumed twice without split/fold_in,
+  colliding fold_in constants, key reuse amplified by a loop)
+- RL005 state_dict completeness (mutable ``__init__`` attrs that a
+  ``state_dict`` forgets to save)
+
+Findings are suppressed by inline ``# reprolint: exempt[RLxxx]`` pragmas
+or absorbed by the committed ``baseline.json``; only NEW findings fail.
+See docs/static_analysis.md.
+"""
+
+from .core import Finding, load_baseline, run_paths  # noqa: F401
+
+__version__ = "1.0"

@@ -1,0 +1,113 @@
+"""CLI driver: ``python -m tools.reprolint src tests benchmarks``.
+
+Exit status is 0 when every finding is absorbed by the committed
+baseline (tools/reprolint/baseline.json) and 1 when NEW findings exist,
+so the CI lint leg fails only on regressions while the pre-existing
+burn-down list stays visible.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+
+from .core import (
+    DEFAULT_BASELINE,
+    load_baseline,
+    run_paths,
+    save_baseline,
+    split_new,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description=__doc__,
+    )
+    ap.add_argument("paths", nargs="*", default=["src", "tests", "benchmarks"])
+    ap.add_argument(
+        "--baseline",
+        type=Path,
+        default=DEFAULT_BASELINE,
+        help="baseline JSON absorbing pre-existing findings",
+    )
+    ap.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="report every finding (ignore the baseline)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="absorb all current findings into --baseline and exit 0",
+    )
+    ap.add_argument(
+        "--show-baselined",
+        action="store_true",
+        help="also print findings the baseline absorbs",
+    )
+    ap.add_argument(
+        "--emit-bench-json",
+        type=Path,
+        default=None,
+        help="write a BENCH_reprolint.json with the baseline size so the "
+        "bench-regression job can report burn-down progress",
+    )
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src", "tests", "benchmarks"]
+
+    pairs, n_files, n_suppressed = run_paths(paths)
+
+    if args.write_baseline:
+        save_baseline(args.baseline, Counter(fp for _, fp in pairs))
+        print(
+            f"wrote {args.baseline} with {len(pairs)} finding(s) "
+            f"from {n_files} file(s)"
+        )
+        return 0
+
+    baseline = Counter() if args.no_baseline else load_baseline(args.baseline)
+    baselined, new = split_new(pairs, baseline)
+
+    if args.show_baselined:
+        for f in baselined:
+            print(f.render() + "  [baselined]")
+    for f in new:
+        print(f.render())
+
+    n_base = sum(baseline.values())
+    print(
+        f"reprolint: {n_files} file(s), {len(new)} new finding(s), "
+        f"{len(baselined)} baselined, {n_suppressed} pragma-exempt "
+        f"(baseline holds {n_base})"
+    )
+
+    if args.emit_bench_json is not None:
+        doc = {
+            "bench": "reprolint",
+            "results": {
+                "baseline_entries": n_base,
+                "new_findings": len(new),
+                "pragma_exempt": n_suppressed,
+                "files_scanned": n_files,
+            },
+        }
+        args.emit_bench_json.write_text(json.dumps(doc, indent=2) + "\n")
+
+    if new:
+        print(
+            "new findings above are not in the baseline; fix them, add a "
+            "justified `# reprolint: exempt[RLxxx]` pragma, or (for "
+            "pre-existing debt only) refresh with --write-baseline",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,208 @@
+"""Findings, pragma handling, the baseline store, and the file runner.
+
+The baseline keys findings by ``path|rule|<stripped source line>`` rather
+than line number, so unrelated edits that shift code up or down do not
+invalidate it; identical lines are counted as a multiset. A finding not
+covered by the baseline is NEW and fails the run.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from collections import Counter
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+PRAGMA_RE = re.compile(r"#\s*reprolint:\s*exempt(?:\[([A-Za-z0-9_,\s]+)\])?")
+
+BASELINE_VERSION = 1
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+LinePragmas = Dict[int, Optional[frozenset]]
+ScopedPragmas = List[Tuple[int, int, Optional[frozenset]]]
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str  # posix-style, relative to the scan root when possible
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+
+
+def _pragma_rules(match: re.Match) -> Optional[frozenset]:
+    """None means "exempt every rule"; otherwise the named rule set."""
+    group = match.group(1)
+    if group is None:
+        return None
+    return frozenset(r.strip().upper() for r in group.split(",") if r.strip())
+
+
+def collect_pragmas(
+    source: str,
+    tree: ast.Module,
+) -> Tuple[LinePragmas, ScopedPragmas]:
+    """Return (line pragmas, scoped pragmas).
+
+    A pragma on a code line exempts that line. A pragma on a standalone
+    comment line exempts the next non-blank code line. A pragma on a
+    ``def``/``class`` line exempts the whole body (scoped), which keeps
+    e.g. a deliberately wall-clock function from needing one pragma per
+    ``time.perf_counter()`` call.
+    """
+    lines = source.splitlines()
+    by_line: LinePragmas = {}
+    pending: Optional[frozenset] = None
+    pending_armed = False
+    for i, raw in enumerate(lines, 1):
+        m = PRAGMA_RE.search(raw)
+        stripped = raw.strip()
+        if m:
+            rules = _pragma_rules(m)
+            if stripped.startswith("#"):
+                pending, pending_armed = rules, True
+            else:
+                by_line[i] = rules
+        elif pending_armed and stripped:
+            by_line[i] = pending
+            pending, pending_armed = None, False
+
+    scoped: ScopedPragmas = []
+    scope_types = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+    for node in ast.walk(tree):
+        if isinstance(node, scope_types) and node.lineno in by_line:
+            end = node.end_lineno or node.lineno
+            scoped.append((node.lineno, end, by_line[node.lineno]))
+    return by_line, scoped
+
+
+def is_exempt(
+    finding: Finding,
+    by_line: LinePragmas,
+    scoped: ScopedPragmas,
+) -> bool:
+    def covers(rules: Optional[frozenset]) -> bool:
+        return rules is None or finding.rule in rules
+
+    if finding.line in by_line and covers(by_line[finding.line]):
+        return True
+    for start, end, rules in scoped:
+        if start <= finding.line <= end and covers(rules):
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+
+def fingerprint(finding: Finding, source_lines: Sequence[str]) -> str:
+    code = ""
+    if 1 <= finding.line <= len(source_lines):
+        code = source_lines[finding.line - 1].strip()
+    return f"{finding.path}|{finding.rule}|{code}"
+
+
+def load_baseline(path: Path) -> Counter:
+    if not path.exists():
+        return Counter()
+    doc = json.loads(path.read_text())
+    return Counter({k: int(v) for k, v in doc.get("entries", {}).items()})
+
+
+def save_baseline(path: Path, counts: Counter) -> None:
+    doc = {
+        "version": BASELINE_VERSION,
+        "entries": {k: counts[k] for k in sorted(counts)},
+    }
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+
+
+def split_new(
+    findings: Sequence[Tuple[Finding, str]],
+    baseline: Counter,
+) -> Tuple[List[Finding], List[Finding]]:
+    """Partition (finding, fingerprint) pairs into (baselined, new).
+
+    Duplicate fingerprints are matched as a multiset: a baseline count of
+    N absorbs the first N occurrences (by line order) and the rest are new.
+    """
+    budget = Counter(baseline)
+    baselined: List[Finding] = []
+    new: List[Finding] = []
+    for finding, fp in sorted(findings, key=lambda p: (p[0].path, p[0].line)):
+        if budget[fp] > 0:
+            budget[fp] -= 1
+            baselined.append(finding)
+        else:
+            new.append(finding)
+    return baselined, new
+
+
+# ---------------------------------------------------------------------------
+# runner
+
+
+def iter_python_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            files = sorted(p.rglob("*.py"))
+            out.extend(f for f in files if "__pycache__" not in f.parts)
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def run_file(
+    path: Path,
+    display_path: str,
+) -> Tuple[List[Tuple[Finding, str]], int]:
+    """Lint one file. Returns ((finding, fingerprint) pairs, n_suppressed)."""
+    from . import rules
+
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        msg = f"syntax error: {exc.msg}"
+        f = Finding(display_path, exc.lineno or 1, "RL000", msg)
+        return [(f, fingerprint(f, source.splitlines()))], 0
+
+    by_line, scoped = collect_pragmas(source, tree)
+    source_lines = source.splitlines()
+    raw = rules.check_module(tree, source, display_path)
+    kept: List[Tuple[Finding, str]] = []
+    suppressed = 0
+    for finding in raw:
+        if is_exempt(finding, by_line, scoped):
+            suppressed += 1
+        else:
+            kept.append((finding, fingerprint(finding, source_lines)))
+    return kept, suppressed
+
+
+def run_paths(paths: Sequence[str]) -> Tuple[List[Tuple[Finding, str]], int, int]:
+    """Lint every .py under ``paths``.
+
+    Returns ((finding, fingerprint) pairs, n_files, n_suppressed).
+    """
+    pairs: List[Tuple[Finding, str]] = []
+    suppressed = 0
+    files = iter_python_files(paths)
+    for f in files:
+        file_pairs, n_sup = run_file(f, f.as_posix())
+        pairs.extend(file_pairs)
+        suppressed += n_sup
+    return pairs, len(files), suppressed

@@ -1,0 +1,849 @@
+"""Rule families RL001-RL005.
+
+Each family encodes a bug class this repo has actually hit (see
+docs/static_analysis.md for the history). The analyses are deliberately
+conservative: a rule fires only on syntactic shapes we have seen cause
+real bugs, and known-safe idioms (pow2/bucket helpers, ``sorted(...)``
+wrappers, seeded ``RandomState`` streams, branch-exclusive key use) are
+recognized so the committed baseline stays near-empty.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding
+
+SCOPE_TYPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# helper names that bound a dynamic value into a finite bucket set; a
+# value routed through one of these is retrace-safe by construction
+BUCKET_RE = re.compile(r"(pow2|bucket|quantiz|capacity|pad_to)", re.I)
+
+# consumers for which iteration order cannot leak into the result
+ORDER_INSENSITIVE = frozenset(
+    "sorted min max sum len any all set frozenset Counter".split()
+)
+
+# containers that look like jit/trace caches (RL001 cache-key heuristic)
+CACHE_NAME_RE = re.compile(r"(fn|cache)", re.I)
+
+# jax transforms that trace the function they are given. Control-flow
+# names are only transforms under `lax.` (jax.tree.map and the builtin
+# map/filter take host functions and must NOT mark them traced).
+TRACING_TRANSFORMS = frozenset(
+    "jit vmap pmap grad value_and_grad checkpoint remat "
+    "custom_vjp custom_jvp shard_map".split()
+)
+LAX_CONTROL = frozenset("scan cond while_loop fori_loop map switch".split())
+
+WALLCLOCK_CALLS = frozenset(
+    "time.time time.perf_counter time.monotonic "
+    "time.time_ns time.perf_counter_ns time.monotonic_ns".split()
+)
+
+# seeded-stream constructors: calling these on np.random is the
+# SANCTIONED way to get randomness, so they never fire RL002
+SEEDED_CONSTRUCTORS = frozenset(
+    "RandomState default_rng Generator SeedSequence".split()
+)
+
+PARAM_KEY_NAMES = frozenset("key rng rng_key prng_key".split())
+
+
+def _is_tracing_call(name: Optional[str]) -> bool:
+    segs = (name or "").split(".")
+    if segs[-1] in TRACING_TRANSFORMS:
+        return True
+    return segs[-1] in LAX_CONTROL and len(segs) >= 2 and segs[-2] == "lax"
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_seg(name: Optional[str]) -> str:
+    return (name or "").rsplit(".", 1)[-1]
+
+
+def scope_walk(scope: ast.AST):
+    """Yield nodes belonging directly to ``scope``.
+
+    Nested function/lambda/class bodies are excluded (they are their own
+    scopes); their headers — decorators and default expressions — do
+    evaluate here and are included.
+    """
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, SCOPE_TYPES + (ast.ClassDef,)):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                stack.extend(node.decorator_list)
+                stack.extend(node.args.defaults)
+                stack.extend(d for d in node.args.kw_defaults if d is not None)
+        else:
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def iter_scopes(tree: ast.Module):
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, SCOPE_TYPES):
+            yield node
+
+
+def call_args(call: ast.Call):
+    yield from call.args
+    for kw in call.keywords:
+        yield kw.value
+
+
+# ---------------------------------------------------------------------------
+# shared module context
+
+
+class ModuleContext:
+    def __init__(self, tree: ast.Module, source: str, path: str):
+        self.tree = tree
+        self.source = source
+        self.path = path
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.imports_jax = self._imports("jax")
+        self.findings: List[Finding] = []
+
+    def _imports(self, top: str) -> bool:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                if any(a.name.split(".")[0] == top for a in node.names):
+                    return True
+            elif isinstance(node, ast.ImportFrom):
+                if node.module and node.module.split(".")[0] == top:
+                    return True
+        return False
+
+    def add(self, node: ast.AST, rule: str, message: str):
+        line = getattr(node, "lineno", 1)
+        self.findings.append(Finding(self.path, line, rule, message))
+
+
+# ---------------------------------------------------------------------------
+# RL001 — retrace hazards
+
+
+def _jitted_def_decorated(node: ast.FunctionDef) -> bool:
+    for dec in node.decorator_list:
+        name = dotted(dec)
+        if name and last_seg(name) == "jit":
+            return True
+        if isinstance(dec, ast.Call):
+            fname = dotted(dec.func) or ""
+            if last_seg(fname) == "jit":
+                return True
+            if last_seg(fname) == "partial" and dec.args:
+                first = dotted(dec.args[0]) or ""
+                if last_seg(first) == "jit":
+                    return True
+    return False
+
+
+def _static_param_names(node: ast.FunctionDef) -> Set[str]:
+    """Names listed in static_argnames/static_argnums of a jit decorator."""
+    params = [a.arg for a in node.args.posonlyargs + node.args.args]
+    static: Set[str] = set()
+    for dec in node.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                for c in ast.walk(kw.value):
+                    if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                        static.add(c.value)
+            elif kw.arg == "static_argnums":
+                for c in ast.walk(kw.value):
+                    is_int = isinstance(c, ast.Constant) and isinstance(c.value, int)
+                    if is_int and 0 <= c.value < len(params):
+                        static.add(params[c.value])
+    return static
+
+
+def _expr_dynamic(e: ast.AST, dyn: Set[str]) -> bool:
+    """True if the expression derives from len()/.shape and is not routed
+    through a bucket helper."""
+    if isinstance(e, ast.Call):
+        name = dotted(e.func) or ""
+        if BUCKET_RE.search(last_seg(name)):
+            return False  # bucketed: retrace-safe by construction
+        if last_seg(name) == "len":
+            return True
+        return any(_expr_dynamic(a, dyn) for a in call_args(e))
+    if isinstance(e, ast.Attribute):
+        if e.attr == "shape":
+            return True
+        return _expr_dynamic(e.value, dyn)
+    if isinstance(e, ast.Name):
+        return e.id in dyn
+    return any(_expr_dynamic(c, dyn) for c in ast.iter_child_nodes(e))
+
+
+def _dynamic_vars(scope: ast.AST) -> Set[str]:
+    dyn: Set[str] = set()
+    # two passes so `a = len(x); b = a + 1` taints b regardless of order
+    for _ in range(2):
+        for node in scope_walk(scope):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if isinstance(tgt, ast.Name) and _expr_dynamic(node.value, dyn):
+                    dyn.add(tgt.id)
+    return dyn
+
+
+def rl001(ctx: ModuleContext):
+    if not ctx.imports_jax:
+        return
+    # collect jitted names: decorated defs + `name = jax.jit(...)` targets
+    jitted: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _jitted_def_decorated(node):
+                jitted.add(node.name)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            name = dotted(node.targets[0])
+            is_jit_value = (
+                isinstance(node.value, ast.Call)
+                and last_seg(dotted(node.value.func)) == "jit"
+            )
+            if name and is_jit_value:
+                jitted.add(name)
+
+    for scope in iter_scopes(ctx.tree):
+        dyn = _dynamic_vars(scope)
+        for node in scope_walk(scope):
+            if isinstance(node, ast.Call):
+                fn_name = dotted(node.func)
+                if fn_name in jitted:
+                    if any(_expr_dynamic(a, dyn) for a in call_args(node)):
+                        ctx.add(
+                            node,
+                            "RL001",
+                            f"jitted call `{fn_name}` passes a data-derived "
+                            "dynamic value (len/.shape); route it through a "
+                            "pow2/bucket helper to bound retraces",
+                        )
+                # cache.get(key) / cache.setdefault(key, ...) on fn caches
+                is_getter = (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("get", "setdefault")
+                    and bool(node.args)
+                )
+                if is_getter:
+                    container = dotted(node.func.value)
+                    if container and CACHE_NAME_RE.search(last_seg(container)):
+                        _check_cache_key(ctx, node, node.args[0], container, dyn)
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if not isinstance(tgt, ast.Subscript):
+                        continue
+                    container = dotted(tgt.value)
+                    if container and CACHE_NAME_RE.search(last_seg(container)):
+                        _check_cache_key(ctx, tgt, tgt.slice, container, dyn)
+
+
+def _check_cache_key(ctx, node, key, container, dyn):
+    if isinstance(key, ast.JoinedStr):
+        for part in key.values:
+            is_dyn = isinstance(part, ast.FormattedValue) and _expr_dynamic(
+                part.value, dyn
+            )
+            if is_dyn:
+                ctx.add(
+                    node,
+                    "RL001",
+                    f"f-string cache key for `{container}` interpolates a "
+                    "dynamic shape; use a bucketed tuple key",
+                )
+                return
+    elif isinstance(key, ast.Tuple):
+        if any(isinstance(e, ast.Slice) for e in key.elts):
+            return  # array indexing, not a dict key
+        for e in key.elts:
+            if _expr_dynamic(e, dyn):
+                ctx.add(
+                    node,
+                    "RL001",
+                    f"cache key for `{container}` contains a raw dynamic "
+                    "dimension; bucket it (e.g. pow2_bucket) so the trace "
+                    "cache stays finite",
+                )
+                return
+    elif _expr_dynamic(key, dyn):
+        ctx.add(
+            node,
+            "RL001",
+            f"cache key for `{container}` is a raw dynamic value; bucket "
+            "it so the trace cache stays finite",
+        )
+
+
+# ---------------------------------------------------------------------------
+# RL002 — nondeterminism
+
+
+def _is_setish(e: ast.AST, setvars: Set[str]) -> bool:
+    if isinstance(e, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(e, ast.Name):
+        return e.id in setvars
+    set_ops = (ast.BitOr, ast.BitAnd, ast.BitXor, ast.Sub)
+    if isinstance(e, ast.BinOp) and isinstance(e.op, set_ops):
+        return _is_setish(e.left, setvars) or _is_setish(e.right, setvars)
+    if isinstance(e, ast.Call):
+        return last_seg(dotted(e.func)) in ("set", "frozenset")
+    return False
+
+
+def _setish_vars(scope: ast.AST) -> Set[str]:
+    setvars: Set[str] = set()
+    for _ in range(2):
+        for node in scope_walk(scope):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if isinstance(tgt, ast.Name) and _is_setish(node.value, setvars):
+                    setvars.add(tgt.id)
+    return setvars
+
+
+def _all_asserts(body: Sequence[ast.stmt]) -> bool:
+    return bool(body) and all(isinstance(s, ast.Assert) for s in body)
+
+
+_SET_ITER_MSG = (
+    "iterating a set in an order-sensitive position; wrap in sorted(...) "
+    "so results do not depend on insertion history"
+)
+
+
+def rl002(ctx: ModuleContext):
+    parts = ctx.path.split("/")
+    simulated_clock = "core" in parts or "serving" in parts
+
+    for scope in iter_scopes(ctx.tree):
+        setvars = _setish_vars(scope)
+        for node in scope_walk(scope):
+            # unsorted set iteration
+            if isinstance(node, ast.For) and _is_setish(node.iter, setvars):
+                if not _all_asserts(node.body):
+                    ctx.add(node, "RL002", _SET_ITER_MSG)
+            elif isinstance(node, (ast.ListComp, ast.DictComp)):
+                if any(_is_setish(g.iter, setvars) for g in node.generators):
+                    ctx.add(node, "RL002", _SET_ITER_MSG)
+            elif isinstance(node, ast.GeneratorExp):
+                if any(_is_setish(g.iter, setvars) for g in node.generators):
+                    parent = ctx.parents.get(node)
+                    consumed_safely = (
+                        isinstance(parent, ast.Call)
+                        and last_seg(dotted(parent.func)) in ORDER_INSENSITIVE
+                    )
+                    if not consumed_safely:
+                        ctx.add(node, "RL002", _SET_ITER_MSG)
+            elif isinstance(node, ast.Call):
+                _rl002_call(ctx, node, setvars, simulated_clock)
+
+
+def _rl002_call(ctx, node, setvars, simulated_clock):
+    fname = dotted(node.func) or ""
+    fl = last_seg(fname)
+    # list(someset) / ",".join(someset): ordered leak of set order
+    orders_a_set = fl in ("list", "tuple", "enumerate") or (
+        isinstance(node.func, ast.Attribute) and fl == "join"
+    )
+    if orders_a_set and node.args and _is_setish(node.args[0], setvars):
+        ctx.add(node, "RL002", _SET_ITER_MSG)
+    # global-state RNG calls
+    segs = fname.split(".")
+    np_random = len(segs) >= 3 and segs[-3] in ("np", "numpy")
+    stdlib_random = len(segs) == 2 and segs[0] == "random"
+    if np_random and segs[-2] == "random" and fl not in SEEDED_CONSTRUCTORS:
+        ctx.add(
+            node,
+            "RL002",
+            f"global-state RNG call `{fname}`; draw from a seeded "
+            "np.random.RandomState stream instead",
+        )
+    elif stdlib_random and fl not in ("Random", "SystemRandom"):
+        ctx.add(
+            node,
+            "RL002",
+            f"global-state RNG call `{fname}`; use a seeded "
+            "random.Random(seed) instance instead",
+        )
+    # wall-clock reads on simulated-clock packages
+    elif simulated_clock and fname in WALLCLOCK_CALLS:
+        ctx.add(
+            node,
+            "RL002",
+            f"`{fname}()` on a simulated-clock path (core/ and serving/ "
+            "time via the discrete-event clock); take `now` as a "
+            "parameter, or pragma if wall-clock is the point",
+        )
+
+
+# ---------------------------------------------------------------------------
+# RL003 — host sync inside traced code
+
+
+def _collect_traced(ctx: ModuleContext) -> Set[ast.AST]:
+    defs_by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(node.name, []).append(node)
+
+    traced: Set[ast.AST] = set()
+
+    def mark_fn_expr(e: ast.AST):
+        """Mark names/lambdas appearing as the traced function argument,
+        descending through nested transform calls only."""
+        if isinstance(e, ast.Lambda):
+            traced.add(e)
+        elif isinstance(e, ast.Name):
+            for d in defs_by_name.get(e.id, []):
+                traced.add(d)
+        elif isinstance(e, ast.Call):
+            name = dotted(e.func)
+            if _is_tracing_call(name) or last_seg(name) == "partial":
+                for a in call_args(e):
+                    mark_fn_expr(a)
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _jitted_def_decorated(node):
+                traced.add(node)
+        elif isinstance(node, ast.Call):
+            if _is_tracing_call(dotted(node.func)):
+                for a in call_args(node):
+                    mark_fn_expr(a)
+
+    # nested defs inside a traced def are traced too (fixpoint)
+    changed = True
+    while changed:
+        changed = False
+        for t in list(traced):
+            for node in scope_walk(t):
+                if isinstance(node, SCOPE_TYPES) and node not in traced:
+                    traced.add(node)
+                    changed = True
+    return traced
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    args = fn.args
+    names = {a.arg for a in args.posonlyargs + args.args + args.kwonlyargs}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    names.discard("self")
+    return names
+
+
+def rl003(ctx: ModuleContext):
+    if not ctx.imports_jax:
+        return
+    for fn in _collect_traced(ctx):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            static = _static_param_names(fn)
+        else:
+            static = set()
+        params = _param_names(fn) - static
+        for node in scope_walk(fn):
+            if isinstance(node, ast.Call):
+                _rl003_call(ctx, node, params)
+            elif isinstance(node, (ast.If, ast.While)):
+                if _bare_param_truthiness(node.test, params):
+                    ctx.add(
+                        node,
+                        "RL003",
+                        "truthiness of a possibly-traced value inside a "
+                        "traced function; use jnp.where / lax.cond (or "
+                        "mark the argument static)",
+                    )
+
+
+def _rl003_call(ctx, node, params):
+    fname = dotted(node.func) or ""
+    fl = last_seg(fname)
+    is_item = (
+        isinstance(node.func, ast.Attribute)
+        and node.func.attr == "item"
+        and not node.args
+    )
+    if is_item:
+        ctx.add(
+            node,
+            "RL003",
+            "`.item()` forces a device->host sync inside a traced function",
+        )
+        return
+    np_pull = fname.split(".")[0] in ("np", "numpy")
+    if np_pull and fl in ("asarray", "array", "copy"):
+        ctx.add(
+            node,
+            "RL003",
+            f"`{fname}` inside a traced function pulls the value to host; "
+            "use jnp equivalents",
+        )
+        return
+    if fl in ("float", "int", "bool") and "." not in fname:
+        touches_param = any(
+            isinstance(n, ast.Name) and n.id in params
+            for a in node.args
+            for n in ast.walk(a)
+        )
+        if touches_param:
+            ctx.add(
+                node,
+                "RL003",
+                f"`{fl}()` on a traced argument forces a host sync; keep "
+                "it as an array",
+            )
+
+
+def _bare_param_truthiness(test: ast.AST, params: Set[str]) -> bool:
+    if isinstance(test, ast.Name):
+        return test.id in params
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _bare_param_truthiness(test.operand, params)
+    if isinstance(test, ast.BoolOp):
+        return any(_bare_param_truthiness(v, params) for v in test.values)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# RL004 — PRNG key hygiene
+
+
+def _key_call_kind(call: ast.Call) -> Optional[str]:
+    name = dotted(call.func) or ""
+    segs = name.split(".")
+    last = segs[-1]
+    if last not in ("PRNGKey", "key", "split", "fold_in"):
+        return None
+    if any(s.endswith("random") for s in segs[:-1]):
+        return last
+    if name in ("PRNGKey", "fold_in"):  # bare from-import
+        return last
+    return None
+
+
+class _KeyScopeState:
+    def __init__(self):
+        self.version: Dict[str, int] = {}
+        self.def_loops: Dict[Tuple[str, int], Tuple[int, ...]] = {}
+        # (name, version, idx) -> [(line, branch_path)]
+        self.uses: Dict[Tuple, List[Tuple[int, Tuple]]] = {}
+
+
+def _eq_condition(test: ast.AST) -> Optional[Tuple[str, object]]:
+    """(dump(expr), constant) for tests of the form ``expr == const`` —
+    two arms guarded by the same expr equaling different constants are
+    runtime-exclusive even though they are separate ``if`` statements
+    (the vlm/audio `arch_type` dispatch pattern)."""
+    is_eq = (
+        isinstance(test, ast.Compare)
+        and len(test.ops) == 1
+        and isinstance(test.ops[0], ast.Eq)
+    )
+    if is_eq:
+        left, right = test.left, test.comparators[0]
+        if isinstance(right, ast.Constant):
+            return (ast.dump(left), right.value)
+        if isinstance(left, ast.Constant):
+            return (ast.dump(right), left.value)
+    return None
+
+
+def _branch_exclusive(a: Tuple, b: Tuple) -> bool:
+    arms_a = {nid: arm for nid, arm, _ in a}
+    for nid, arm, _ in b:
+        if nid in arms_a and arms_a[nid] != arm:
+            return True
+    eqs_a = {eq[0]: eq[1] for _, _, eq in a if eq is not None}
+    for _, _, eq in b:
+        if eq is not None and eq[0] in eqs_a and eqs_a[eq[0]] != eq[1]:
+            return True
+    return False
+
+
+def rl004(ctx: ModuleContext):
+    if not ctx.imports_jax:
+        return
+    for scope in iter_scopes(ctx.tree):
+        _rl004_scope(ctx, scope)
+        _rl004_fold_in_constants(ctx, scope)
+
+
+def _rl004_scope(ctx: ModuleContext, scope: ast.AST):
+    st = _KeyScopeState()
+    if isinstance(scope, SCOPE_TYPES):
+        for p in _param_names(scope) & PARAM_KEY_NAMES:
+            st.version[p] = 0
+            st.def_loops[(p, 0)] = ()
+
+    def define(name: str, loops: Tuple[int, ...]):
+        st.version[name] = st.version.get(name, -1) + 1
+        st.def_loops[(name, st.version[name])] = loops
+
+    def consume(name: str, idx, node: ast.AST, branch: Tuple, loops: Tuple):
+        if idx == "var":
+            # keys[i] with a variable index: per-element consumption we
+            # cannot resolve statically (two comprehensions over disjoint
+            # index ranges are fine) — skip rather than guess
+            return
+        ver = st.version.get(name)
+        if ver is None:
+            return
+        slot = (name, ver, idx)
+        def_loops = st.def_loops.get((name, ver), ())
+        label = name if idx is None else f"{name}[{idx}]"
+        if any(lid not in def_loops for lid in loops):
+            ctx.add(
+                node,
+                "RL004",
+                f"PRNG key `{label}` defined outside this loop is consumed "
+                "inside it — every iteration reuses the same randomness; "
+                "split() or fold_in(key, i) per iteration",
+            )
+            return
+        prev = st.uses.setdefault(slot, [])
+        for line0, branch0 in prev:
+            if not _branch_exclusive(branch0, branch):
+                ctx.add(
+                    node,
+                    "RL004",
+                    f"PRNG key `{label}` consumed again (already consumed "
+                    f"at line {line0}) without an intervening "
+                    "split/fold_in — the two draws are identical",
+                )
+                break
+        prev.append((node.lineno, branch))
+
+    def scan_expr(e: ast.AST, branch: Tuple, loops: Tuple):
+        """Find key consumptions in an expression."""
+        for node in ast.walk(e):
+            if not isinstance(node, ast.Call):
+                continue
+            kind = _key_call_kind(node)
+            for i, arg in enumerate(call_args(node)):
+                if kind == "fold_in" and i == 0:
+                    continue  # derivation, not consumption (sanctioned)
+                if kind == "PRNGKey":
+                    continue  # arg is a seed int, not a key
+                if isinstance(arg, ast.Name) and arg.id in st.version:
+                    consume(arg.id, None, node, branch, loops)
+                    continue
+                is_key_sub = (
+                    isinstance(arg, ast.Subscript)
+                    and isinstance(arg.value, ast.Name)
+                    and arg.value.id in st.version
+                )
+                if is_key_sub:
+                    sl = arg.slice
+                    if isinstance(sl, ast.Constant):
+                        consume(arg.value.id, sl.value, node, branch, loops)
+                    else:
+                        consume(arg.value.id, "var", node, branch, loops)
+
+    def handle_assign(node, value, targets, branch, loops):
+        scan_expr(value, branch, loops)
+        kind = _key_call_kind(value) if isinstance(value, ast.Call) else None
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                if kind in ("PRNGKey", "key", "split", "fold_in"):
+                    define(tgt.id, loops)
+                elif tgt.id in st.version:
+                    del st.version[tgt.id]  # reassigned to a non-key
+            elif isinstance(tgt, ast.Tuple) and kind == "split":
+                for elt in tgt.elts:
+                    if isinstance(elt, ast.Name):
+                        define(elt.id, loops)
+
+    def visit(stmts, branch: Tuple, loops: Tuple):
+        for stmt in stmts:
+            if isinstance(stmt, SCOPE_TYPES + (ast.ClassDef,)):
+                continue  # separate scope
+            if isinstance(stmt, ast.Assign):
+                handle_assign(stmt, stmt.value, stmt.targets, branch, loops)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                handle_assign(stmt, stmt.value, [stmt.target], branch, loops)
+            elif isinstance(stmt, ast.If):
+                scan_expr(stmt.test, branch, loops)
+                eq = _eq_condition(stmt.test)
+                visit(stmt.body, branch + ((id(stmt), 0, eq),), loops)
+                visit(stmt.orelse, branch + ((id(stmt), 1, None),), loops)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                scan_expr(stmt.iter, branch, loops)
+                visit(stmt.body, branch, loops + (id(stmt),))
+                visit(stmt.orelse, branch, loops)
+            elif isinstance(stmt, ast.While):
+                scan_expr(stmt.test, branch, loops + (id(stmt),))
+                visit(stmt.body, branch, loops + (id(stmt),))
+                visit(stmt.orelse, branch, loops)
+            elif isinstance(stmt, ast.Try):
+                visit(stmt.body, branch + ((id(stmt), 0, None),), loops)
+                for h_i, handler in enumerate(stmt.handlers, 1):
+                    arm = branch + ((id(stmt), h_i, None),)
+                    visit(handler.body, arm, loops)
+                visit(stmt.orelse, branch + ((id(stmt), 0, None),), loops)
+                visit(stmt.finalbody, branch, loops)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    scan_expr(item.context_expr, branch, loops)
+                visit(stmt.body, branch, loops)
+            else:
+                for child in ast.iter_child_nodes(stmt):
+                    if isinstance(child, SCOPE_TYPES + (ast.ClassDef,)):
+                        continue
+                    if isinstance(child, (ast.expr, ast.stmt)):
+                        scan_expr(child, branch, loops)
+
+    if isinstance(scope, ast.Lambda):
+        scan_expr(scope.body, (), ())
+    else:
+        visit(scope.body, (), ())
+
+
+def _rl004_fold_in_constants(ctx: ModuleContext, scope: ast.AST):
+    # same base expression + same integer constant at two different call
+    # sites in one scope => two "derived" streams that are identical
+    sites: Dict[Tuple[str, int], List[ast.Call]] = {}
+    for node in scope_walk(scope):
+        if not isinstance(node, ast.Call) or _key_call_kind(node) != "fold_in":
+            continue
+        args = list(call_args(node))
+        has_const = (
+            len(args) >= 2
+            and isinstance(args[1], ast.Constant)
+            and isinstance(args[1].value, int)
+        )
+        if has_const:
+            base = ast.dump(args[0])
+            sites.setdefault((base, args[1].value), []).append(node)
+    for (_, const), calls in sites.items():
+        if len(calls) > 1:
+            calls.sort(key=lambda c: c.lineno)
+            for call in calls[1:]:
+                ctx.add(
+                    call,
+                    "RL004",
+                    f"fold_in with constant {const} collides with the same "
+                    f"derivation at line {calls[0].lineno} — the two "
+                    "streams are identical; use distinct constants",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RL005 — state_dict completeness
+
+
+_MUTABLE_CTORS = frozenset(
+    "list dict set deque defaultdict OrderedDict Counter "
+    "RandomState default_rng".split()
+)
+
+_MUTABLE_DISPLAYS = (
+    ast.List,
+    ast.Dict,
+    ast.Set,
+    ast.ListComp,
+    ast.DictComp,
+    ast.SetComp,
+)
+
+
+def _mutable_initializer(e: ast.AST) -> bool:
+    if isinstance(e, _MUTABLE_DISPLAYS):
+        return True
+    if isinstance(e, ast.Call):
+        return last_seg(dotted(e.func)) in _MUTABLE_CTORS
+    return False
+
+
+def rl005(ctx: ModuleContext):
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        methods = {n.name: n for n in node.body if isinstance(n, ast.FunctionDef)}
+        init = methods.get("__init__")
+        state_dict = methods.get("state_dict")
+        if init is None or state_dict is None:
+            continue
+
+        # mutable attrs assigned in __init__
+        assigned: Dict[str, ast.AST] = {}
+        for sub in ast.walk(init):
+            targets: List[ast.AST] = []
+            value: Optional[ast.AST] = None
+            if isinstance(sub, ast.Assign):
+                targets, value = sub.targets, sub.value
+            elif isinstance(sub, ast.AnnAssign) and sub.value is not None:
+                targets, value = [sub.target], sub.value
+            for tgt in targets:
+                is_self_attr = (
+                    isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"
+                )
+                if is_self_attr and _mutable_initializer(value):
+                    assigned.setdefault(tgt.attr, sub)
+
+        # references inside state_dict: self.X attribute reads, or the
+        # attr name (with or without leading underscores) as a dict key
+        referenced: Set[str] = set()
+        for sub in ast.walk(state_dict):
+            is_self_attr = (
+                isinstance(sub, ast.Attribute)
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id == "self"
+            )
+            if is_self_attr:
+                referenced.add(sub.attr)
+            elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                referenced.add(sub.value)
+
+        for attr, site in sorted(assigned.items()):
+            if attr in referenced or attr.lstrip("_") in referenced:
+                continue
+            ctx.add(
+                site,
+                "RL005",
+                f"mutable attribute `self.{attr}` assigned in "
+                f"`{node.name}.__init__` is not referenced by state_dict — "
+                "a resumed run silently loses it; save it or mark "
+                "`# reprolint: exempt[RL005]` with a reason",
+            )
+
+
+# ---------------------------------------------------------------------------
+
+
+def check_module(tree: ast.Module, source: str, path: str) -> List[Finding]:
+    ctx = ModuleContext(tree, source, path)
+    rl001(ctx)
+    rl002(ctx)
+    rl003(ctx)
+    rl004(ctx)
+    rl005(ctx)
+    ctx.findings.sort(key=lambda f: (f.line, f.rule))
+    return ctx.findings
