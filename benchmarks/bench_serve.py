@@ -26,9 +26,19 @@ Gates (seed 0):
     (the "at fixed p95" framing: the 2x is not bought with queueing);
   - traces: engine trace count <= 1 (decode) + distinct prefill buckets.
 
+The PAGED arm (docs/serving.md §8) holds the simulated KV-memory budget
+FIXED — the dense cache's ``max_batch * max_seq`` tokens, carved into
+``page_size``-token pages — and serves the ROADMAP's "millions of
+users, one system prompt" mix (``generate_requests(shared_prefix=...)``)
+through the page table + prefix trie. Gates: >= ``GATE_CONCURRENCY``x
+the dense arm's peak admitted concurrency on the same schedule and
+budget, every paged completion bit-exact vs a SOLO replay on a dense
+single-slot oracle engine, and the trace count still == 1 + distinct
+prefill buckets. Emits BENCH_serve_paged.json.
+
 ``--smoke`` (CI): a shorter schedule, same gates (the clock is
 simulated, so shared-runner noise cannot flake them), plus the
-BENCH_serve.json artifact.
+BENCH_serve.json / BENCH_serve_paged.json artifacts.
 
     PYTHONPATH=src python benchmarks/bench_serve.py [--smoke]
 """
@@ -43,6 +53,15 @@ MAX_BATCH = 8
 MAX_SEQ = 256
 RATE_RPS = 150.0               # sustained load: keeps the slot cache busy
 GATE_SPEEDUP = 2.0
+
+PAGE_SIZE = 16                 # paged arm: same KV budget as dense,
+N_PAGES = MAX_BATCH * MAX_SEQ // PAGE_SIZE   # different carving (128)
+PAGED_MAX_BATCH = 64           # slots are host bookkeeping; PAGES bind
+PAGED_REQ = 48
+PAGED_SMOKE_REQ = 40           # still enough load to exceed 4x8 resident
+PAGED_RATE_RPS = 1500.0        # burst arrival: measures ADMISSION
+                               # capacity, not arrival spacing
+GATE_CONCURRENCY = 4.0
 
 
 def _tiny_cfg():
@@ -96,6 +115,106 @@ def run(n_req: int, seed: int = 0) -> Dict:
     }
 
 
+def run_paged(n_req: int, seed: int = 0) -> Dict:
+    """Paged vs dense at the SAME simulated KV-memory budget, plus a
+    per-request solo-replay exactness sweep."""
+    import jax
+    import numpy as np
+
+    from repro.core.simulation import ServeCostModel, generate_requests
+    from repro.models import transformer as tf
+    from repro.serving import ServeRequest, ServingEngine
+
+    cfg = _tiny_cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    # the "one system prompt" mix: 3 fixed 32-token prefixes over 75% of
+    # requests, short unique tails, moderate generations — sized so the
+    # page pool (not the slot count) is what bounds admission
+    reqs = generate_requests(
+        n_req, rate_rps=PAGED_RATE_RPS, vocab_size=cfg.vocab_size,
+        prompt_rng=(4, 12), gen_short=(4, 10), gen_long=(12, 24),
+        long_frac=0.3, shared_prefix=(3, 32, 0.75), seed=seed)
+    cost = ServeCostModel()
+
+    dense = ServingEngine(params, cfg, max_batch=MAX_BATCH,
+                          max_seq=MAX_SEQ)
+    ds = dense.run_simulated(reqs, cost)
+    paged = ServingEngine(params, cfg, max_batch=PAGED_MAX_BATCH,
+                          max_seq=MAX_SEQ, page_size=PAGE_SIZE,
+                          n_pages=N_PAGES)
+    ps = paged.run_simulated(reqs, cost)
+    assert ds.n_requests == ps.n_requests == n_req
+
+    # every paged completion must be bit-exact vs a SOLO replay under a
+    # single-slot DENSE oracle — one request alone in the engine, no
+    # paging, no co-batching, no sharing
+    oracle = ServingEngine(params, cfg, max_batch=1, max_seq=MAX_SEQ)
+    exact = 0
+    for c in sorted(ps.completions, key=lambda c: c.rid):
+        req = next(r for r in reqs if r.rid == c.rid)
+        solo = oracle.run_closed_loop(
+            [ServeRequest(rid=c.rid, prompt=req.prompt,
+                          max_new=req.max_new)])
+        if np.array_equal(solo.completions[0].tokens, c.tokens):
+            exact += 1
+    budget_tokens = MAX_BATCH * MAX_SEQ
+    assert paged.n_pages * paged.page_size == budget_tokens
+    return {
+        "n_requests": n_req,
+        "kv_budget_tokens": budget_tokens,
+        "page_size": PAGE_SIZE,
+        "n_pages": N_PAGES,
+        "dense": {"tokens_per_s": ds.tokens_per_s,
+                  "makespan_s": ds.makespan,
+                  "p95_latency_s": ds.p95_latency,
+                  "concurrency_peak": ds.concurrency_peak,
+                  "queue_peak": ds.queue_peak},
+        "paged": {"tokens_per_s": ps.tokens_per_s,
+                  "makespan_s": ps.makespan,
+                  "p95_latency_s": ps.p95_latency,
+                  "concurrency_peak": ps.concurrency_peak,
+                  "queue_peak": ps.queue_peak,
+                  "pages_peak": ps.pages_peak,
+                  "prefix_hits": ps.prefix_hits,
+                  "reused_tokens": ps.reused_tokens,
+                  "trace_count": ps.trace_count,
+                  "buckets": [list(b) for b in paged.buckets_seen]},
+        "concurrency_ratio": ps.concurrency_peak
+        / max(ds.concurrency_peak, 1),
+        "throughput_ratio": ps.tokens_per_s / ds.tokens_per_s,
+        "solo_exact": exact,
+    }
+
+
+def check_and_report_paged(out: Dict) -> None:
+    d, p = out["dense"], out["paged"]
+    print(f"paged arm: {out['n_requests']} requests, KV budget "
+          f"{out['kv_budget_tokens']} tokens "
+          f"({out['n_pages']} pages x {out['page_size']})")
+    print(f"   dense: {d['tokens_per_s']:8.1f} tok/s  "
+          f"p95={d['p95_latency_s']:.3f}s  concurrency peak "
+          f"{d['concurrency_peak']}  queue peak {d['queue_peak']}")
+    print(f"   paged: {p['tokens_per_s']:8.1f} tok/s  "
+          f"p95={p['p95_latency_s']:.3f}s  concurrency peak "
+          f"{p['concurrency_peak']}  pages peak {p['pages_peak']}  "
+          f"prefix hits {p['prefix_hits']} "
+          f"({p['reused_tokens']} tokens reused)")
+    assert out["concurrency_ratio"] >= GATE_CONCURRENCY, (
+        f"paged concurrency {out['concurrency_ratio']:.2f}x < "
+        f"{GATE_CONCURRENCY}x dense at the same KV budget")
+    assert out["solo_exact"] == out["n_requests"], (
+        f"only {out['solo_exact']}/{out['n_requests']} paged completions "
+        f"bit-exact vs solo replay")
+    assert p["trace_count"] == 1 + len(p["buckets"]), (
+        f"{p['trace_count']} traces != 1 + {len(p['buckets'])} buckets")
+    print(f"OK: paged serves {out['concurrency_ratio']:.1f}x the "
+          f"concurrent requests at the same memory "
+          f"({out['throughput_ratio']:.2f}x tokens/s), "
+          f"{out['solo_exact']}/{out['n_requests']} bit-exact vs solo, "
+          f"{p['trace_count']} traces over {len(p['buckets'])} buckets "
+          f"(gate {GATE_CONCURRENCY}x)")
+
+
 def check_and_report(out: Dict) -> None:
     c, s = out["continuous"], out["static"]
     print(f"requests={out['n_requests']} gen_tokens={out['gen_tokens']}")
@@ -130,6 +249,10 @@ def main(argv: List[str]) -> None:
     # leaves its artifact to diagnose from
     emit_bench_json("serve", out)
     check_and_report(out)
+    paged = run_paged(PAGED_SMOKE_REQ if smoke else PAGED_REQ)
+    paged["mode"] = "smoke" if smoke else "full"
+    emit_bench_json("serve_paged", paged)
+    check_and_report_paged(paged)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,15 @@ HEADLINES = {
         ("continuous.p95_latency_s", "lower", None),
         ("continuous.trace_count", "lower", None),
     ],
+    "serve_paged": [
+        # admitted concurrency at a FIXED simulated KV-memory budget —
+        # the paged cache's headline (docs/serving.md §8)
+        ("concurrency_ratio", "higher", None),
+        ("throughput_ratio", "higher", None),
+        ("paged.tokens_per_s", "higher", None),
+        ("paged.trace_count", "lower", None),
+        ("paged.reused_tokens", "higher", None),
+    ],
     "train_serve": [
         ("throughput_ratio", "higher", None),
         ("swap.tokens_per_s", "higher", None),

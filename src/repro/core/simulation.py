@@ -427,6 +427,17 @@ class ServeCostModel:
     def decode_time(self, batch: int) -> float:
         return self.step_overhead + self.decode_row * batch
 
+    def decode_time_paged(self, page_reads: int, pages_per_row: int
+                          ) -> float:
+        """Decode charge for the PAGED engine: proportional to the KV
+        pages actually read (decode is memory-bound, and a page table
+        streams only live pages — the dense cache reads every row's full
+        ``max_seq`` window regardless). Calibrated so a full dense batch
+        (``max_batch * pages_per_row`` page reads) costs exactly
+        ``decode_time(max_batch)`` — same hardware, different residency."""
+        return self.step_overhead + self.decode_row * page_reads \
+            / max(pages_per_row, 1)
+
     def swap_time(self) -> float:
         return self.swap_overhead
 
@@ -441,6 +452,7 @@ def generate_requests(n: int, *, rate_rps: float = 60.0,
                           WORKSTATION, LAPTOP, PHONE),
                       profile_weights: Tuple[float, ...] = (0.35, 0.4, 0.25),
                       burst: Optional[Tuple[float, float, float]] = None,
+                      shared_prefix: Optional[Tuple[int, int, float]] = None,
                       seed: int = 0) -> List["Any"]:
     """Seeded open-loop request schedule: Poisson arrivals at ``rate_rps``,
     uniform prompt lengths, a short/long generation mixture (the heavy
@@ -452,12 +464,28 @@ def generate_requests(n: int, *, rate_rps: float = 60.0,
     window: arrivals landing inside ``[start, start+duration)`` come at
     ``rate_multiplier x rate_rps`` (the inter-arrival scale flips based
     on the CURRENT clock, so the schedule stays a single seeded stream
-    and ``burst=None`` reproduces the historical one bit-exactly)."""
+    and ``burst=None`` reproduces the historical one bit-exactly).
+
+    ``shared_prefix=(n_prefixes, prefix_len, frac)`` models the
+    "millions of users, one system prompt" workload (docs/serving.md
+    §8): a pool of ``n_prefixes`` fixed ``prefix_len``-token system
+    prompts is drawn once, and each request independently prepends one
+    of them with probability ``frac`` (its own tail stays unique). All
+    prefix decisions come from a SEPARATE derived RandomState, so
+    ``shared_prefix=None`` reproduces the historical stream bit-exactly
+    — the same contract as ``burst``."""
     from repro.serving.engine import ServeRequest
 
     rng = np.random.RandomState(seed)
     w = np.asarray(profile_weights, float)
     w = w / w.sum()
+    prefixes: List[np.ndarray] = []
+    prng = None
+    if shared_prefix is not None:
+        n_pref, pref_len, pref_frac = shared_prefix
+        prng = np.random.RandomState(seed + 100003)
+        prefixes = [prng.randint(0, vocab_size, size=int(pref_len)).astype(
+            np.int32) for _ in range(int(n_pref))]
     clock = 0.0
     out: List[ServeRequest] = []
     for rid in range(n):
@@ -472,9 +500,12 @@ def generate_requests(n: int, *, rate_rps: float = 60.0,
             g = int(rng.randint(gen_short[0], gen_short[1] + 1))
         prof = profiles[int(rng.choice(len(profiles), p=w))]
         lat = prof.latency_mean * math.exp(prof.latency_jitter * rng.randn())
+        prompt = rng.randint(0, vocab_size, size=p).astype(np.int32)
+        if prefixes and prng.rand() < pref_frac:
+            prompt = np.concatenate(
+                [prefixes[int(prng.randint(len(prefixes)))], prompt])
         out.append(ServeRequest(
-            rid=rid, prompt=rng.randint(0, vocab_size, size=p).astype(
-                np.int32),
+            rid=rid, prompt=prompt,
             max_new=g, arrival=clock, client_latency=float(lat)))
     return out
 

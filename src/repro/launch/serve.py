@@ -16,8 +16,11 @@ mid-flight without retracing, because step fns are keyed on power-of-two
 
 ``--simulate`` times the run on the discrete-event ``ServeCostModel``
 clock (deterministic; what bench_serve.py gates); the default measures
-real wall-clock. ``serve_batch`` below is the one-batch-at-a-time
-reference path the engine is benchmarked against.
+real wall-clock. ``--page-size`` switches the KV cache to the PAGED
+pool with cross-request prefix reuse (docs/serving.md §8) —
+``--shared-prefix N`` generates the matching system-prompt-heavy
+workload. ``serve_batch`` below is the one-batch-at-a-time reference
+path the engine is benchmarked against.
 """
 from __future__ import annotations
 
@@ -113,6 +116,21 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples with per-request keys")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help=">0 enables the PAGED KV cache: fixed-size "
+                         "pages in one pooled buffer with cross-request "
+                         "prefix reuse (docs/serving.md §8); must divide "
+                         "max_seq. 0 = dense slot cache")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="with --page-size: pool size in pages (default "
+                         "max_batch * max_seq / page_size — dense parity)")
+    ap.add_argument("--no-prefix-reuse", action="store_true",
+                    help="with --page-size: disable the prefix trie "
+                         "(pure paging, no cross-request sharing)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend one of 3 fixed system prompts of this "
+                         "many tokens to ~70%% of requests (the "
+                         "'millions of users, one system prompt' mix)")
     ap.add_argument("--simulate", action="store_true",
                     help="discrete-event clock instead of wall-clock")
     ap.add_argument("--swap-every", type=float, default=0.0,
@@ -148,16 +166,27 @@ def main(argv=None):
     g_long_hi = max(2, max_seq // 2)
     g_long_lo = max(1, max_seq // 4)
     p_hi = max(1, min(max(8, max_seq // 8), max_seq - g_long_hi))
+    shared = None
+    if args.shared_prefix > 0:
+        # keep prefix + tail + generation within max_seq
+        g_long_hi = min(g_long_hi, max(1, (max_seq - args.shared_prefix
+                                           - p_hi) // 2))
+        g_long_lo = min(g_long_lo, g_long_hi)
+        shared = (3, args.shared_prefix, 0.7)
     reqs = generate_requests(
         args.requests, rate_rps=args.rate, vocab_size=cfg.vocab_size,
         prompt_rng=(min(4, p_hi), p_hi),
         gen_short=(1, min(12, g_long_lo)),
         gen_long=(g_long_lo, g_long_hi),
+        shared_prefix=shared,
         seed=args.seed + 1)
     engine = ServingEngine(params, cfg, max_batch=args.max_batch,
                            max_seq=max_seq, prompt_cap=args.prompt_cap,
                            temperature=args.temperature, top_k=args.top_k,
-                           sample_seed=args.seed)
+                           sample_seed=args.seed,
+                           page_size=args.page_size or None,
+                           n_pages=args.pages or None,
+                           prefix_reuse=not args.no_prefix_reuse)
     if args.simulate:
         swaps = []
         if args.swap_every > 0:
@@ -180,7 +209,13 @@ def main(argv=None):
     print(f"engine: {stats.engine_steps} steps, "
           f"{stats.decode_rows_live}/{stats.decode_rows_total} live decode "
           f"rows, {stats.trace_count} traces over buckets "
-          f"{engine.buckets_seen}")
+          f"{engine.buckets_seen}, peak concurrency "
+          f"{stats.concurrency_peak}")
+    if engine.paged:
+        print(f"paged: {engine.n_pages} pages x {engine.page_size} tok, "
+              f"peak resident {stats.pages_peak}, prefix hits "
+              f"{stats.prefix_hits} ({stats.reused_tokens} tokens never "
+              f"re-prefilled), {engine.trie_pages} pages cached for reuse")
     if args.simulate:
         from repro.launch.train_serve import format_version_histogram
         print(f"served version histogram ({stats.swap_count} in-flight "

@@ -116,7 +116,10 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
                     publish_filter=None, optimizer=None,
                     max_queue: Optional[int] = None,
                     shed_policy: str = "reject",
-                    admission_deadline: Optional[float] = None
+                    admission_deadline: Optional[float] = None,
+                    page_size: Optional[int] = None,
+                    n_pages: Optional[int] = None,
+                    prefix_reuse: bool = True
                     ) -> Dict[str, Any]:
     """Drive ``iterations`` of elastic training and the serving engine on
     ONE discrete-event clock, hot-swapping published params in-flight.
@@ -176,7 +179,9 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
                            sample_seed=seed,
                            start_version=start_version,
                            max_queue=max_queue, shed_policy=shed_policy,
-                           admission_deadline=admission_deadline)
+                           admission_deadline=admission_deadline,
+                           page_size=page_size, n_pages=n_pages,
+                           prefix_reuse=prefix_reuse)
     versions[int(start_version)] = engine_params
     session = SimulatedServeSession(engine, cost, requests)
     session_box.append(session)
@@ -260,6 +265,11 @@ def main(argv=None):
                     choices=("reject", "drop_oldest"))
     ap.add_argument("--admission-deadline", type=float, default=None,
                     help="shed queued requests waiting longer than this")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help=">0: serve from the PAGED KV cache with "
+                         "version-keyed prefix reuse (docs/serving.md §8)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="with --page-size: pool size in pages")
     ap.add_argument("--snapshot-out", default=None,
                     help="save the final TrainState here")
     ap.add_argument("--from-snapshot", default=None,
@@ -316,7 +326,8 @@ def main(argv=None):
         engine_params=engine_params, start_version=start_version,
         resume_state=resume_state, guardrails=guardrails, canary=canary,
         max_queue=args.max_queue, shed_policy=args.shed_policy,
-        admission_deadline=args.admission_deadline)
+        admission_deadline=args.admission_deadline,
+        page_size=args.page_size or None, n_pages=args.pages or None)
 
     logs, stats, engine = out["logs"], out["stats"], out["engine"]
     losses = [lg.loss for lg in logs if lg.loss == lg.loss]
@@ -331,6 +342,10 @@ def main(argv=None):
           f"prefill chunks, {stats.decode_dispatches} decode dispatches, "
           f"{stats.swap_count} swaps, {stats.trace_count} traces over "
           f"buckets {engine.buckets_seen}")
+    if engine.paged:
+        print(f"paged: {engine.n_pages} pages x {engine.page_size} tok, "
+              f"peak resident {stats.pages_peak}, prefix hits "
+              f"{stats.prefix_hits} ({stats.reused_tokens} reused tokens)")
     if guardrails is not None:
         print(f"guardrails: {guardrails.n_quarantined} quarantined, "
               f"{guardrails.n_rollbacks} rollbacks, "

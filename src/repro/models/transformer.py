@@ -562,6 +562,78 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     return unembed(head, x), {"layers": new_layers}
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache views (repro.serving paged mode; docs/serving.md §8)
+# ---------------------------------------------------------------------------
+def gather_kv_pages(buf: jnp.ndarray, page_map: jnp.ndarray) -> jnp.ndarray:
+    """Assemble per-row LINEAR cache views from a pooled page buffer.
+
+    ``buf``: ``(L, n_pages, page_size, n_kv, head_dim)`` — ONE pool
+    shared by every request; ``page_map``: ``(B, P)`` int32, row b's
+    ordered page ids (entries ``>= n_pages`` mark unused tail pages —
+    the gather CLAMPS them onto the last real page, whose junk is masked
+    downstream exactly like a dense row's stale columns). Returns the
+    ``(L, B, P*page_size, n_kv, head_dim)`` view that ``prefill_chunk``
+    / ``decode_step_ragged`` consume unchanged — paging is invisible to
+    the attention math, which is the whole bit-exactness argument."""
+    ps = buf.shape[2]
+    B, P = page_map.shape
+    g = buf[:, jnp.clip(page_map, 0, buf.shape[1] - 1)]
+    return g.reshape(buf.shape[0], B, P * ps, *buf.shape[3:])
+
+
+def scatter_kv_pages(buf: jnp.ndarray, page_map: jnp.ndarray,
+                     view: jnp.ndarray) -> jnp.ndarray:
+    """Scatter a linear view back into the pooled page buffer. Entries of
+    ``page_map`` at or beyond ``n_pages`` are OOB and the write DROPS —
+    that single mechanism expresses every protection the pool needs:
+    padding rows, unused tail pages, and FROZEN shared pages (the engine
+    maps them all OOB in the write map, so copy-on-write needs no copy
+    and no mask arithmetic inside the trace)."""
+    ps = buf.shape[2]
+    B, P = page_map.shape
+    upd = view.reshape(view.shape[0], B, P, ps, *view.shape[3:])
+    return buf.at[:, page_map].set(upd.astype(buf.dtype))
+
+
+def prefill_chunk_paged(params: Params, cfg: ArchConfig,
+                        tokens: jnp.ndarray, off: jnp.ndarray,
+                        clen: jnp.ndarray, pool: Params,
+                        rmap: jnp.ndarray, wmap: jnp.ndarray,
+                        unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """``prefill_chunk`` through a page table: gather each row's pages
+    into a linear view (``rmap``), run the IDENTICAL chunk math, scatter
+    the updated view back through ``wmap`` (frozen/shared/padding
+    entries OOB -> dropped). With ``P*page_size == max_seq`` the inner
+    program is the same as the dense engine's, so outputs are bit-exact
+    vs the dense slot cache (tests/test_paging.py)."""
+    view = {"layers": {n: gather_kv_pages(pool["layers"][n], rmap)
+                       for n in ("k", "v")}}
+    logits, view = prefill_chunk(params, cfg, tokens, off, clen, view,
+                                 unroll=unroll)
+    new = {n: scatter_kv_pages(pool["layers"][n], wmap, view["layers"][n])
+           for n in ("k", "v")}
+    return logits, {"layers": new}
+
+
+def decode_step_ragged_paged(params: Params, cfg: ArchConfig,
+                             token: jnp.ndarray, pos: jnp.ndarray,
+                             pool: Params, live: jnp.ndarray,
+                             rmap: jnp.ndarray, wmap: jnp.ndarray,
+                             unroll: bool = False
+                             ) -> Tuple[jnp.ndarray, Params]:
+    """``decode_step_ragged`` through a page table (see
+    ``prefill_chunk_paged``). One fixed ``(B, P)`` map shape keeps this a
+    single trace regardless of how pages are laid out."""
+    view = {"layers": {n: gather_kv_pages(pool["layers"][n], rmap)
+                       for n in ("k", "v")}}
+    logits, view = decode_step_ragged(params, cfg, token, pos, view, live,
+                                      unroll=unroll)
+    new = {n: scatter_kv_pages(pool["layers"][n], wmap, view["layers"][n])
+           for n in ("k", "v")}
+    return logits, {"layers": new}
+
+
 def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
             prefix: Optional[jnp.ndarray] = None,
             frames: Optional[jnp.ndarray] = None,

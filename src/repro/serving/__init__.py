@@ -3,3 +3,4 @@ from repro.serving.engine import (Completion, ServeRequest,  # noqa: F401
                                   SimulatedServeSession, StepReport,
                                   pow2_bucket)
 from repro.serving.baseline import simulate_static_batches  # noqa: F401
+from repro.serving.paging import PagePool, PrefixTrie  # noqa: F401

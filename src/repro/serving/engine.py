@@ -1,10 +1,19 @@
 """Continuous-batching inference engine — MLitB's "prediction to the
 public at large" at framework scale (docs/serving.md).
 
-The engine owns ONE preallocated slot-based KV cache of fixed
-``(max_batch, max_seq)`` shape and interleaves prefill and decode over it
-so requests of arbitrary prompt/generation length join and leave
-mid-flight without retracing:
+The engine owns ONE preallocated KV buffer and interleaves prefill and
+decode over it so requests of arbitrary prompt/generation length join
+and leave mid-flight without retracing. The buffer comes in two
+layouts: the classic DENSE slot cache of fixed ``(max_batch, max_seq)``
+shape (the reference/oracle path), and the PAGED pool (``page_size``
+set): fixed-size KV pages in one ``(n_layers, n_pages, page_size, ...)``
+buffer with per-slot page lists on the host, so memory scales with the
+tokens actually resident instead of ``max_batch * max_seq`` — plus
+cross-request PREFIX REUSE: a radix trie keyed on (param version,
+prompt-token pages) lets requests sharing a prompt prefix prefill it
+once and fork copy-on-write (shared pages are frozen — mapped
+out-of-bounds in every write map — so a fork never copies and can never
+mutate its parent's pages). See docs/serving.md §8.
 
   - **admission queue**: submitted requests wait FIFO until a slot frees;
   - **chunked prefill**: each engine step feeds every slot that still has
@@ -70,7 +79,10 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.layers import dtype_of
-from repro.train.step import build_decode_step, build_prefill_chunk_step
+from repro.serving.paging import PagePool, PrefixTrie
+from repro.train.step import (build_decode_step, build_paged_decode_step,
+                              build_paged_prefill_chunk_step,
+                              build_prefill_chunk_step)
 
 PyTree = Any
 
@@ -129,6 +141,11 @@ class StepReport:
     decode_batch: int                           # max_batch, or 0 if idle
     completed: List[Completion] = field(default_factory=list)
     shed: List[Shed] = field(default_factory=list)  # deadline sheds this step
+    decode_pages: List[int] = field(default_factory=list)
+    # ^ paged mode only: KV pages READ per decode dispatch (sum over the
+    #   dispatch's live rows of pos//page_size + 1) — what a paged decode
+    #   actually streams, so the cost model can charge per live page
+    #   instead of per padded row
 
 
 @dataclass
@@ -153,6 +170,11 @@ class ServeStats:
     n_shed: int = 0                 # requests shed (never silently lost)
     queue_peak: int = 0             # deepest the admission queue got
     shed: List[Shed] = field(default_factory=list)
+    concurrency_peak: int = 0       # most slots occupied at once (the
+                                    # admitted-concurrency headline)
+    pages_peak: int = 0             # paged: peak pages resident (slots+trie)
+    prefix_hits: int = 0            # paged: admissions that reused pages
+    reused_tokens: int = 0          # paged: prompt tokens NOT re-prefilled
 
 
 @dataclass
@@ -161,6 +183,9 @@ class _SlotState:
     gen: List[int]
     ver: int                        # pinned param version
     filled: int = 0                 # prompt tokens prefilled so far
+    pages: List[int] = field(default_factory=list)  # paged: ordered page ids
+    n_shared: int = 0               # paged: leading pages read from the trie
+    inserted: int = 0               # paged: prompt pages published so far
 
 
 class ServingEngine:
@@ -175,7 +200,10 @@ class ServingEngine:
                  sample_seed: int = 0, start_version: int = 0,
                  max_queue: Optional[int] = None,
                  shed_policy: str = "reject",
-                 admission_deadline: Optional[float] = None):
+                 admission_deadline: Optional[float] = None,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 prefix_reuse: bool = True):
         if cfg.arch_type not in ("dense", "moe"):
             raise ValueError(
                 f"ServingEngine supports attention-cached LM archs "
@@ -216,16 +244,54 @@ class ServingEngine:
         self._sample_seed = int(sample_seed)
         self._unroll = unroll
         # the version ring: pinned live versions + the latest. A swap
-        # installs a new latest; a version retires when its last pinned
-        # slot completes, so the ring never exceeds max_batch + 1 trees.
-        # ``start_version`` seeds the numbering when the initial params
-        # come from a training checkpoint (version == training step).
+        # installs a new latest; a version retires the moment its last
+        # pinned slot completes (``_gc_versions`` runs from BOTH
+        # ``swap_params`` and ``_finish``), so the ring never exceeds
+        # max_batch + 1 trees and never waits for the next publish to
+        # release a retired tree. ``start_version`` seeds the numbering
+        # when the initial params come from a training checkpoint
+        # (version == training step).
         self.version = int(start_version)
         self._versions: Dict[int, PyTree] = {self.version: params}
         self.swap_count = 0
+        # KV layout: dense slot cache (reference), or paged pool when
+        # ``page_size`` is set (docs/serving.md §8). max_seq must divide
+        # into whole pages so each row's gathered page view has EXACTLY
+        # the dense row shape — that makes the inner prefill/decode
+        # program identical and the paged engine bit-exact vs dense.
+        self.paged = page_size is not None
         adt = dtype_of(cfg.activ_dtype)
-        shape = (cfg.n_layers, self.max_batch, self.max_seq,
-                 cfg.n_kv_heads, cfg.head_dim)
+        if self.paged:
+            self.page_size = int(page_size)
+            if not 1 <= self.page_size <= self.max_seq:
+                raise ValueError(f"page_size={self.page_size} must lie in "
+                                 f"[1, max_seq={self.max_seq}]")
+            if self.max_seq % self.page_size:
+                raise ValueError(
+                    f"max_seq={self.max_seq} must be a multiple of "
+                    f"page_size={self.page_size} (whole pages per row)")
+            self.pages_per_slot = self.max_seq // self.page_size
+            self.n_pages = int(n_pages) if n_pages is not None \
+                else self.max_batch * self.pages_per_slot
+            if self.n_pages < 1:
+                raise ValueError(f"n_pages={self.n_pages} must be >= 1")
+            self._pool: Optional[PagePool] = PagePool(self.n_pages,
+                                                      self.page_size)
+            self._trie: Optional[PrefixTrie] = PrefixTrie(self.page_size)
+            self.prefix_reuse = bool(prefix_reuse)
+            shape = (cfg.n_layers, self.n_pages, self.page_size,
+                     cfg.n_kv_heads, cfg.head_dim)
+        else:
+            if n_pages is not None:
+                raise ValueError("n_pages requires page_size (paged mode)")
+            self.page_size = None
+            self.pages_per_slot = 0
+            self.n_pages = 0
+            self._pool = None
+            self._trie = None
+            self.prefix_reuse = False
+            shape = (cfg.n_layers, self.max_batch, self.max_seq,
+                     cfg.n_kv_heads, cfg.head_dim)
         self.cache: PyTree = {"layers": {"k": jnp.zeros(shape, adt),
                                          "v": jnp.zeros(shape, adt)}}
         self._slots: List[Optional[_SlotState]] = [None] * self.max_batch
@@ -256,6 +322,10 @@ class ServingEngine:
         self.decode_dispatches = 0
         self.decode_rows_live = 0
         self.decode_rows_total = 0
+        self.concurrency_peak = 0
+        self.pages_peak = 0
+        self.prefix_hits = 0
+        self.reused_tokens = 0
 
     # ------------------------------------------------------------------
     @property
@@ -288,14 +358,41 @@ class ServingEngine:
         """Versions currently held in the ring (pinned and/or latest)."""
         return sorted(self._versions)
 
+    @property
+    def pages_free(self) -> int:
+        """Paged mode: pages not held by any slot or the prefix trie."""
+        return self._pool.n_free if self.paged else 0
+
+    @property
+    def trie_pages(self) -> int:
+        """Paged mode: pages held (only) as reusable prefix KV."""
+        return self._trie.n_pages_held if self.paged else 0
+
+    def _pages_needed(self, prompt_len: int, max_new: int) -> int:
+        # positions ever WRITTEN: prompt [0, plen) by chunks, then decode
+        # at plen .. plen+max_new-2 (the last sampled token is returned,
+        # never cached) -> plen + max_new - 1 slots of KV
+        return -(-(prompt_len + max_new - 1) // self.page_size)
+
+    def flush_prefix_cache(self) -> int:
+        """Drop every trie-held page (all versions); returns pages
+        released. Slot-held pages are untouched — in-flight requests
+        keep reading the prefixes they forked from."""
+        return self._trie.drop_all(self._pool) if self.paged else 0
+
     # ------------------------------------------------------------------
-    def submit(self, req: ServeRequest, now: float = 0.0) -> bool:
+    def submit(self, req: ServeRequest, now: Optional[float] = None) -> bool:
         """Enqueue ``req``. Returns True when admitted to the queue,
         False when shed by backpressure (the shed is recorded in
-        ``shed_log`` — refusals are reported, never silent). A duplicate
-        rid (already queued or in flight) is a protocol error — it would
+        ``shed_log`` — refusals are reported, never silent). ``now`` is
+        the submitting clock and stamps any shed this call causes; when
+        omitted it defaults to ``req.arrival`` — NOT zero — so shed
+        timestamps stay monotone with the schedule even for callers
+        without a clock (tests/test_backpressure.py). A duplicate rid
+        (already queued or in flight) is a protocol error — it would
         corrupt completion bookkeeping AND the sampling key stream (keys
         fold in the rid) — and raises ``ValueError``."""
+        t = float(now) if now is not None else float(req.arrival)
         p = int(np.asarray(req.prompt).size)
         if p < 1 or req.max_new < 1:
             raise ValueError(f"request {req.rid}: empty prompt or max_new")
@@ -303,17 +400,22 @@ class ServingEngine:
             raise ValueError(
                 f"request {req.rid}: prompt({p}) + max_new({req.max_new}) "
                 f"exceeds max_seq={self.max_seq}")
+        if self.paged and self._pages_needed(p, req.max_new) > self.n_pages:
+            raise ValueError(
+                f"request {req.rid}: needs "
+                f"{self._pages_needed(p, req.max_new)} pages, pool has "
+                f"{self.n_pages} — can never be admitted")
         if req.rid in self._rids_active:
             raise ValueError(
                 f"request {req.rid}: duplicate rid already queued or in "
                 f"flight")
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
             if self.shed_policy == "reject":
-                self.shed_log.append(Shed(req.rid, "queue_full", float(now)))
+                self.shed_log.append(Shed(req.rid, "queue_full", t))
                 return False
             victim = self._queue.popleft()       # drop_oldest: the victim
             self._rids_active.discard(victim.rid)  # is the stalest wait
-            self.shed_log.append(Shed(victim.rid, "displaced", float(now)))
+            self.shed_log.append(Shed(victim.rid, "displaced", t))
         self._queue.append(req)
         self._rids_active.add(req.rid)
         self.queue_peak = max(self.queue_peak, len(self._queue))
@@ -354,10 +456,18 @@ class ServingEngine:
         return self.version
 
     def _gc_versions(self) -> None:
+        """Retire ring versions with no pinned slot (runs on every swap
+        AND every slot completion — a dead tree is released immediately,
+        never held until the next publish). In paged mode a retired
+        version also drops its whole prefix-trie generation: KV pages
+        are only valid under the version that wrote them, and once the
+        ring retires ``v`` no future admission can pin ``v`` again."""
         pinned = {st.ver for st in self._slots if st is not None}
         pinned.add(self.version)
         for v in [v for v in self._versions if v not in pinned]:
             del self._versions[v]
+            if self.paged:
+                self._trie.drop_version(v, self._pool)
 
     # ------------------------------------------------------------------
     def _sample(self, logits: jnp.ndarray, rids: jnp.ndarray,
@@ -371,8 +481,15 @@ class ServingEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         lg = logits.astype(jnp.float32) / self._temperature
         if self._top_k > 0 and self._top_k < lg.shape[-1]:
-            kth = jax.lax.top_k(lg, self._top_k)[0][:, -1:]
-            lg = jnp.where(lg < kth, NEG_INF, lg)
+            # keep EXACTLY k candidates by scattering top_k's own picks:
+            # masking with ``lg < kth`` would keep every logit TIED with
+            # the k-th and silently widen the support past k. top_k
+            # breaks ties by lowest index (stable descending sort), so
+            # the kept set is deterministic and top_k=1 is greedy-equal
+            # even when the argmax value repeats.
+            vals, idx = jax.lax.top_k(lg, self._top_k)
+            rows = jnp.arange(lg.shape[0], dtype=jnp.int32)[:, None]
+            lg = jnp.full_like(lg, NEG_INF).at[rows, idx].set(vals)
         base = jax.random.PRNGKey(self._sample_seed)
 
         def draw(rid, g, row):
@@ -384,6 +501,22 @@ class ServingEngine:
     def _get_chunk_fn(self, bcap: int, ccap: int):
         fn = self._chunk_fns.get((bcap, ccap))
         if fn is not None:
+            return fn
+        if self.paged:
+            pstep = build_paged_prefill_chunk_step(self.cfg,
+                                                   unroll=self._unroll)
+
+            def chunk_paged(params, tokens, off, clen, rids, rmap, wmap,
+                            pool):
+                self._trace_count += 1      # trace-time only side effect
+                logits, pool = pstep(params, tokens, off, clen, pool,
+                                     rmap, wmap)
+                nxt = self._sample(logits[:, -1, :], rids,
+                                   jnp.zeros_like(rids))
+                return nxt, pool
+
+            fn = jax.jit(chunk_paged, donate_argnums=(7,))
+            self._chunk_fns[(bcap, ccap)] = fn
             return fn
         cstep = build_prefill_chunk_step(self.cfg, unroll=self._unroll)
         last = self.max_batch - 1
@@ -416,6 +549,19 @@ class ServingEngine:
     def _get_decode_fn(self):
         if self._decode_fn is not None:
             return self._decode_fn
+        if self.paged:
+            pstep = build_paged_decode_step(self.cfg, unroll=self._unroll)
+
+            def decode_paged(params, tok, pos, live, pool, rids, gidx,
+                             rmap, wmap):
+                self._trace_count += 1
+                logits, pool = pstep(params, tok, pos, pool, live, rmap,
+                                     wmap)
+                nxt = self._sample(logits[:, -1, :], rids, gidx)
+                return nxt, pool
+
+            self._decode_fn = jax.jit(decode_paged, donate_argnums=(4,))
+            return self._decode_fn
         dstep = build_decode_step(self.cfg, unroll=self._unroll, ragged=True)
 
         def decode_all_slots(params, tok, pos, live, cache, rids, gidx):
@@ -435,10 +581,99 @@ class ServingEngine:
         self._pos[s] = 0
         self._tok[s] = 0
         self._rids_active.discard(st.req.rid)
+        if self.paged:
+            for p in st.pages:          # drop the slot's reference; pages
+                self._pool.decref(p)    # the trie published stay resident
         self._gc_versions()
         return Completion(rid=st.req.rid, prompt_len=len(st.req.prompt),
                           tokens=np.asarray(st.gen, np.int32),
                           version=st.ver)
+
+    # -- paged-mode host bookkeeping -----------------------------------
+    def _plan_pages(self, req: ServeRequest
+                    ) -> Optional[Tuple[List[int], int]]:
+        """Admission-time page plan for ``req``: the longest reusable
+        prefix run from the trie (under the CURRENT version — what this
+        admission pins) plus freshly allocated pages for everything it
+        will write, evicting idle trie pages if the free list runs
+        short. Returns ``(pages, n_shared)`` or None when the pool
+        cannot satisfy the request yet (the caller stops admitting:
+        strict FIFO, the head of the line waits for pages). All-or-
+        nothing — a request never holds a partial allocation."""
+        plen = len(req.prompt)
+        shared: List[int] = []
+        if self.prefix_reuse:
+            # never reuse the page holding the prompt's LAST token: at
+            # least one real token must go through prefill so the final
+            # chunk's logits produce the first sampled token
+            shared = self._trie.lookup(self.version, req.prompt,
+                                       (plen - 1) // self.page_size)
+        for p in shared:                # pin before any eviction could
+            self._pool.incref(p)        # reap a ref==1 trie page
+        own_need = self._pages_needed(plen, req.max_new) - len(shared)
+        own = self._pool.alloc(own_need)
+        if own is None:
+            self._trie.evict_idle(self._pool, own_need - self._pool.n_free)
+            own = self._pool.alloc(own_need)
+        if own is None:
+            for p in shared:
+                self._pool.decref(p)
+            return None
+        if shared:
+            self.prefix_hits += 1
+            self.reused_tokens += len(shared) * self.page_size
+        return shared + own, len(shared)
+
+    def _chunk_page_maps(self, group: List[int], bcap: int
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """(read map, write map) for one prefill-chunk dispatch: row i of
+        the bucket maps slot ``group[i]``'s pages in order; every other
+        entry is OOB (== n_pages). The write map additionally OOBs
+        FROZEN pages — shared prefixes are read-only by construction."""
+        rmap = np.full((bcap, self.pages_per_slot), self.n_pages, np.int32)
+        wmap = np.full((bcap, self.pages_per_slot), self.n_pages, np.int32)
+        for i, s in enumerate(group):
+            st = self._slots[s]
+            for j, p in enumerate(st.pages):
+                rmap[i, j] = p
+                if not self._pool.frozen[p]:
+                    wmap[i, j] = p
+        return rmap, wmap
+
+    def _decode_page_maps(self, group: np.ndarray
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """(read map, write map) over ALL slots for one decode dispatch;
+        only rows in ``group`` (this dispatch's version) may write."""
+        rmap = np.full((self.max_batch, self.pages_per_slot), self.n_pages,
+                       np.int32)
+        wmap = np.full((self.max_batch, self.pages_per_slot), self.n_pages,
+                       np.int32)
+        for s in range(self.max_batch):
+            st = self._slots[s]
+            if st is None:
+                continue
+            for j, p in enumerate(st.pages):
+                rmap[s, j] = p
+                if group[s] and not self._pool.frozen[p]:
+                    wmap[s, j] = p
+        return rmap, wmap
+
+    def _publish_prompt_pages(self, st: _SlotState) -> None:
+        """Offer the slot's COMPLETED prompt pages to the prefix trie
+        (under the slot's pinned version — that's the tree the KV was
+        computed with). A published page is increfed by the trie and
+        FROZEN: it leaves every future write map, so later forks read it
+        copy-on-write. If an identical prompt raced us in, our copy just
+        stays private (refused insert)."""
+        plen = len(st.req.prompt)
+        n_done = min(st.filled // self.page_size, plen // self.page_size)
+        while st.inserted < n_done:
+            j = st.inserted
+            page = st.pages[j]
+            if self._trie.insert(st.ver, st.req.prompt, j, page):
+                self._pool.incref(page)
+                self._pool.frozen[page] = True
+            st.inserted += 1
 
     def _run_chunks(self, completed: List[Completion]
                     ) -> List[Tuple[int, int]]:
@@ -472,10 +707,19 @@ class ServingEngine:
                 slots[i] = s
                 rids[i] = st.req.rid % (2 ** 31)
             fn = self._get_chunk_fn(bcap, ccap)
-            nxt, self.cache = fn(self._versions[ver], jnp.asarray(tokens),
-                                 jnp.asarray(off), jnp.asarray(cl),
-                                 jnp.asarray(slots), jnp.asarray(rids),
-                                 self.cache)
+            if self.paged:
+                rmap, wmap = self._chunk_page_maps(group, bcap)
+                nxt, self.cache = fn(self._versions[ver],
+                                     jnp.asarray(tokens), jnp.asarray(off),
+                                     jnp.asarray(cl), jnp.asarray(rids),
+                                     jnp.asarray(rmap), jnp.asarray(wmap),
+                                     self.cache)
+            else:
+                nxt, self.cache = fn(self._versions[ver],
+                                     jnp.asarray(tokens),
+                                     jnp.asarray(off), jnp.asarray(cl),
+                                     jnp.asarray(slots), jnp.asarray(rids),
+                                     self.cache)
             nxt = np.asarray(nxt)
             self.prefill_tokens += bcap * ccap
             self.prefill_chunks += 1
@@ -484,6 +728,8 @@ class ServingEngine:
                 st = self._slots[s]
                 st.filled += clens[i]
                 self._pos[s] = st.filled
+                if self.paged and self.prefix_reuse:
+                    self._publish_prompt_pages(st)
                 if st.filled == len(st.req.prompt):
                     st.gen = [int(nxt[i])]
                     self._tok[s] = int(nxt[i])
@@ -523,16 +769,35 @@ class ServingEngine:
         free = [s for s in range(self.max_batch) if self._slots[s] is None]
         admitted = 0
         while self._queue and free:
-            req = self._queue.popleft()
+            req = self._queue[0]
+            if self.paged:
+                plan = self._plan_pages(req)
+                if plan is None:
+                    break               # strict FIFO: the head of the
+                                        # line waits for pages to free
+                pages, n_shared = plan
+                reused = n_shared * self.page_size
+            else:
+                pages, n_shared, reused = [], 0, 0
+            self._queue.popleft()
             s = free.pop(0)
-            self._slots[s] = _SlotState(req=req, gen=[], ver=self.version)
-            self._pos[s] = 0
+            self._slots[s] = _SlotState(req=req, gen=[], ver=self.version,
+                                        filled=reused, pages=pages,
+                                        n_shared=n_shared,
+                                        inserted=n_shared)
+            self._pos[s] = reused
             self._live[s] = False
             admitted += 1
+        self.concurrency_peak = max(
+            self.concurrency_peak,
+            sum(1 for st in self._slots if st is not None))
+        if self.paged:
+            self.pages_peak = max(self.pages_peak, self._pool.n_used)
 
         prefill_shapes = self._run_chunks(completed)
 
         dispatches = 0
+        decode_pages: List[int] = []
         if self._live.any():
             fn = self._get_decode_fn()
             rids = np.zeros(self.max_batch, np.int32)
@@ -547,11 +812,26 @@ class ServingEngine:
                 group = np.array([self._live[s]
                                   and self._slots[s].ver == ver
                                   for s in range(self.max_batch)], bool)
-                nxt, self.cache = fn(self._versions[ver],
-                                     jnp.asarray(self._tok[:, None]),
-                                     jnp.asarray(self._pos),
-                                     jnp.asarray(group), self.cache,
-                                     jnp.asarray(rids), jnp.asarray(gidx))
+                if self.paged:
+                    rmap, wmap = self._decode_page_maps(group)
+                    decode_pages.append(sum(
+                        int(self._pos[s]) // self.page_size + 1
+                        for s in range(self.max_batch) if group[s]))
+                    nxt, self.cache = fn(self._versions[ver],
+                                         jnp.asarray(self._tok[:, None]),
+                                         jnp.asarray(self._pos),
+                                         jnp.asarray(group), self.cache,
+                                         jnp.asarray(rids),
+                                         jnp.asarray(gidx),
+                                         jnp.asarray(rmap),
+                                         jnp.asarray(wmap))
+                else:
+                    nxt, self.cache = fn(self._versions[ver],
+                                         jnp.asarray(self._tok[:, None]),
+                                         jnp.asarray(self._pos),
+                                         jnp.asarray(group), self.cache,
+                                         jnp.asarray(rids),
+                                         jnp.asarray(gidx))
                 nxt = np.asarray(nxt)
                 dispatches += 1
                 self.decode_dispatches += 1
@@ -570,7 +850,7 @@ class ServingEngine:
         self.engine_steps += 1
         return StepReport(admitted, prefill_shapes, dispatches,
                           self.max_batch if dispatches else 0, completed,
-                          shed)
+                          shed, decode_pages)
 
     # ------------------------------------------------------------------
     @property
@@ -591,6 +871,10 @@ class ServingEngine:
         self.swap_count = 0
         self.shed_log = []
         self.queue_peak = 0
+        self.concurrency_peak = 0
+        self.pages_peak = 0
+        self.prefix_hits = 0
+        self.reused_tokens = 0
         self._rids_active = set()   # rids are scoped per run: a replay
                                     # reuses the same ids legitimately
 
@@ -616,7 +900,10 @@ class ServingEngine:
             decode_dispatches=self.decode_dispatches,
             swap_count=self.swap_count, versions_served=versions,
             n_shed=len(self.shed_log), queue_peak=self.queue_peak,
-            shed=list(self.shed_log))
+            shed=list(self.shed_log),
+            concurrency_peak=self.concurrency_peak,
+            pages_peak=self.pages_peak, prefix_hits=self.prefix_hits,
+            reused_tokens=self.reused_tokens)
 
     def run_simulated(self, requests: Sequence[ServeRequest],
                       cost: "Any",
@@ -640,8 +927,9 @@ class ServingEngine:
         deliberately non-simulated entry point, hence the RL002 exempt)."""
         self._begin_run()
         for r in sorted(requests, key=lambda r: r.rid):
-            self.submit(r)          # may shed under max_queue: the loop
-        t0 = time.perf_counter()    # below drains whatever was admitted
+            self.submit(r, now=0.0)  # closed loop: everything is offered
+                                     # at t=0, so sheds stamp t=0 too
+        t0 = time.perf_counter()    # drain whatever was admitted
         out: List[Completion] = []
         while self.has_work:
             rep = self.step()
@@ -719,8 +1007,15 @@ class SimulatedServeSession:
         dt = 0.0
         for shape in rep.prefill_shapes:
             dt += self.cost.prefill_time(*shape)
-        dt += rep.decode_dispatches \
-            * self.cost.decode_time(self.engine.max_batch)
+        paged_time = getattr(self.cost, "decode_time_paged", None)
+        if rep.decode_pages and paged_time is not None:
+            # paged engine: decode streams only the LIVE pages, which is
+            # the whole memory-bound win (core/simulation.ServeCostModel)
+            for pages in rep.decode_pages:
+                dt += paged_time(pages, self.engine.pages_per_slot)
+        else:
+            dt += rep.decode_dispatches \
+                * self.cost.decode_time(self.engine.max_batch)
         self.clock += dt
         for c in rep.completed:
             req = self._by_rid[c.rid]

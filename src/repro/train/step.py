@@ -94,6 +94,29 @@ def build_prefill_chunk_step(cfg: ArchConfig, unroll: bool = False):
     return prefill_chunk_step
 
 
+def build_paged_prefill_chunk_step(cfg: ArchConfig, unroll: bool = False):
+    """Chunked-prefill step fn over the serving engine's PAGED KV pool
+    (docs/serving.md §8): ``(params, tokens (B,C), off, clen, pool,
+    rmap (B,P), wmap (B,P)) -> (last-valid logits (B,1,V), pool)``. The
+    read map gathers each row's pages into a linear view, the chunk math
+    is ``tf.prefill_chunk`` UNCHANGED, and the write map scatters back —
+    OOB entries (padding rows, unused tails, frozen shared pages) drop."""
+    def paged_chunk_step(params, tokens, off, clen, pool, rmap, wmap):
+        return tf.prefill_chunk_paged(params, cfg, tokens, off, clen, pool,
+                                      rmap, wmap, unroll=unroll)
+    return paged_chunk_step
+
+
+def build_paged_decode_step(cfg: ArchConfig, unroll: bool = False):
+    """Ragged one-token decode over the PAGED KV pool: ``(params, token,
+    pos (B,), pool, live (B,), rmap (B,P), wmap (B,P))``. Fixed map
+    shapes keep this a single trace however pages are laid out."""
+    def paged_decode_step(params, token, pos, pool, live, rmap, wmap):
+        return tf.decode_step_ragged_paged(params, cfg, token, pos, pool,
+                                           live, rmap, wmap, unroll=unroll)
+    return paged_decode_step
+
+
 def build_decode_step(cfg: ArchConfig, unroll: bool = False,
                       ragged: bool = False):
     """Decode step fn. ``ragged=False`` (default): the classic lockstep

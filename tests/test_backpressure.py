@@ -173,3 +173,39 @@ def test_session_unbounded_queue_unchanged():
     stats = engine.run_simulated(reqs, ServeCostModel())
     assert stats.n_shed == 0 and len(stats.completions) == len(reqs)
     assert stats.queue_peak >= 1
+
+
+# ---------------------------------------------------------------------------
+# shed timestamps: stamped with the submitting clock, monotone with
+# the schedule — never t=0 for a request that arrived later
+# ---------------------------------------------------------------------------
+def test_shed_timestamps_monotone_on_simulated_clock():
+    reqs = generate_requests(
+        40, rate_rps=30.0, vocab_size=CFG.vocab_size, prompt_rng=(4, 20),
+        gen_short=(2, 6), gen_long=(8, 12), long_frac=0.3,
+        burst=(0.2, 0.5, 8.0), seed=9)
+    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=64,
+                           prompt_cap=16, max_queue=3,
+                           shed_policy="reject")
+    session = SimulatedServeSession(engine, ServeCostModel(), reqs)
+    session.drain()
+    sheds = session.stats().shed
+    assert len(sheds) > 1, "burst never overflowed the queue"
+    by_rid = {r.rid: r for r in reqs}
+    ts = [s.t for s in sheds]
+    assert ts == sorted(ts), "shed timestamps regressed"
+    for s in sheds:
+        # a queue_full shed is stamped with the session clock at submit
+        # time — never before the newcomer even arrived, and never the
+        # t=0 the historical bug stamped every session shed with
+        assert s.t >= by_rid[s.rid].arrival - 1e-9
+    assert max(ts) > 0.0
+
+
+def test_submit_without_now_stamps_request_arrival():
+    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
+                           max_queue=1, shed_policy="reject")
+    assert engine.submit(_req(0))
+    assert not engine.submit(_req(1, arrival=2.5))   # no now= given
+    (shed,) = engine.shed_log
+    assert (shed.rid, shed.reason, shed.t) == (1, "queue_full", 2.5)

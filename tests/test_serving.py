@@ -275,6 +275,45 @@ def test_top_k_one_matches_greedy_oracle():
         assert c.tokens.tolist() == oracle
 
 
+@pytest.mark.parametrize("cfg", [TINY_DENSE, TINY_MOE],
+                         ids=["dense", "moe"])
+def test_top_k_tied_logits_keep_exactly_k(cfg):
+    """Tied logits at the k-th value must NOT widen the support: the
+    mask keeps ``jax.lax.top_k``'s own picks (stable descending sort,
+    ties broken by LOWEST index), so a 3-way tie under top_k=2 samples
+    only the two lowest tied indices — a ``lg < kth`` threshold would
+    keep all three."""
+    engine = ServingEngine(_params(cfg), cfg, max_batch=2, max_seq=32,
+                           temperature=1.0, top_k=2, sample_seed=7)
+    logits = np.full((1, cfg.vocab_size), -5.0, np.float32)
+    logits[0, [3, 10, 17]] = 2.0            # 3-way tie for the top value
+    lg = jnp.asarray(logits)
+    _, idx = jax.lax.top_k(lg, 2)
+    assert idx[0].tolist() == [3, 10]       # the deterministic kept set
+    drawn = {int(engine._sample(lg, jnp.asarray([0], jnp.int32),
+                                jnp.asarray([g], jnp.int32))[0])
+             for g in range(64)}
+    assert drawn == {3, 10}, \
+        f"support {sorted(drawn)} != top_k's picks [3, 10]"
+
+
+def test_top_k_one_tied_argmax_matches_greedy():
+    """With the argmax value repeated, top_k=1 must still equal the
+    greedy path: argmax and top_k both resolve ties to the FIRST
+    occurrence, so the sampled stream is pinned to it."""
+    cfg = TINY_DENSE
+    engine = ServingEngine(_params(cfg), cfg, max_batch=2, max_seq=32,
+                           temperature=2.3, top_k=1, sample_seed=9)
+    logits = np.zeros((2, cfg.vocab_size), np.float32)
+    logits[0, [5, 20]] = 3.0                # tied argmax, row 0
+    logits[1, [0, 1, 60]] = 1.5             # 3-way tie incl. index 0
+    lg = jnp.asarray(logits)
+    for g in range(16):
+        tok = engine._sample(lg, jnp.asarray([0, 1], jnp.int32),
+                             jnp.asarray([g, g], jnp.int32))
+        assert tok.tolist() == np.argmax(logits, axis=-1).tolist() == [5, 0]
+
+
 def test_sampling_deterministic_solo_vs_cobatched():
     """A request's sampled stream depends only on (engine seed, rid,
     token index): co-batched and solo runs of the same engine config

@@ -77,6 +77,34 @@ def test_versions_retire_when_last_pinned_slot_completes():
     assert engine.live_versions == [1]         # v0 retired with its slot
 
 
+def test_version_retires_on_chunk_path_completion():
+    """Regression guard on the OTHER completion path: a max_new==1
+    request finishes inside the prefill-chunk step (its one token comes
+    from the final chunk's logits — no decode dispatch ever runs), and
+    the ring must still shrink at that exact step, with no further
+    swap_params call to sweep up after it."""
+    p0, p1 = _params(0), _params(1)
+    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=32)
+    rng = np.random.RandomState(5)
+    engine.submit(ServeRequest(rid=0, prompt=rng.randint(
+        0, CFG.vocab_size, 4).astype(np.int32), max_new=1))
+    engine.swap_params(p1)                     # queued, nothing pinned yet
+    assert engine.live_versions == [1]         # v0 had no pinned slot
+    engine.submit(ServeRequest(rid=1, prompt=rng.randint(
+        0, CFG.vocab_size, 4).astype(np.int32), max_new=1))
+    rep = engine.step()                        # admit + chunk-complete @v1
+    assert [c.rid for c in rep.completed] == [0, 1]
+    assert rep.decode_dispatches == 0          # pure chunk-path finish
+    engine.swap_params(p1, version=2)
+    engine.submit(ServeRequest(rid=2, prompt=rng.randint(
+        0, CFG.vocab_size, 4).astype(np.int32), max_new=1))
+    engine.step()
+    # v1's last pinned slot completed INSIDE the chunk step above; the
+    # ring must hold only the latest — not wait for another swap
+    assert engine.live_versions == [2]
+    assert engine.n_live == 0
+
+
 # ---------------------------------------------------------------------------
 # in-flight pinning: old slots finish under old params, new under new
 # ---------------------------------------------------------------------------
