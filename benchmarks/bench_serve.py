@@ -36,9 +36,19 @@ budget, every paged completion bit-exact vs a SOLO replay on a dense
 single-slot oracle engine, and the trace count still == 1 + distinct
 prefill buckets. Emits BENCH_serve_paged.json.
 
+The DECODE arm (docs/serving.md §9) runs the SAME decode-heavy schedule
+through three engines — the XLA-oracle baseline, the fused Pallas
+flash-decode kernel (``decode_kernel="flash"``: per-row ``pos``-bounded
+KV scan, charged per live KV token by ``ServeCostModel.decode_time_flash``)
+and speculative decoding (a same-weights draft, k tokens verified per
+chunk dispatch) — asserts every arm's token streams are IDENTICAL, and
+gates flash/speculative decode-step speedups. Emits
+BENCH_serve_decode.json.
+
 ``--smoke`` (CI): a shorter schedule, same gates (the clock is
 simulated, so shared-runner noise cannot flake them), plus the
-BENCH_serve.json / BENCH_serve_paged.json artifacts.
+BENCH_serve.json / BENCH_serve_paged.json / BENCH_serve_decode.json
+artifacts.
 
     PYTHONPATH=src python benchmarks/bench_serve.py [--smoke]
 """
@@ -62,6 +72,19 @@ PAGED_SMOKE_REQ = 40           # still enough load to exceed 4x8 resident
 PAGED_RATE_RPS = 1500.0        # burst arrival: measures ADMISSION
                                # capacity, not arrival spacing
 GATE_CONCURRENCY = 4.0
+
+DECODE_REQ = 24                # decode arm: long generations, the
+DECODE_SMOKE_REQ = 16          # decode-dominated regime
+SPEC_K = 4                     # draft depth per speculative round
+SPEC_WINDOW = 48               # draft context; the schedule keeps every
+                               # history within window - k, so the
+                               # same-weights draft sees the FULL history
+                               # and acceptance stays near 100% (outside
+                               # the window acceptance decays — that is a
+                               # draft-quality effect, never a
+                               # correctness one)
+GATE_FLASH = 1.15              # flash >= 1.15x baseline tokens/s
+GATE_SPEC = 1.25               # speculative >= 1.25x baseline tokens/s
 
 
 def _tiny_cfg():
@@ -186,6 +209,108 @@ def run_paged(n_req: int, seed: int = 0) -> Dict:
     }
 
 
+def run_decode(n_req: int, seed: int = 0) -> Dict:
+    """Baseline vs flash-decode vs speculative on ONE decode-heavy
+    schedule: identical token streams required, decode wall-clock gated."""
+    import jax
+
+    from repro.core.simulation import ServeCostModel, generate_requests
+    from repro.models import transformer as tf
+    from repro.serving import (PagingConfig, ServingConfig, ServingEngine,
+                               SpeculativeConfig)
+
+    cfg = _tiny_cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    # decode-dominated: short prompts, generation-heavy, with every
+    # history (prompt + generation <= 12 + 32) inside the draft's
+    # window - k = 44 so the same-weights draft tracks the target exactly
+    reqs = generate_requests(
+        n_req, rate_rps=RATE_RPS, vocab_size=cfg.vocab_size,
+        prompt_rng=(4, 12), gen_short=(16, 24), gen_long=(24, 32),
+        long_frac=0.5, seed=seed)
+    cost = ServeCostModel()
+
+    def _arm(serving):
+        eng = ServingEngine(params, cfg, serving=serving)
+        stats = eng.run_simulated(reqs, cost)
+        toks = {c.rid: c.tokens.tolist() for c in stats.completions}
+        return eng, stats, toks
+
+    _, bs, bt = _arm(ServingConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ))
+    _, fs, ft = _arm(ServingConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                                   decode_kernel="flash"))
+    _, pfs, pft = _arm(ServingConfig(
+        max_batch=MAX_BATCH, max_seq=MAX_SEQ, decode_kernel="flash",
+        paging=PagingConfig(page_size=PAGE_SIZE, n_pages=N_PAGES)))
+    spec = SpeculativeConfig(draft_params=params, draft_cfg=cfg,
+                             k=SPEC_K, window=SPEC_WINDOW)
+    seng, ss, st = _arm(ServingConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                                      speculative=spec))
+    assert ft == bt, "flash-decode token streams diverged from baseline"
+    assert pft == bt, "paged flash token streams diverged from baseline"
+    assert st == bt, "speculative token streams diverged from baseline"
+    return {
+        "n_requests": n_req,
+        "gen_tokens": bs.gen_tokens,
+        "base": {"tokens_per_s": bs.tokens_per_s,
+                 "makespan_s": bs.makespan,
+                 "p95_latency_s": bs.p95_latency,
+                 "decode_dispatches": bs.decode_dispatches},
+        "flash": {"tokens_per_s": fs.tokens_per_s,
+                  "makespan_s": fs.makespan,
+                  "p95_latency_s": fs.p95_latency,
+                  "decode_kv_tokens": fs.decode_kv_tokens,
+                  "kv_read_frac": fs.decode_kv_tokens
+                  / max(fs.decode_rows_total * MAX_SEQ, 1)},
+        "paged_flash": {"tokens_per_s": pfs.tokens_per_s,
+                        "makespan_s": pfs.makespan},
+        "spec": {"tokens_per_s": ss.tokens_per_s,
+                 "makespan_s": ss.makespan,
+                 "p95_latency_s": ss.p95_latency,
+                 "decode_dispatches": ss.decode_dispatches,
+                 "drafted": ss.drafted, "accepted": ss.accepted,
+                 "accept_rate": ss.accepted / max(ss.drafted, 1),
+                 "trace_count": ss.trace_count,
+                 "verify_buckets": [list(b)
+                                    for b in seng.verify_buckets_seen]},
+        "flash_speedup": fs.tokens_per_s / bs.tokens_per_s,
+        "spec_speedup": ss.tokens_per_s / bs.tokens_per_s,
+        "spec_dispatch_ratio": ss.decode_dispatches
+        / max(bs.decode_dispatches, 1),
+    }
+
+
+def check_and_report_decode(out: Dict) -> None:
+    b, f, s = out["base"], out["flash"], out["spec"]
+    print(f"decode arm: {out['n_requests']} requests, "
+          f"{out['gen_tokens']} generated tokens (token streams "
+          f"identical across all four engines)")
+    print(f"    base: {b['tokens_per_s']:8.1f} tok/s  "
+          f"p95={b['p95_latency_s']:.3f}s  "
+          f"{b['decode_dispatches']} decode dispatches")
+    print(f"   flash: {f['tokens_per_s']:8.1f} tok/s  "
+          f"p95={f['p95_latency_s']:.3f}s  reads "
+          f"{100 * f['kv_read_frac']:.0f}% of the dense KV rectangle")
+    print(f"    spec: {s['tokens_per_s']:8.1f} tok/s  "
+          f"p95={s['p95_latency_s']:.3f}s  "
+          f"{s['decode_dispatches']} verify dispatches, accept rate "
+          f"{100 * s['accept_rate']:.0f}%")
+    assert out["flash_speedup"] >= GATE_FLASH, (
+        f"flash decode {out['flash_speedup']:.2f}x < {GATE_FLASH}x "
+        f"baseline tokens/s")
+    assert out["spec_speedup"] >= GATE_SPEC, (
+        f"speculative {out['spec_speedup']:.2f}x < {GATE_SPEC}x "
+        f"baseline tokens/s")
+    assert s["decode_dispatches"] < b["decode_dispatches"], (
+        "speculative ran as many decode dispatches as the baseline — "
+        "drafts are not being accepted")
+    assert len(s["verify_buckets"]) == 1, (
+        f"verify buckets {s['verify_buckets']}: vcap must pin ONE bucket")
+    print(f"OK: flash {out['flash_speedup']:.2f}x (gate {GATE_FLASH}x), "
+          f"speculative {out['spec_speedup']:.2f}x (gate {GATE_SPEC}x) "
+          f"with {out['spec_dispatch_ratio']:.2f}x the decode dispatches")
+
+
 def check_and_report_paged(out: Dict) -> None:
     d, p = out["dense"], out["paged"]
     print(f"paged arm: {out['n_requests']} requests, KV budget "
@@ -253,6 +378,10 @@ def main(argv: List[str]) -> None:
     paged["mode"] = "smoke" if smoke else "full"
     emit_bench_json("serve_paged", paged)
     check_and_report_paged(paged)
+    decode = run_decode(DECODE_SMOKE_REQ if smoke else DECODE_REQ)
+    decode["mode"] = "smoke" if smoke else "full"
+    emit_bench_json("serve_decode", decode)
+    check_and_report_decode(decode)
 
 
 if __name__ == "__main__":

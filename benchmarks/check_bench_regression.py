@@ -51,6 +51,16 @@ HEADLINES = {
         ("paged.trace_count", "lower", None),
         ("paged.reused_tokens", "higher", None),
     ],
+    "serve_decode": [
+        # fused flash-decode + speculative decoding vs the XLA-oracle
+        # engine on one decode-heavy schedule (docs/serving.md §9); all
+        # arms serve IDENTICAL tokens, so these are pure-speed headlines
+        ("flash_speedup", "higher", None),
+        ("spec_speedup", "higher", None),
+        ("spec.accept_rate", "higher", None),
+        ("spec.decode_dispatches", "lower", None),
+        ("flash.kv_read_frac", "lower", None),
+    ],
     "train_serve": [
         ("throughput_ratio", "higher", None),
         ("swap.tokens_per_s", "higher", None),

@@ -420,6 +420,9 @@ class ServeCostModel:
     decode_row: float = 1e-4        # s per padded decode row
     swap_overhead: float = 1e-3     # s per param hot-swap (host-side tree
                                     # install: no retrace, no device work)
+    draft_tok: float = 1e-6         # s per draft-window token per forward
+                                    # (the speculative draft LM is tiny and
+                                    # cacheless: k forwards over (B, window))
 
     def prefill_time(self, batch_cap: int, prompt_cap: int) -> float:
         return self.step_overhead + self.prefill_tok * batch_cap * prompt_cap
@@ -437,6 +440,21 @@ class ServeCostModel:
         ``decode_time(max_batch)`` — same hardware, different residency."""
         return self.step_overhead + self.decode_row * page_reads \
             / max(pages_per_row, 1)
+
+    def decode_time_flash(self, kv_tokens: int, max_seq: int) -> float:
+        """Decode charge for the DENSE engine under the fused flash
+        kernel: proportional to the KV tokens actually read (the kernel's
+        per-row ``pos`` bound skips unreached page blocks, where the XLA
+        path streams every row's full ``max_seq`` window). Calibrated so
+        a saturated batch (``batch * max_seq`` KV tokens) costs exactly
+        ``decode_time(batch)`` — same hardware, fewer bytes."""
+        return self.step_overhead + self.decode_row * kv_tokens \
+            / max(max_seq, 1)
+
+    def draft_time(self, k: int, batch: int, window: int) -> float:
+        """Charge for ONE speculative draft dispatch: k cacheless
+        forwards of the tiny draft LM over a (batch, window) buffer."""
+        return self.step_overhead + self.draft_tok * k * batch * window
 
     def swap_time(self) -> float:
         return self.swap_overhead

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the compute hot-spots (validated interpret=True):
 
   flash_attention/  blockwise online-softmax attention (GQA, windows)
+  flash_decode/     paged ragged decode attention over the serving KV pool
   ssd_scan/         Mamba2 chunked state-space scan
   topk_compress/    block-local top-k gradient sparsification (paper §5.1)
 """
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.flash_decode import flash_decode  # noqa: F401
 from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
 from repro.kernels.topk_compress import block_topk  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.kernels.flash_decode.ops import flash_decode  # noqa: F401
+from repro.kernels.flash_decode.ref import flash_decode_ref  # noqa: F401

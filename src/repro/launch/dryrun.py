@@ -45,8 +45,7 @@ from repro.launch.specs import (effective_config, input_specs,
                                 input_specs_eff, supports)
 from repro.models import transformer as tf
 from repro.optim import adagrad, adam
-from repro.train.step import build_decode_step, build_prefill_step, \
-    build_train_step
+from repro.train.step import build_serve_programs, build_train_step
 
 
 def build_mesh(args):
@@ -128,7 +127,7 @@ def _lower_compile_inner(cfg, shape, mesh, optimizer_name, remat, unroll,
             param_specs(params_abs, cfg, mesh, "serve", layout), mesh)
         b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch,
                                layout)
-        step = build_prefill_step(cfg, unroll=unroll)
+        step = build_serve_programs(cfg, paged=False, unroll=unroll).prefill
         jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
         return jitted.lower(params_abs, specs["batch"]).compile()
     p_sh = to_shardings(
@@ -139,7 +138,8 @@ def _lower_compile_inner(cfg, shape, mesh, optimizer_name, remat, unroll,
     tok_sh = batch_shardings({"t": specs["token"]}, mesh,
                              shape.global_batch, layout)["t"]
     pos_sh = NamedSharding(mesh, P())
-    step = build_decode_step(cfg, unroll=unroll)
+    step = build_serve_programs(cfg, paged=False,
+                                unroll=unroll).decode_lockstep
     jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, pos_sh, c_sh),
                      out_shardings=(None, c_sh), donate_argnums=(3,))
     return jitted.lower(params_abs, specs["token"], specs["pos"],
@@ -263,7 +263,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             param_specs(params_abs, cfg, mesh, "serve", lay), mesh)
         b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch,
                                lay)
-        step = build_prefill_step(cfg)
+        step = build_serve_programs(cfg, paged=False).prefill
         jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
         lowered = jitted.lower(params_abs, specs["batch"])
     else:  # decode
@@ -276,7 +276,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         tok_sh = batch_shardings({"t": specs["token"]}, mesh,
                                  shape.global_batch, lay)["t"]
         pos_sh = NamedSharding(mesh, P())
-        step = build_decode_step(cfg)
+        step = build_serve_programs(cfg, paged=False).decode_lockstep
         jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, pos_sh, c_sh),
                          out_shardings=(None, c_sh),
                          donate_argnums=(3,) if donate else ())

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core.closure import ResearchClosure, jaxify
 from repro.models import transformer as tf
-from repro.train.step import build_decode_step, build_prefill_step
+from repro.train.step import build_serve_programs
 
 
 def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
@@ -49,8 +49,9 @@ def serve_batch(params, cfg, prompts: jnp.ndarray, gen: int,
     (benchmarks/bench_serve.py) and the oracle the engine's per-request
     outputs are tested against (tests/test_serving.py)."""
     B, P = prompts.shape
-    prefill = jax.jit(build_prefill_step(cfg))
-    decode = jax.jit(build_decode_step(cfg))
+    progs = build_serve_programs(cfg, paged=False)
+    prefill = jax.jit(progs.prefill)
+    decode = jax.jit(progs.decode_lockstep)
     batch = {"tokens": prompts}
     if prefix is not None:
         batch["prefix"] = prefix
@@ -99,7 +100,8 @@ def _serve_oneshot(params, cfg, args):
 
 def main(argv=None):
     from repro.core.simulation import ServeCostModel, generate_requests
-    from repro.serving import ServingEngine
+    from repro.serving import (PagingConfig, SamplingConfig, ServingConfig,
+                               ServingEngine, SpeculativeConfig)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-4b")
@@ -131,6 +133,19 @@ def main(argv=None):
                     help="prepend one of 3 fixed system prompts of this "
                          "many tokens to ~70%% of requests (the "
                          "'millions of users, one system prompt' mix)")
+    ap.add_argument("--decode-kernel", choices=("xla", "flash"),
+                    default="xla",
+                    help="decode attention implementation: 'flash' runs "
+                         "the fused Pallas flash-decode kernel "
+                         "(interpret-mode on CPU; docs/serving.md §9)")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help=">0 enables speculative decoding: a 1-layer "
+                         "draft drafts K tokens per round and the served "
+                         "model verifies them in one chunk dispatch "
+                         "(greedy only; docs/serving.md §9)")
+    ap.add_argument("--draft-window", type=int, default=32,
+                    help="with --speculative: the draft LM's cacheless "
+                         "context window")
     ap.add_argument("--simulate", action="store_true",
                     help="discrete-event clock instead of wall-clock")
     ap.add_argument("--swap-every", type=float, default=0.0,
@@ -180,13 +195,30 @@ def main(argv=None):
         gen_long=(g_long_lo, g_long_hi),
         shared_prefix=shared,
         seed=args.seed + 1)
-    engine = ServingEngine(params, cfg, max_batch=args.max_batch,
-                           max_seq=max_seq, prompt_cap=args.prompt_cap,
-                           temperature=args.temperature, top_k=args.top_k,
-                           sample_seed=args.seed,
-                           page_size=args.page_size or None,
-                           n_pages=args.pages or None,
-                           prefix_reuse=not args.no_prefix_reuse)
+    speculative = None
+    if args.speculative > 0:
+        # the draft is a 1-layer sibling of the served model, freshly
+        # initialized: draft quality only moves the acceptance rate, so
+        # even an untrained draft serves the EXACT greedy stream
+        import dataclasses as _dc
+
+        draft_cfg = _dc.replace(cfg, name=cfg.name + "-draft", n_layers=1)
+        draft_params = tf.init_params(jax.random.PRNGKey(args.seed + 2),
+                                      draft_cfg)
+        speculative = SpeculativeConfig(
+            draft_params=draft_params, draft_cfg=draft_cfg,
+            k=args.speculative, window=args.draft_window)
+    paging = None
+    if args.page_size:
+        paging = PagingConfig(page_size=args.page_size,
+                              n_pages=args.pages or None,
+                              prefix_reuse=not args.no_prefix_reuse)
+    engine = ServingEngine(params, cfg, serving=ServingConfig(
+        max_batch=args.max_batch, max_seq=max_seq,
+        prompt_cap=args.prompt_cap, decode_kernel=args.decode_kernel,
+        sampling=SamplingConfig(temperature=args.temperature,
+                                top_k=args.top_k, sample_seed=args.seed),
+        paging=paging, speculative=speculative))
     if args.simulate:
         swaps = []
         if args.swap_every > 0:
@@ -216,6 +248,15 @@ def main(argv=None):
               f"peak resident {stats.pages_peak}, prefix hits "
               f"{stats.prefix_hits} ({stats.reused_tokens} tokens never "
               f"re-prefilled), {engine.trie_pages} pages cached for reuse")
+    if engine.decode_kernel == "flash" and not engine.paged:
+        print(f"flash decode: {stats.decode_kv_tokens} live KV tokens "
+              f"streamed (vs {stats.decode_rows_total * max_seq} dense)")
+    if engine.serving.speculative is not None:
+        rate = stats.accepted / max(stats.drafted, 1)
+        print(f"speculative: drafted {stats.drafted}, accepted "
+              f"{stats.accepted} ({100 * rate:.0f}%) over "
+              f"{stats.spec_rounds} rounds, verify buckets "
+              f"{engine.verify_buckets_seen}")
     if args.simulate:
         from repro.launch.train_serve import format_version_histogram
         print(f"served version histogram ({stats.swap_count} in-flight "

@@ -119,7 +119,9 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
                     admission_deadline: Optional[float] = None,
                     page_size: Optional[int] = None,
                     n_pages: Optional[int] = None,
-                    prefix_reuse: bool = True
+                    prefix_reuse: bool = True,
+                    decode_kernel: str = "xla",
+                    speculative=None
                     ) -> Dict[str, Any]:
     """Drive ``iterations`` of elastic training and the serving engine on
     ONE discrete-event clock, hot-swapping published params in-flight.
@@ -141,7 +143,8 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
     callers can replay any completion solo under its pinned version
     (the corruption oracle in tests/ and the bench)."""
     from repro.core.simulation import ServeCostModel
-    from repro.serving import ServingEngine, SimulatedServeSession
+    from repro.serving import (ServingConfig, ServingEngine,
+                               SimulatedServeSession)
 
     cost = cost or ServeCostModel()
     versions: Dict[int, PyTree] = {}
@@ -173,15 +176,13 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
         # trained weights, never a fresh re-init mislabeled as step N)
         engine_params = loop.reducer.params
         start_version = loop.step
-    engine = ServingEngine(engine_params, cfg, max_batch=max_batch,
-                           max_seq=max_seq, prompt_cap=prompt_cap,
-                           temperature=temperature, top_k=top_k,
-                           sample_seed=seed,
-                           start_version=start_version,
-                           max_queue=max_queue, shed_policy=shed_policy,
-                           admission_deadline=admission_deadline,
-                           page_size=page_size, n_pages=n_pages,
-                           prefix_reuse=prefix_reuse)
+    engine = ServingEngine(engine_params, cfg, serving=ServingConfig.from_flat(
+        max_batch=max_batch, max_seq=max_seq, prompt_cap=prompt_cap,
+        temperature=temperature, top_k=top_k, sample_seed=seed,
+        start_version=start_version, max_queue=max_queue,
+        shed_policy=shed_policy, admission_deadline=admission_deadline,
+        page_size=page_size, n_pages=n_pages, prefix_reuse=prefix_reuse,
+        decode_kernel=decode_kernel, speculative=speculative))
     versions[int(start_version)] = engine_params
     session = SimulatedServeSession(engine, cost, requests)
     session_box.append(session)
@@ -270,6 +271,17 @@ def main(argv=None):
                          "version-keyed prefix reuse (docs/serving.md §8)")
     ap.add_argument("--pages", type=int, default=0,
                     help="with --page-size: pool size in pages")
+    ap.add_argument("--decode-kernel", choices=("xla", "flash"),
+                    default="xla",
+                    help="decode attention: 'flash' = fused Pallas "
+                         "flash-decode kernel (docs/serving.md §9)")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help=">0: speculative decoding with a K-token draft "
+                         "(the draft is the SERVED arch at init — "
+                         "acceptance is low until training improves it; "
+                         "output stays the exact greedy stream)")
+    ap.add_argument("--draft-window", type=int, default=32,
+                    help="with --speculative: draft context window")
     ap.add_argument("--snapshot-out", default=None,
                     help="save the final TrainState here")
     ap.add_argument("--from-snapshot", default=None,
@@ -307,6 +319,16 @@ def main(argv=None):
         print(f"seeded engine from {args.from_snapshot} "
               f"(training step {start_version})")
 
+    speculative = None
+    if args.speculative > 0:
+        import jax
+
+        from repro.serving import SpeculativeConfig
+        speculative = SpeculativeConfig(
+            draft_params=tf.init_params(jax.random.PRNGKey(args.seed + 2),
+                                        cfg),
+            draft_cfg=cfg, k=args.speculative, window=args.draft_window)
+
     guardrails = canary = None
     if args.guardrails:
         from repro.core.guardrails import (CanaryGate, TrainingGuardrails,
@@ -327,7 +349,8 @@ def main(argv=None):
         resume_state=resume_state, guardrails=guardrails, canary=canary,
         max_queue=args.max_queue, shed_policy=args.shed_policy,
         admission_deadline=args.admission_deadline,
-        page_size=args.page_size or None, n_pages=args.pages or None)
+        page_size=args.page_size or None, n_pages=args.pages or None,
+        decode_kernel=args.decode_kernel, speculative=speculative)
 
     logs, stats, engine = out["logs"], out["stats"], out["engine"]
     losses = [lg.loss for lg in logs if lg.loss == lg.loss]
@@ -346,6 +369,9 @@ def main(argv=None):
         print(f"paged: {engine.n_pages} pages x {engine.page_size} tok, "
               f"peak resident {stats.pages_peak}, prefix hits "
               f"{stats.prefix_hits} ({stats.reused_tokens} reused tokens)")
+    if engine.serving.speculative is not None:
+        print(f"speculative: drafted {stats.drafted}, accepted "
+              f"{stats.accepted} over {stats.spec_rounds} rounds")
     if guardrails is not None:
         print(f"guardrails: {guardrails.n_quarantined} quarantined, "
               f"{guardrails.n_rollbacks} rollbacks, "

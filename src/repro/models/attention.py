@@ -249,6 +249,93 @@ def attention_decode_ragged(p: Params, x: jnp.ndarray, pos: jnp.ndarray, *,
     return _out_proj(p, o), {"k": ck, "v": cv}
 
 
+def _pow2_kv_block(cache_len: int) -> int:
+    """Page size for viewing a DENSE (B, T, ..) slot cache as kernel
+    pages: the largest power of two dividing ``cache_len``, capped at
+    128 (the TPU-friendly tile). Power-of-two by construction, so the
+    block count never fragments the flash-decode grid."""
+    block = cache_len & (-cache_len)
+    return min(block, 128)
+
+
+def attention_decode_ragged_flash(p: Params, x: jnp.ndarray,
+                                  pos: jnp.ndarray, *, cache: Params,
+                                  live: jnp.ndarray, use_rope: bool = True,
+                                  rope_theta: float = 10000.0
+                                  ) -> Tuple[jnp.ndarray, Params]:
+    """``attention_decode_ragged`` with the attention contraction done by
+    the fused Pallas flash-decode kernel (repro.kernels.flash_decode).
+
+    The cache WRITE is byte-identical to the oracle path (same RoPE, same
+    OOB-dropped dead-row scatter), so cache state stays bit-exact; only
+    the softmax-matmul is computed by the kernel, which views the dense
+    ``(B, T, ..)`` row as ``T // block`` contiguous pages under an
+    identity page map — the degenerate case of the paged kernel. Dead
+    rows are skipped inside the kernel and return exact zeros (finite,
+    discarded — same contract as the oracle's slot-0 attend)."""
+    from repro.kernels.flash_decode import flash_decode
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, x)
+    posb = pos[:, None].astype(jnp.int32)                    # (B,1)
+    if use_rope:
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    slot = jnp.clip(posb[:, 0], 0, T - 1)
+    bidx = jnp.where(live, jnp.arange(B), B)                 # dead -> dropped
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    ps = _pow2_kv_block(T)
+    nb = T // ps
+    kpool = ck.reshape(B * nb, ps, *ck.shape[2:])
+    vpool = cv.reshape(B * nb, ps, *cv.shape[2:])
+    idmap = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    qpos = jnp.where(live, posb[:, 0], 0).astype(jnp.int32)
+    o = flash_decode(q[:, 0], kpool, vpool, idmap, qpos,
+                     live.astype(jnp.int32))
+    return _out_proj(p, o.astype(q.dtype)[:, None]), {"k": ck, "v": cv}
+
+
+def attention_decode_ragged_paged_flash(p: Params, x: jnp.ndarray,
+                                        pos: jnp.ndarray, *,
+                                        kbuf: jnp.ndarray, vbuf: jnp.ndarray,
+                                        live: jnp.ndarray,
+                                        rmap: jnp.ndarray, wmap: jnp.ndarray,
+                                        use_rope: bool = True,
+                                        rope_theta: float = 10000.0
+                                        ) -> Tuple[jnp.ndarray,
+                                                   Tuple[jnp.ndarray,
+                                                         jnp.ndarray]]:
+    """Ragged one-token decode DIRECTLY over the paged KV pool: no
+    ``gather_kv_pages`` materialization, no scatter-back round trip.
+
+    ``kbuf``/``vbuf``: one layer's ``(n_pages, page_size, K, hd)`` pool;
+    ``rmap``/``wmap``: ``(B, P)`` int32 page maps with entries
+    ``>= n_pages`` meaning no page (read: kernel skips; write: scatter
+    drops — the engine's frozen/COW and dead-row convention unchanged).
+    The new token's k/v lands on exactly one (page, offset) cell via the
+    write map — equivalent to the gather -> oracle-write -> scatter
+    composition because every non-frozen page is uniquely owned and the
+    scatter-back of unchanged pages is the identity. Returns
+    ``(out (B,1,d), (new kbuf, new vbuf))``."""
+    from repro.kernels.flash_decode import flash_decode
+    ps = kbuf.shape[1]
+    P = rmap.shape[1]
+    q, k, v = _project_qkv(p, x, x)
+    posb = pos[:, None].astype(jnp.int32)                    # (B,1)
+    if use_rope:
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    pidx = jnp.clip(posb[:, 0] // ps, 0, P - 1)
+    wpage = jnp.take_along_axis(wmap, pidx[:, None], axis=1)[:, 0]
+    woff = posb[:, 0] % ps
+    nk = kbuf.at[wpage, woff].set(k[:, 0].astype(kbuf.dtype))
+    nv = vbuf.at[wpage, woff].set(v[:, 0].astype(vbuf.dtype))
+    qpos = jnp.where(live, posb[:, 0], 0).astype(jnp.int32)
+    o = flash_decode(q[:, 0], nk, nv, rmap, qpos, live.astype(jnp.int32))
+    return _out_proj(p, o.astype(q.dtype)[:, None]), (nk, nv)
+
+
 def attention_prefill_chunk(p: Params, x: jnp.ndarray, off: jnp.ndarray,
                             clen: jnp.ndarray, *, cache: Params,
                             use_rope: bool = True,

@@ -471,12 +471,15 @@ def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
 
 def decode_step_ragged(params: Params, cfg: ArchConfig, token: jnp.ndarray,
                        pos: jnp.ndarray, cache: Params, live: jnp.ndarray,
-                       unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+                       unroll: bool = False, flash: bool = False
+                       ) -> Tuple[jnp.ndarray, Params]:
     """ONE-token decode with PER-ROW positions and a live-slot mask — the
     continuous-batching step (repro.serving). token: (B,1) int32; pos: (B,)
     int32 per-row absolute positions; live: (B,) bool. The cache is the
     engine's slot cache: ``{"layers": {"k","v"}}`` with fixed
     ``(B, max_seq)`` buffers and NO kpos (validity is ``t <= pos_b``).
+    ``flash=True`` routes the attention contraction through the fused
+    Pallas flash-decode kernel (identical cache writes, kernel softmax).
     Returns (logits (B,1,V), new cache). Attention-cached archs only."""
     assert cfg.arch_type in ("dense", "vlm", "moe"), \
         f"ragged decode needs an attention cache, not {cfg.arch_type}"
@@ -486,11 +489,13 @@ def decode_step_ragged(params: Params, cfg: ArchConfig, token: jnp.ndarray,
     if cfg.arch_type == "vlm":
         x = x * jnp.asarray(cfg.d_model ** 0.5, adt)
     is_moe = cfg.arch_type == "moe"
+    attn_fn = attn_mod.attention_decode_ragged_flash if flash \
+        else attn_mod.attention_decode_ragged
 
     def body(h, xs):
         bp, cl = xs
         hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
-        a, new_c = attn_mod.attention_decode_ragged(
+        a, new_c = attn_fn(
             bp["attn"], hh, pos, cache=cl, live=live,
             use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
         h = h + a
@@ -514,7 +519,8 @@ def decode_step_ragged(params: Params, cfg: ArchConfig, token: jnp.ndarray,
 
 def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
                   off: jnp.ndarray, clen: jnp.ndarray, cache: Params,
-                  unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+                  unroll: bool = False, all_logits: bool = False
+                  ) -> Tuple[jnp.ndarray, Params]:
     """One chunk of a CHUNKED ragged prefill into the serving engine's
     slot cache (docs/serving.md). tokens: (B,C) int32 — row b's valid
     tokens are ``tokens[b, :clen_b]``, occupying absolute positions
@@ -527,7 +533,12 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     chunk (they are the next-token logits of the full prompt — bit-exact
     vs an unpadded single-shot prefill, the same argument as ragged
     ``prefill(lengths=)``); earlier chunks' logits are discarded by the
-    engine. Attention-cached archs only, like every ragged path."""
+    engine. ``all_logits=True`` instead returns the WHOLE chunk's logits
+    (B,C,V) — the speculative-verification shape, where every drafted
+    position's next-token distribution is needed (final_norm and unembed
+    are per-position maps, so column ``clen-1`` of the full output equals
+    the default path's single column bit-for-bit). Attention-cached archs
+    only, like every ragged path."""
     assert cfg.arch_type in ("dense", "moe"), \
         f"chunked prefill needs an attention slot cache, not {cfg.arch_type}"
     scan = functools.partial(scan_apply, unroll=unroll)
@@ -555,8 +566,9 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
             y = mlp(bp["mlp"], hh, cfg.mlp_act)
         return h + y, new_c
     x, new_layers = scan(body, x, (params["blocks"], cache["layers"]))
-    idx = jnp.clip(clen.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
-    x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    if not all_logits:
+        idx = jnp.clip(clen.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     x = apply_norm(params["final_norm"], x, cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     return unembed(head, x), {"layers": new_layers}
@@ -600,7 +612,8 @@ def prefill_chunk_paged(params: Params, cfg: ArchConfig,
                         tokens: jnp.ndarray, off: jnp.ndarray,
                         clen: jnp.ndarray, pool: Params,
                         rmap: jnp.ndarray, wmap: jnp.ndarray,
-                        unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+                        unroll: bool = False, all_logits: bool = False
+                        ) -> Tuple[jnp.ndarray, Params]:
     """``prefill_chunk`` through a page table: gather each row's pages
     into a linear view (``rmap``), run the IDENTICAL chunk math, scatter
     the updated view back through ``wmap`` (frozen/shared/padding
@@ -610,7 +623,7 @@ def prefill_chunk_paged(params: Params, cfg: ArchConfig,
     view = {"layers": {n: gather_kv_pages(pool["layers"][n], rmap)
                        for n in ("k", "v")}}
     logits, view = prefill_chunk(params, cfg, tokens, off, clen, view,
-                                 unroll=unroll)
+                                 unroll=unroll, all_logits=all_logits)
     new = {n: scatter_kv_pages(pool["layers"][n], wmap, view["layers"][n])
            for n in ("k", "v")}
     return logits, {"layers": new}
@@ -632,6 +645,53 @@ def decode_step_ragged_paged(params: Params, cfg: ArchConfig,
     new = {n: scatter_kv_pages(pool["layers"][n], wmap, view["layers"][n])
            for n in ("k", "v")}
     return logits, {"layers": new}
+
+
+def decode_step_ragged_paged_flash(params: Params, cfg: ArchConfig,
+                                   token: jnp.ndarray, pos: jnp.ndarray,
+                                   pool: Params, live: jnp.ndarray,
+                                   rmap: jnp.ndarray, wmap: jnp.ndarray,
+                                   unroll: bool = False
+                                   ) -> Tuple[jnp.ndarray, Params]:
+    """Ragged one-token decode reading the page pool DIRECTLY through
+    the fused Pallas flash-decode kernel — the gather/scatter round trip
+    of ``decode_step_ragged_paged`` disappears entirely: each layer's
+    attention dereferences ``rmap`` inside the kernel and the new
+    token's KV lands on one (page, offset) cell through ``wmap``. Same
+    trace-shape contract (fixed ``(B, P)`` maps -> single trace)."""
+    assert cfg.arch_type in ("dense", "vlm", "moe"), \
+        f"ragged decode needs an attention cache, not {cfg.arch_type}"
+    scan = functools.partial(scan_apply, unroll=unroll)
+    adt = dtype_of(cfg.activ_dtype)
+    x = embed(params["embed"], token).astype(adt)
+    if cfg.arch_type == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)
+    is_moe = cfg.arch_type == "moe"
+
+    def body(h, xs):
+        bp, cl = xs
+        hh = apply_norm(bp["ln1"], h, cfg.norm_eps)
+        a, (nk, nv) = attn_mod.attention_decode_ragged_paged_flash(
+            bp["attn"], hh, pos, kbuf=cl["k"], vbuf=cl["v"], live=live,
+            rmap=rmap, wmap=wmap,
+            use_rope=cfg.use_rope, rope_theta=cfg.rope_theta)
+        h = h + a
+        hh = apply_norm(bp["ln2"], h, cfg.norm_eps)
+        if is_moe:
+            moe_fn = moe_mod.moe_ffn_sorted if cfg.moe.impl == "sort" \
+                else moe_mod.moe_ffn
+            y, _ = moe_fn(bp["moe"], hh, cfg.moe)
+            if "shared" in bp:
+                y = y + mlp(bp["shared"], hh, "silu")
+            if "dense" in bp:
+                y = y + mlp(bp["dense"], hh, "silu")
+        else:
+            y = mlp(bp["mlp"], hh, cfg.mlp_act)
+        return h + y, {"k": nk, "v": nv}
+    x, new_layers = scan(body, x, (params["blocks"], pool["layers"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x), {"layers": new_layers}
 
 
 def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,

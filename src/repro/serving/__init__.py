@@ -2,5 +2,8 @@ from repro.serving.engine import (Completion, ServeRequest,  # noqa: F401
                                   ServeStats, ServingEngine, Shed,
                                   SimulatedServeSession, StepReport,
                                   pow2_bucket)
+from repro.serving.config import (BackpressureConfig,  # noqa: F401
+                                  PagingConfig, SamplingConfig,
+                                  ServingConfig, SpeculativeConfig)
 from repro.serving.baseline import simulate_static_batches  # noqa: F401
 from repro.serving.paging import PagePool, PrefixTrie  # noqa: F401

@@ -79,14 +79,18 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.layers import dtype_of
+from repro.serving.config import (BackpressureConfig, PagingConfig,
+                                  SamplingConfig, ServingConfig,
+                                  SpeculativeConfig)
 from repro.serving.paging import PagePool, PrefixTrie
-from repro.train.step import (build_decode_step, build_paged_decode_step,
-                              build_paged_prefill_chunk_step,
-                              build_prefill_chunk_step)
+from repro.train.step import build_draft_program, build_serve_programs
 
 PyTree = Any
 
 NEG_INF = -1e30
+
+_UNSET = object()   # flat-kwarg sentinel: distinguishes "not passed" from
+                    # an explicit None during the deprecation cycle
 
 
 def pow2_bucket(n: int, lo: int = 1, hi: Optional[int] = None) -> int:
@@ -146,6 +150,15 @@ class StepReport:
     #   dispatch's live rows of pos//page_size + 1) — what a paged decode
     #   actually streams, so the cost model can charge per live page
     #   instead of per padded row
+    decode_kv: List[int] = field(default_factory=list)
+    # ^ dense flash-decode only: KV tokens READ per decode dispatch (sum
+    #   over live rows of pos + 1) — the flash kernel's pos-bounded scan
+    #   streams only these, so the cost model charges per live token
+    verify_shapes: List[Tuple[int, int]] = field(default_factory=list)
+    # ^ speculative mode: (batch, chunk_cap) of each verify dispatch —
+    #   charged like a prefill chunk (it IS one); when non-empty there
+    #   were NO plain decode dispatches this step
+    draft_dispatches: int = 0           # speculative draft fn calls
 
 
 @dataclass
@@ -175,6 +188,11 @@ class ServeStats:
     pages_peak: int = 0             # paged: peak pages resident (slots+trie)
     prefix_hits: int = 0            # paged: admissions that reused pages
     reused_tokens: int = 0          # paged: prompt tokens NOT re-prefilled
+    decode_kv_tokens: int = 0       # dense flash: live KV tokens streamed
+                                    # across all decode dispatches
+    spec_rounds: int = 0            # speculative: (row, verify) rounds run
+    drafted: int = 0                # speculative: draft tokens proposed
+    accepted: int = 0               # speculative: draft tokens accepted
 
 
 @dataclass
@@ -193,24 +211,47 @@ class ServingEngine:
     with in-flight param hot-swap and temperature/top-k sampling."""
 
     def __init__(self, params: PyTree, cfg: ArchConfig, *,
-                 max_batch: int, max_seq: int,
-                 prompt_bucket_min: int = 8, unroll: bool = False,
-                 prompt_cap: Optional[int] = None,
-                 temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0, start_version: int = 0,
-                 max_queue: Optional[int] = None,
-                 shed_policy: str = "reject",
-                 admission_deadline: Optional[float] = None,
-                 page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None,
-                 prefix_reuse: bool = True):
+                 serving: Optional[ServingConfig] = None,
+                 max_batch: Any = _UNSET, max_seq: Any = _UNSET,
+                 prompt_bucket_min: Any = _UNSET, unroll: Any = _UNSET,
+                 prompt_cap: Any = _UNSET,
+                 temperature: Any = _UNSET, top_k: Any = _UNSET,
+                 sample_seed: Any = _UNSET, start_version: Any = _UNSET,
+                 max_queue: Any = _UNSET,
+                 shed_policy: Any = _UNSET,
+                 admission_deadline: Any = _UNSET,
+                 page_size: Any = _UNSET,
+                 n_pages: Any = _UNSET,
+                 prefix_reuse: Any = _UNSET,
+                 decode_kernel: Any = _UNSET,
+                 speculative: Any = _UNSET):
+        # grouped config is the entry point (docs/serving.md §1); the flat
+        # kwargs remain for one deprecation cycle and build the same
+        # ServingConfig — mixing both forms is ambiguous and rejected
+        flat = {k: v for k, v in dict(
+            max_batch=max_batch, max_seq=max_seq,
+            prompt_bucket_min=prompt_bucket_min, unroll=unroll,
+            prompt_cap=prompt_cap, temperature=temperature, top_k=top_k,
+            sample_seed=sample_seed, start_version=start_version,
+            max_queue=max_queue, shed_policy=shed_policy,
+            admission_deadline=admission_deadline, page_size=page_size,
+            n_pages=n_pages, prefix_reuse=prefix_reuse,
+            decode_kernel=decode_kernel,
+            speculative=speculative).items() if v is not _UNSET}
+        if serving is not None:
+            if flat:
+                raise ValueError(
+                    f"ServingEngine: pass serving=ServingConfig(...) OR "
+                    f"the flat kwargs, not both (got flat {sorted(flat)})")
+        else:
+            serving = ServingConfig.from_flat(**flat)
         if cfg.arch_type not in ("dense", "moe"):
             raise ValueError(
                 f"ServingEngine supports attention-cached LM archs "
                 f"(dense/moe), not {cfg.arch_type!r}")
-        if cfg.sliding_window and max_seq > cfg.sliding_window:
+        if cfg.sliding_window and serving.max_seq > cfg.sliding_window:
             raise ValueError(
-                f"max_seq={max_seq} exceeds sliding_window="
+                f"max_seq={serving.max_seq} exceeds sliding_window="
                 f"{cfg.sliding_window}: the slot cache is linear (no ring)")
         if cfg.arch_type == "moe" and \
                 cfg.moe.capacity_factor * cfg.moe.experts_per_token \
@@ -229,20 +270,28 @@ class ServingEngine:
                 f"exactness); outputs are approximate when an expert "
                 f"overflows", stacklevel=2)
         self.cfg = cfg
-        self.max_batch = int(max_batch)
-        self.max_seq = int(max_seq)
-        self.prompt_bucket_min = int(prompt_bucket_min)
-        self.prompt_cap = int(prompt_cap) if prompt_cap is not None \
-            else self.max_seq
-        if not 1 <= self.prompt_cap <= self.max_seq:
-            raise ValueError(f"prompt_cap={self.prompt_cap} must lie in "
-                             f"[1, max_seq={self.max_seq}]")
-        if temperature < 0.0:
-            raise ValueError(f"temperature={temperature} must be >= 0")
-        self._temperature = float(temperature)
-        self._top_k = int(top_k)
-        self._sample_seed = int(sample_seed)
-        self._unroll = unroll
+        self.serving = serving
+        self.max_batch = int(serving.max_batch)
+        self.max_seq = int(serving.max_seq)
+        self.prompt_bucket_min = int(serving.prompt_bucket_min)
+        self.prompt_cap = serving.resolved_prompt_cap
+        self._temperature = float(serving.sampling.temperature)
+        self._top_k = int(serving.sampling.top_k)
+        self._sample_seed = int(serving.sampling.sample_seed)
+        self._unroll = serving.unroll
+        self.decode_kernel = serving.decode_kernel
+        self._spec = serving.speculative
+        if self._spec is not None:
+            dcfg = self._spec.draft_cfg
+            if dcfg.arch_type not in ("dense", "moe"):
+                raise ValueError(
+                    f"speculative draft must be an attention LM "
+                    f"(dense/moe), not {dcfg.arch_type!r}")
+            if dcfg.vocab_size < cfg.vocab_size:
+                raise ValueError(
+                    f"speculative draft vocab_size={dcfg.vocab_size} "
+                    f"cannot consume served tokens (vocab_size="
+                    f"{cfg.vocab_size})")
         # the version ring: pinned live versions + the latest. A swap
         # installs a new latest; a version retires the moment its last
         # pinned slot completes (``_gc_versions`` runs from BOTH
@@ -251,39 +300,30 @@ class ServingEngine:
         # release a retired tree. ``start_version`` seeds the numbering
         # when the initial params come from a training checkpoint
         # (version == training step).
-        self.version = int(start_version)
+        self.version = int(serving.start_version)
         self._versions: Dict[int, PyTree] = {self.version: params}
         self.swap_count = 0
         # KV layout: dense slot cache (reference), or paged pool when
-        # ``page_size`` is set (docs/serving.md §8). max_seq must divide
-        # into whole pages so each row's gathered page view has EXACTLY
-        # the dense row shape — that makes the inner prefill/decode
-        # program identical and the paged engine bit-exact vs dense.
-        self.paged = page_size is not None
+        # ``serving.paging`` is set (docs/serving.md §8). max_seq must
+        # divide into whole pages so each row's gathered page view has
+        # EXACTLY the dense row shape — that makes the inner prefill/
+        # decode program identical and the paged engine bit-exact vs
+        # dense (validated by ServingConfig at construction).
+        self.paged = serving.paging is not None
         adt = dtype_of(cfg.activ_dtype)
         if self.paged:
-            self.page_size = int(page_size)
-            if not 1 <= self.page_size <= self.max_seq:
-                raise ValueError(f"page_size={self.page_size} must lie in "
-                                 f"[1, max_seq={self.max_seq}]")
-            if self.max_seq % self.page_size:
-                raise ValueError(
-                    f"max_seq={self.max_seq} must be a multiple of "
-                    f"page_size={self.page_size} (whole pages per row)")
+            self.page_size = int(serving.paging.page_size)
             self.pages_per_slot = self.max_seq // self.page_size
-            self.n_pages = int(n_pages) if n_pages is not None \
+            self.n_pages = int(serving.paging.n_pages) \
+                if serving.paging.n_pages is not None \
                 else self.max_batch * self.pages_per_slot
-            if self.n_pages < 1:
-                raise ValueError(f"n_pages={self.n_pages} must be >= 1")
             self._pool: Optional[PagePool] = PagePool(self.n_pages,
                                                       self.page_size)
             self._trie: Optional[PrefixTrie] = PrefixTrie(self.page_size)
-            self.prefix_reuse = bool(prefix_reuse)
+            self.prefix_reuse = bool(serving.paging.prefix_reuse)
             shape = (cfg.n_layers, self.n_pages, self.page_size,
                      cfg.n_kv_heads, cfg.head_dim)
         else:
-            if n_pages is not None:
-                raise ValueError("n_pages requires page_size (paged mode)")
             self.page_size = None
             self.pages_per_slot = 0
             self.n_pages = 0
@@ -292,6 +332,11 @@ class ServingEngine:
             self.prefix_reuse = False
             shape = (cfg.n_layers, self.max_batch, self.max_seq,
                      cfg.n_kv_heads, cfg.head_dim)
+        # every serving step program comes from the ONE factory — this is
+        # the only place the engine touches repro.train.step
+        self._programs = build_serve_programs(
+            cfg, paged=self.paged, unroll=self._unroll,
+            decode_kernel=self.decode_kernel)
         self.cache: PyTree = {"layers": {"k": jnp.zeros(shape, adt),
                                          "v": jnp.zeros(shape, adt)}}
         self._slots: List[Optional[_SlotState]] = [None] * self.max_batch
@@ -302,19 +347,17 @@ class ServingEngine:
         # backpressure (docs/robustness.md): bound the admission queue
         # and shed the overflow EXPLICITLY — a shed is an answer ("try
         # later"), a silently growing queue is a lie about capacity
-        if shed_policy not in ("reject", "drop_oldest"):
-            raise ValueError(f"shed_policy={shed_policy!r}: expected "
-                             f"'reject' or 'drop_oldest'")
-        if max_queue is not None and max_queue < 1:
-            raise ValueError(f"max_queue={max_queue} must be >= 1")
-        self.max_queue = max_queue
-        self.shed_policy = shed_policy
-        self.admission_deadline = admission_deadline
+        # (bounds validated by BackpressureConfig at construction)
+        self.max_queue = serving.backpressure.max_queue
+        self.shed_policy = serving.backpressure.shed_policy
+        self.admission_deadline = serving.backpressure.admission_deadline
         self.shed_log: List[Shed] = []
         self.queue_peak = 0
         self._rids_active: set = set()  # queued or in-flight rids
         self._chunk_fns: Dict[Tuple[int, int], Any] = {}
+        self._verify_fns: Dict[Tuple[int, int], Any] = {}
         self._decode_fn = None
+        self._draft_fn = None
         self._trace_count = 0
         self.engine_steps = 0
         self.prefill_tokens = 0
@@ -326,6 +369,10 @@ class ServingEngine:
         self.pages_peak = 0
         self.prefix_hits = 0
         self.reused_tokens = 0
+        self.decode_kv_tokens = 0
+        self.spec_rounds = 0
+        self.drafted = 0
+        self.accepted = 0
 
     # ------------------------------------------------------------------
     @property
@@ -352,6 +399,14 @@ class ServingEngine:
     @property
     def buckets_seen(self) -> List[Tuple[int, int]]:
         return sorted(self._chunk_fns)
+
+    @property
+    def verify_buckets_seen(self) -> List[Tuple[int, int]]:
+        """Speculative mode: (batch, chunk_cap) buckets the verify
+        dispatch has traced — bounded by ONE per engine (the cap is
+        pinned to pow2_bucket(k + 1)), which is the '+ verify buckets'
+        allowance in the trace invariant."""
+        return sorted(self._verify_fns)
 
     @property
     def live_versions(self) -> List[int]:
@@ -503,8 +558,7 @@ class ServingEngine:
         if fn is not None:
             return fn
         if self.paged:
-            pstep = build_paged_prefill_chunk_step(self.cfg,
-                                                   unroll=self._unroll)
+            pstep = self._programs.prefill_chunk
 
             def chunk_paged(params, tokens, off, clen, rids, rmap, wmap,
                             pool):
@@ -518,7 +572,7 @@ class ServingEngine:
             fn = jax.jit(chunk_paged, donate_argnums=(7,))
             self._chunk_fns[(bcap, ccap)] = fn
             return fn
-        cstep = build_prefill_chunk_step(self.cfg, unroll=self._unroll)
+        cstep = self._programs.prefill_chunk
         last = self.max_batch - 1
 
         def chunk_and_scatter(params, tokens, off, clen, slots, rids,
@@ -550,7 +604,7 @@ class ServingEngine:
         if self._decode_fn is not None:
             return self._decode_fn
         if self.paged:
-            pstep = build_paged_decode_step(self.cfg, unroll=self._unroll)
+            pstep = self._programs.decode
 
             def decode_paged(params, tok, pos, live, pool, rids, gidx,
                              rmap, wmap):
@@ -562,7 +616,7 @@ class ServingEngine:
 
             self._decode_fn = jax.jit(decode_paged, donate_argnums=(4,))
             return self._decode_fn
-        dstep = build_decode_step(self.cfg, unroll=self._unroll, ragged=True)
+        dstep = self._programs.decode
 
         def decode_all_slots(params, tok, pos, live, cache, rids, gidx):
             self._trace_count += 1
@@ -572,6 +626,54 @@ class ServingEngine:
 
         self._decode_fn = jax.jit(decode_all_slots, donate_argnums=(4,))
         return self._decode_fn
+
+    def _get_verify_fn(self, vcap: int):
+        """Speculative VERIFY dispatch for one ``(max_batch, vcap)``
+        bucket: a prefill-chunk-shaped program over ALL slots (row ==
+        slot, so no gather) returning the GREEDY argmax at every chunk
+        column. Rows outside the dispatch's version group carry
+        ``clen == 0`` — no write, output discarded — the same padding
+        convention as prefill chunks. Greedy-only by construction
+        (ServingConfig rejects speculative + temperature > 0)."""
+        key = (self.max_batch, vcap)
+        fn = self._verify_fns.get(key)
+        if fn is not None:
+            return fn
+        vstep = self._programs.verify
+        if self.paged:
+            def verify_paged(params, tokens, off, clen, rmap, wmap, pool):
+                self._trace_count += 1  # trace-time only side effect
+                logits, pool = vstep(params, tokens, off, clen, pool,
+                                     rmap, wmap)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), pool
+
+            fn = jax.jit(verify_paged, donate_argnums=(6,))
+        else:
+            def verify_dense(params, tokens, off, clen, cache):
+                self._trace_count += 1  # trace-time only side effect
+                logits, cache = vstep(params, tokens, off, clen, cache)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+            fn = jax.jit(verify_dense, donate_argnums=(4,))
+        self._verify_fns[key] = fn
+        return fn
+
+    def _get_draft_fn(self):
+        """The speculative DRAFT dispatch: one jitted k-proposal program
+        over all live rows at once (the draft tree is engine-fixed, so
+        there is never a per-version split)."""
+        if self._draft_fn is not None:
+            return self._draft_fn
+        spec = self._spec
+        dstep = build_draft_program(spec.draft_cfg, k=spec.k,
+                                    window=spec.window)
+
+        def draft(params, window_toks, hlen):
+            self._trace_count += 1      # trace-time only side effect
+            return dstep(params, window_toks, hlen)
+
+        self._draft_fn = jax.jit(draft)
+        return self._draft_fn
 
     # ------------------------------------------------------------------
     def _finish(self, s: int) -> Completion:
@@ -798,59 +900,183 @@ class ServingEngine:
 
         dispatches = 0
         decode_pages: List[int] = []
+        decode_kv: List[int] = []
+        verify_shapes: List[Tuple[int, int]] = []
+        draft_dispatches = 0
         if self._live.any():
-            fn = self._get_decode_fn()
-            rids = np.zeros(self.max_batch, np.int32)
-            gidx = np.zeros(self.max_batch, np.int32)
-            for s in range(self.max_batch):
-                if self._live[s]:
-                    rids[s] = self._slots[s].req.rid % (2 ** 31)
-                    gidx[s] = len(self._slots[s].gen)
-            vers = sorted({self._slots[s].ver
-                           for s in range(self.max_batch) if self._live[s]})
-            for ver in vers:
-                group = np.array([self._live[s]
-                                  and self._slots[s].ver == ver
-                                  for s in range(self.max_batch)], bool)
-                if self.paged:
-                    rmap, wmap = self._decode_page_maps(group)
-                    decode_pages.append(sum(
-                        int(self._pos[s]) // self.page_size + 1
-                        for s in range(self.max_batch) if group[s]))
-                    nxt, self.cache = fn(self._versions[ver],
-                                         jnp.asarray(self._tok[:, None]),
-                                         jnp.asarray(self._pos),
-                                         jnp.asarray(group), self.cache,
-                                         jnp.asarray(rids),
-                                         jnp.asarray(gidx),
-                                         jnp.asarray(rmap),
-                                         jnp.asarray(wmap))
-                else:
-                    nxt, self.cache = fn(self._versions[ver],
-                                         jnp.asarray(self._tok[:, None]),
-                                         jnp.asarray(self._pos),
-                                         jnp.asarray(group), self.cache,
-                                         jnp.asarray(rids),
-                                         jnp.asarray(gidx))
-                nxt = np.asarray(nxt)
-                dispatches += 1
-                self.decode_dispatches += 1
-                self.decode_rows_live += int(group.sum())
-                self.decode_rows_total += self.max_batch
-                for s in range(self.max_batch):
-                    if not group[s]:
-                        continue
-                    st = self._slots[s]
-                    st.gen.append(int(nxt[s]))
-                    self._pos[s] += 1
-                    self._tok[s] = int(nxt[s])
-                    if len(st.gen) >= st.req.max_new:
-                        completed.append(self._finish(s))
+            if self._spec is not None:
+                dispatches, draft_dispatches = self._step_speculative(
+                    completed, verify_shapes)
+            else:
+                dispatches = self._step_decode(completed, decode_pages,
+                                               decode_kv)
 
         self.engine_steps += 1
         return StepReport(admitted, prefill_shapes, dispatches,
                           self.max_batch if dispatches else 0, completed,
-                          shed, decode_pages)
+                          shed, decode_pages, decode_kv, verify_shapes,
+                          draft_dispatches)
+
+    def _step_decode(self, completed: List[Completion],
+                     decode_pages: List[int], decode_kv: List[int]) -> int:
+        """Plain decode: ONE fixed-shape ragged dispatch per live
+        version, each row advancing exactly one token."""
+        dispatches = 0
+        fn = self._get_decode_fn()
+        rids = np.zeros(self.max_batch, np.int32)
+        gidx = np.zeros(self.max_batch, np.int32)
+        for s in range(self.max_batch):
+            if self._live[s]:
+                rids[s] = self._slots[s].req.rid % (2 ** 31)
+                gidx[s] = len(self._slots[s].gen)
+        vers = sorted({self._slots[s].ver
+                       for s in range(self.max_batch) if self._live[s]})
+        for ver in vers:
+            group = np.array([self._live[s]
+                              and self._slots[s].ver == ver
+                              for s in range(self.max_batch)], bool)
+            if self.paged:
+                rmap, wmap = self._decode_page_maps(group)
+                decode_pages.append(sum(
+                    int(self._pos[s]) // self.page_size + 1
+                    for s in range(self.max_batch) if group[s]))
+                nxt, self.cache = fn(self._versions[ver],
+                                     jnp.asarray(self._tok[:, None]),
+                                     jnp.asarray(self._pos),
+                                     jnp.asarray(group), self.cache,
+                                     jnp.asarray(rids),
+                                     jnp.asarray(gidx),
+                                     jnp.asarray(rmap),
+                                     jnp.asarray(wmap))
+            else:
+                if self.decode_kernel == "flash":
+                    # the kernel's pos-bounded scan streams only the
+                    # live KV tokens — record them for the cost model
+                    kv = sum(int(self._pos[s]) + 1
+                             for s in range(self.max_batch) if group[s])
+                    decode_kv.append(kv)
+                    self.decode_kv_tokens += kv
+                nxt, self.cache = fn(self._versions[ver],
+                                     jnp.asarray(self._tok[:, None]),
+                                     jnp.asarray(self._pos),
+                                     jnp.asarray(group), self.cache,
+                                     jnp.asarray(rids),
+                                     jnp.asarray(gidx))
+            nxt = np.asarray(nxt)
+            dispatches += 1
+            self.decode_dispatches += 1
+            self.decode_rows_live += int(group.sum())
+            self.decode_rows_total += self.max_batch
+            for s in range(self.max_batch):
+                if not group[s]:
+                    continue
+                st = self._slots[s]
+                st.gen.append(int(nxt[s]))
+                self._pos[s] += 1
+                self._tok[s] = int(nxt[s])
+                if len(st.gen) >= st.req.max_new:
+                    completed.append(self._finish(s))
+        return dispatches
+
+    def _step_speculative(self, completed: List[Completion],
+                          verify_shapes: List[Tuple[int, int]]
+                          ) -> Tuple[int, int]:
+        """Speculative decode round (docs/serving.md §9): draft up to k
+        tokens per live row in ONE dispatch, then verify each version
+        group with ONE prefill-chunk-shaped dispatch over [current
+        token, drafts...] at the row's frontier. Greedy accept rule: the
+        longest prefix of drafts matching the target's own argmax chain,
+        plus the target token at the first mismatch (or the bonus token
+        when everything matched) — by induction every emitted token is
+        exactly the target model's greedy choice, so the stream is
+        BIT-EQUAL to non-speculative decoding; the draft only decides
+        how many of those tokens one dispatch advances. Rejected drafts
+        leave stale KV past the new frontier, which the next chunk
+        overwrites before any query can attend it (write-then-attend,
+        contiguous from the frontier — same argument as the slot-reuse
+        invariant)."""
+        spec = self._spec
+        B, W, k = self.max_batch, spec.window, spec.k
+        win = np.zeros((B, W), np.int32)
+        hlen = np.zeros(B, np.int32)
+        kb = np.zeros(B, np.int32)
+        for s in range(B):
+            if not self._live[s]:
+                continue
+            st = self._slots[s]
+            hist = list(st.req.prompt) + st.gen
+            take = min(len(hist), W - k)
+            win[s, :take] = hist[-take:]
+            hlen[s] = take
+            # never draft past the request's budget: emitting <= kb+1
+            # tokens keeps gen from overshooting max_new, and keeps
+            # every KV write within the allocated pages / max_seq
+            kb[s] = min(k, st.req.max_new - len(st.gen) - 1)
+        draft_dispatches = 0
+        if (kb > 0).any():
+            dfn = self._get_draft_fn()
+            drafts = np.asarray(dfn(spec.draft_params, jnp.asarray(win),
+                                    jnp.asarray(hlen)))
+            draft_dispatches = 1
+            self.drafted += int(kb.sum())
+        else:
+            drafts = np.zeros((B, k), np.int32)
+        vcap = pow2_bucket(k + 1)       # pinned: ONE verify bucket ever
+        dispatches = 0
+        vers = sorted({self._slots[s].ver
+                       for s in range(B) if self._live[s]})
+        for ver in vers:
+            group = np.array([self._live[s]
+                              and self._slots[s].ver == ver
+                              for s in range(B)], bool)
+            tokens = np.zeros((B, vcap), np.int32)
+            off = np.zeros(B, np.int32)
+            cl = np.zeros(B, np.int32)
+            for s in range(B):
+                if not group[s]:
+                    continue
+                nkb = int(kb[s])
+                tokens[s, 0] = self._tok[s]
+                tokens[s, 1:1 + nkb] = drafts[s, :nkb]
+                off[s] = self._pos[s]
+                cl[s] = 1 + nkb
+            fn = self._get_verify_fn(vcap)
+            if self.paged:
+                rmap, wmap = self._decode_page_maps(group)
+                nxt, self.cache = fn(self._versions[ver],
+                                     jnp.asarray(tokens),
+                                     jnp.asarray(off), jnp.asarray(cl),
+                                     jnp.asarray(rmap),
+                                     jnp.asarray(wmap), self.cache)
+            else:
+                nxt, self.cache = fn(self._versions[ver],
+                                     jnp.asarray(tokens),
+                                     jnp.asarray(off), jnp.asarray(cl),
+                                     self.cache)
+            nxt = np.asarray(nxt)       # (B, vcap) greedy per chunk col
+            dispatches += 1
+            self.decode_dispatches += 1
+            self.decode_rows_live += int(group.sum())
+            self.decode_rows_total += B
+            verify_shapes.append((B, vcap))
+            for s in range(B):
+                if not group[s]:
+                    continue
+                st = self._slots[s]
+                nkb = int(kb[s])
+                acc = 0
+                while acc < nkb and int(drafts[s, acc]) == int(nxt[s, acc]):
+                    acc += 1
+                emitted = [int(t) for t in drafts[s, :acc]] \
+                    + [int(nxt[s, acc])]
+                st.gen.extend(emitted)
+                self._pos[s] += len(emitted)
+                self._tok[s] = emitted[-1]
+                self.spec_rounds += 1
+                self.accepted += acc
+                if len(st.gen) >= st.req.max_new:
+                    completed.append(self._finish(s))
+        return dispatches, draft_dispatches
 
     # ------------------------------------------------------------------
     @property
@@ -875,6 +1101,10 @@ class ServingEngine:
         self.pages_peak = 0
         self.prefix_hits = 0
         self.reused_tokens = 0
+        self.decode_kv_tokens = 0
+        self.spec_rounds = 0
+        self.drafted = 0
+        self.accepted = 0
         self._rids_active = set()   # rids are scoped per run: a replay
                                     # reuses the same ids legitimately
 
@@ -903,7 +1133,10 @@ class ServingEngine:
             shed=list(self.shed_log),
             concurrency_peak=self.concurrency_peak,
             pages_peak=self.pages_peak, prefix_hits=self.prefix_hits,
-            reused_tokens=self.reused_tokens)
+            reused_tokens=self.reused_tokens,
+            decode_kv_tokens=self.decode_kv_tokens,
+            spec_rounds=self.spec_rounds, drafted=self.drafted,
+            accepted=self.accepted)
 
     def run_simulated(self, requests: Sequence[ServeRequest],
                       cost: "Any",
@@ -1007,12 +1240,29 @@ class SimulatedServeSession:
         dt = 0.0
         for shape in rep.prefill_shapes:
             dt += self.cost.prefill_time(*shape)
+        draft_time = getattr(self.cost, "draft_time", None)
+        if rep.draft_dispatches and draft_time is not None:
+            spec = self.engine._spec
+            dt += rep.draft_dispatches * draft_time(
+                spec.k, self.engine.max_batch, spec.window)
         paged_time = getattr(self.cost, "decode_time_paged", None)
-        if rep.decode_pages and paged_time is not None:
+        flash_time = getattr(self.cost, "decode_time_flash", None)
+        if rep.verify_shapes:
+            # speculative: verification is a prefill-chunk dispatch, so
+            # it is charged at prefill rates — that the chunk advances up
+            # to k+1 tokens per row is exactly the speculative win
+            for shape in rep.verify_shapes:
+                dt += self.cost.prefill_time(*shape)
+        elif rep.decode_pages and paged_time is not None:
             # paged engine: decode streams only the LIVE pages, which is
             # the whole memory-bound win (core/simulation.ServeCostModel)
             for pages in rep.decode_pages:
                 dt += paged_time(pages, self.engine.pages_per_slot)
+        elif rep.decode_kv and flash_time is not None:
+            # dense flash kernel: the pos-bounded scan touches only the
+            # live KV tokens, not the full max_seq rectangle
+            for kv in rep.decode_kv:
+                dt += flash_time(kv, self.engine.max_seq)
         else:
             dt += rep.decode_dispatches \
                 * self.cost.decode_time(self.engine.max_batch)

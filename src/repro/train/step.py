@@ -12,6 +12,8 @@ zeroes per-worker row ranges without recompiling (see core/mesh_engine).
 """
 from __future__ import annotations
 
+import warnings
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -61,76 +63,187 @@ def build_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
     return train_step
 
 
-def build_prefill_step(cfg: ArchConfig, unroll: bool = False,
-                       cache_len: Optional[int] = None):
-    """Prefill step fn. The batch may carry ``lengths`` (B,) int32 for
-    RAGGED prompts (row b's true prompt is ``tokens[b, :lengths[b]]``):
-    the returned logits are then each row's last VALID column, and the
-    serving engine scatters the cache into its shared slot buffers
-    (repro.serving.engine). ``cache_len`` pins the built cache's KV length
-    (the engine passes its prompt bucket so shapes stay bucketed)."""
-    def prefill_step(params, batch):
+# ---------------------------------------------------------------------------
+# Serving programs — ONE factory for every serving step function
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServePrograms:
+    """The complete set of (unjitted) serving step functions for one
+    ``(cfg, paged, decode_kernel)`` choice — built once by
+    ``build_serve_programs`` and jitted/bucketed by the caller
+    (repro.serving.engine wraps them with its trace counter and sampler;
+    launch/serve.py jits them directly).
+
+    Signatures (``B``=batch, ``C``=chunk, ``P``=pages per row):
+
+      prefill(params, batch)                      -> (logits (B,1,V), cache)
+      prefill_chunk  dense: (params, tokens (B,C), off, clen, cache)
+                     paged: (params, tokens, off, clen, pool, rmap, wmap)
+      verify         same as prefill_chunk but returns ALL chunk logits
+                     (B,C,V) — the speculative-verification program
+      decode         dense: (params, token (B,1), pos (B,), cache, live)
+                     paged: (params, token, pos, pool, live, rmap, wmap)
+      decode_lockstep(params, token, pos_scalar, cache)   [dense only]
+    """
+    cfg: ArchConfig
+    paged: bool
+    decode_kernel: str
+    prefill: Callable
+    prefill_chunk: Callable
+    verify: Callable
+    decode: Callable
+    decode_lockstep: Optional[Callable]
+
+
+def build_serve_programs(cfg: ArchConfig, *, paged: bool,
+                         unroll: bool = False,
+                         decode_kernel: str = "xla",
+                         prefill_cache_len: Optional[int] = None
+                         ) -> ServePrograms:
+    """Build every serving step function in one place. ``paged`` selects
+    the KV layout (dense slot cache vs paged pool + page maps);
+    ``decode_kernel`` selects the decode attention implementation:
+    ``"xla"`` (the ``attention_decode_ragged`` oracle) or ``"flash"``
+    (the fused Pallas flash-decode kernel — paged mode reads the page
+    pool directly with no gather). ``prefill_cache_len`` pins the
+    single-shot prefill's cache length (bucketed shapes).
+
+    Replaces the five historical ``build_*_step`` factories, which
+    remain as thin deprecated wrappers."""
+    if decode_kernel not in ("xla", "flash"):
+        raise ValueError(f"decode_kernel={decode_kernel!r}: expected "
+                         f"'xla' or 'flash'")
+
+    def prefill(params, batch):
         kw = {}
         if cfg.arch_type == "vlm":
             kw["prefix"] = batch.get("prefix")
         if cfg.arch_type == "audio":
             kw["frames"] = batch.get("frames")
-        logits, cache = tf.prefill(params, cfg, batch["tokens"],
-                                   unroll=unroll, cache_len=cache_len,
-                                   lengths=batch.get("lengths"), **kw)
-        return logits, cache
-    return prefill_step
+        return tf.prefill(params, cfg, batch["tokens"], unroll=unroll,
+                          cache_len=prefill_cache_len,
+                          lengths=batch.get("lengths"), **kw)
+
+    if paged:
+        def prefill_chunk(params, tokens, off, clen, pool, rmap, wmap):
+            return tf.prefill_chunk_paged(params, cfg, tokens, off, clen,
+                                          pool, rmap, wmap, unroll=unroll)
+
+        def verify(params, tokens, off, clen, pool, rmap, wmap):
+            return tf.prefill_chunk_paged(params, cfg, tokens, off, clen,
+                                          pool, rmap, wmap, unroll=unroll,
+                                          all_logits=True)
+
+        if decode_kernel == "flash":
+            def decode(params, token, pos, pool, live, rmap, wmap):
+                return tf.decode_step_ragged_paged_flash(
+                    params, cfg, token, pos, pool, live, rmap, wmap,
+                    unroll=unroll)
+        else:
+            def decode(params, token, pos, pool, live, rmap, wmap):
+                return tf.decode_step_ragged_paged(
+                    params, cfg, token, pos, pool, live, rmap, wmap,
+                    unroll=unroll)
+        return ServePrograms(cfg=cfg, paged=True,
+                             decode_kernel=decode_kernel, prefill=prefill,
+                             prefill_chunk=prefill_chunk, verify=verify,
+                             decode=decode, decode_lockstep=None)
+
+    def prefill_chunk(params, tokens, off, clen, cache):
+        return tf.prefill_chunk(params, cfg, tokens, off, clen, cache,
+                                unroll=unroll)
+
+    def verify(params, tokens, off, clen, cache):
+        return tf.prefill_chunk(params, cfg, tokens, off, clen, cache,
+                                unroll=unroll, all_logits=True)
+
+    def decode(params, token, pos, cache, live):
+        return tf.decode_step_ragged(params, cfg, token, pos, cache, live,
+                                     unroll=unroll,
+                                     flash=decode_kernel == "flash")
+
+    def decode_lockstep(params, token, pos, cache):
+        return tf.decode_step(params, cfg, token, pos, cache, unroll=unroll)
+
+    return ServePrograms(cfg=cfg, paged=False, decode_kernel=decode_kernel,
+                         prefill=prefill, prefill_chunk=prefill_chunk,
+                         verify=verify, decode=decode,
+                         decode_lockstep=decode_lockstep)
+
+
+def build_draft_program(cfg: ArchConfig, *, k: int, window: int):
+    """Speculative-decoding DRAFT program (part of the consolidated
+    serving-program API; docs/serving.md §9): a cacheless greedy k-token
+    proposer over a fixed ``(B, window)`` token buffer.
+
+    ``(params, window_toks (B,W) int32, hlen (B,) int32) -> (B,k) int32``
+    — row b's history is ``window_toks[b, :hlen_b]`` (left-aligned, the
+    caller truncates to the last ``window - k`` tokens so all k writes
+    fit); the program unrolls k greedy forwards, writing each proposal at
+    column ``hlen + i``. Causal masking makes the padding tail invisible,
+    so proposals depend only on the visible history. ONE trace per
+    (B, W) shape; draft quality moves the ACCEPTANCE RATE only — the
+    engine's accept rule keeps the emitted stream equal to the target
+    model's greedy output regardless (repro.serving.engine)."""
+    def draft(params, window_toks, hlen):
+        B, W = window_toks.shape
+        rows = jnp.arange(B)
+        toks = window_toks
+        hl = hlen.astype(jnp.int32)
+        outs = []
+        for i in range(k):
+            logits, _ = tf.forward(params, cfg, toks, remat=False)
+            col = jnp.clip(hl - 1 + i, 0, W - 1)
+            step = jnp.take_along_axis(logits, col[:, None, None],
+                                       axis=1)[:, 0, :]
+            nxt = jnp.argmax(step, axis=-1).astype(jnp.int32)
+            outs.append(nxt)
+            wcol = jnp.clip(hl + i, 0, W - 1)
+            toks = toks.at[rows, wcol].set(nxt)
+        return jnp.stack(outs, axis=1)
+    return draft
+
+
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use build_serve_programs(cfg, paged=...) "
+        f"and pick the program off the returned ServePrograms",
+        DeprecationWarning, stacklevel=3)
+
+
+def build_prefill_step(cfg: ArchConfig, unroll: bool = False,
+                       cache_len: Optional[int] = None):
+    """DEPRECATED: use ``build_serve_programs(...).prefill``."""
+    _deprecated("build_prefill_step")
+    return build_serve_programs(cfg, paged=False, unroll=unroll,
+                                prefill_cache_len=cache_len).prefill
 
 
 def build_prefill_chunk_step(cfg: ArchConfig, unroll: bool = False):
-    """Chunked-prefill step fn ``(params, tokens (B,C), off (B,), clen
-    (B,), cache) -> (last-valid logits (B,1,V), cache)`` — one chunk of a
-    long prompt into the serving engine's slot cache segments
-    (``tf.prefill_chunk``; docs/serving.md). The engine buckets (B, C)
-    to powers of two so the trace count stays bounded by buckets."""
-    def prefill_chunk_step(params, tokens, off, clen, cache):
-        return tf.prefill_chunk(params, cfg, tokens, off, clen, cache,
-                                unroll=unroll)
-    return prefill_chunk_step
+    """DEPRECATED: use ``build_serve_programs(...).prefill_chunk``."""
+    _deprecated("build_prefill_chunk_step")
+    return build_serve_programs(cfg, paged=False,
+                                unroll=unroll).prefill_chunk
 
 
 def build_paged_prefill_chunk_step(cfg: ArchConfig, unroll: bool = False):
-    """Chunked-prefill step fn over the serving engine's PAGED KV pool
-    (docs/serving.md §8): ``(params, tokens (B,C), off, clen, pool,
-    rmap (B,P), wmap (B,P)) -> (last-valid logits (B,1,V), pool)``. The
-    read map gathers each row's pages into a linear view, the chunk math
-    is ``tf.prefill_chunk`` UNCHANGED, and the write map scatters back —
-    OOB entries (padding rows, unused tails, frozen shared pages) drop."""
-    def paged_chunk_step(params, tokens, off, clen, pool, rmap, wmap):
-        return tf.prefill_chunk_paged(params, cfg, tokens, off, clen, pool,
-                                      rmap, wmap, unroll=unroll)
-    return paged_chunk_step
+    """DEPRECATED: use ``build_serve_programs(..., paged=True)
+    .prefill_chunk``."""
+    _deprecated("build_paged_prefill_chunk_step")
+    return build_serve_programs(cfg, paged=True,
+                                unroll=unroll).prefill_chunk
 
 
 def build_paged_decode_step(cfg: ArchConfig, unroll: bool = False):
-    """Ragged one-token decode over the PAGED KV pool: ``(params, token,
-    pos (B,), pool, live (B,), rmap (B,P), wmap (B,P))``. Fixed map
-    shapes keep this a single trace however pages are laid out."""
-    def paged_decode_step(params, token, pos, pool, live, rmap, wmap):
-        return tf.decode_step_ragged_paged(params, cfg, token, pos, pool,
-                                           live, rmap, wmap, unroll=unroll)
-    return paged_decode_step
+    """DEPRECATED: use ``build_serve_programs(..., paged=True).decode``."""
+    _deprecated("build_paged_decode_step")
+    return build_serve_programs(cfg, paged=True, unroll=unroll).decode
 
 
 def build_decode_step(cfg: ArchConfig, unroll: bool = False,
                       ragged: bool = False):
-    """Decode step fn. ``ragged=False`` (default): the classic lockstep
-    signature ``(params, token, pos_scalar, cache)`` — every row at the
-    same position. ``ragged=True``: the continuous-batching signature
-    ``(params, token, pos (B,), cache, live (B,))`` with per-slot
-    positions and a live mask, writing into the engine's shared slot
-    cache (repro.serving)."""
-    if ragged:
-        def ragged_decode_step(params, token, pos, cache, live):
-            return tf.decode_step_ragged(params, cfg, token, pos, cache,
-                                         live, unroll=unroll)
-        return ragged_decode_step
-
-    def decode_step(params, token, pos, cache):
-        return tf.decode_step(params, cfg, token, pos, cache, unroll=unroll)
-    return decode_step
+    """DEPRECATED: use ``build_serve_programs(...).decode`` (ragged) or
+    ``.decode_lockstep``."""
+    _deprecated("build_decode_step")
+    progs = build_serve_programs(cfg, paged=False, unroll=unroll)
+    return progs.decode if ragged else progs.decode_lockstep
