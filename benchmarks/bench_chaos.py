@@ -93,7 +93,8 @@ def _time_to_target(logs, target: float) -> Optional[float]:
 
 
 def _replay_corrupted(stats, versions, reqs, cfg) -> int:
-    from repro.serving import ServeRequest, ServingEngine
+    from repro.serving import (ServeRequest, ServingConfig,
+                               ServingEngine)
 
     by_rid = {r.rid: r for r in reqs}
     replayers: Dict[int, ServingEngine] = {}
@@ -103,8 +104,10 @@ def _replay_corrupted(stats, versions, reqs, cfg) -> int:
             # smaller batch: an independent decode trace, so the replay
             # does not share the co-batched path's bugs
             replayers[c.version] = ServingEngine(
-                versions[c.version], cfg, max_batch=2, max_seq=MAX_SEQ,
-                prompt_cap=PROMPT_CAP)
+                versions[c.version], cfg,
+                serving=ServingConfig.from_flat(max_batch=2,
+                                                max_seq=MAX_SEQ,
+                                                prompt_cap=PROMPT_CAP))
         r = by_rid[c.rid]
         solo = replayers[c.version].run_closed_loop(
             [ServeRequest(rid=r.rid, prompt=r.prompt,

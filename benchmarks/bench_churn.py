@@ -60,8 +60,9 @@ DEADLINE_SLACK = 1.5
 def _build(straggler: bool, deadline: bool, seed: int = 0):
     import jax
 
-    from repro.core import (GradientCompressor, JoinEvent, MasterEventLoop,
-                            MasterReducer, UploadDataEvent)
+    from repro.core import (DeadlineConfig, GradientCompressor, JoinEvent,
+                            MasterEventLoop, MasterReducer, TrainingConfig,
+                            UploadDataEvent)
     from repro.core.scheduler import AdaptiveScheduler
     from repro.core.simulation import (DeviceProfile, SimulatedCluster,
                                        make_cnn_problem)
@@ -80,8 +81,9 @@ def _build(straggler: bool, deadline: bool, seed: int = 0):
         reducer=red, cluster=cluster,
         scheduler=AdaptiveScheduler(T=T, prior_power=POWER,
                                     min_budget=0.05),
-        deadline_quantile=DEADLINE_QUANTILE if deadline else None,
-        deadline_slack=DEADLINE_SLACK)
+        training=TrainingConfig(deadline=DeadlineConfig(
+            quantile=DEADLINE_QUANTILE if deadline else None,
+            slack=DEADLINE_SLACK)))
     loop.submit(UploadDataEvent(range(N_DATA)))
 
     def healthy(i):

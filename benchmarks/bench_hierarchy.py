@@ -1,0 +1,353 @@
+"""Two-tier hierarchical reduce + WAN gossip vs one flat master.
+
+MLitB §3.5/Fig. 4 measures the single-master wall: gradient messages
+queue at one ingest process, so per-message latency grows linearly with
+fleet size (the ~1s knee at 64-96 browsers). core/hierarchy.py breaks
+the wall with REGIONAL SUB-MASTERS — each runs the existing
+deadline/compressed fused reduce over its own fleet on the intra-region
+fast path, and only compressed H-step model deltas cross the WAN in the
+outer gossip exchange (docs/hierarchy.md).
+
+Setting: linear regression under fused top-k compression, simulated
+discrete-event wall-clock until the vector-weighted train-loss EWMA
+crosses TARGET. The fleet is 104 homogeneous workers; the simulated
+congestion model charges each reply ``service * (peers - 1) / 2``
+queueing where ``peers`` is the whole fleet at a flat master but only
+the same-region fleet under a sub-master.
+
+Arms (seed 0; the clock is simulated, so shared-runner noise cannot
+flake the ratios):
+
+  - **flat**: one master, 104 workers — every message queues behind 103
+    peers (the paper's Fig. 4 regime);
+  - **hierarchical**: 4 regions x 26 workers, H inner reduces per outer
+    gossip step, top-k compressed WAN channel with error feedback.
+
+Gates (full mode):
+
+  - speedup: hierarchical time-to-target >= 2x faster than flat at 104
+    workers / 4 regions;
+  - parity: on a homogeneous SINGLE-REGION fleet (26 workers, gossip
+    off) the hierarchy matches the flat master's time-to-target within
+    5% — the outer tier adds no arithmetic of its own;
+  - WAN discipline: compressed gossip bytes stay a minor fraction of
+    the intra-region wire total;
+  - resume: a mid-run two-tier TrainState checkpoint resumes BIT-EXACT
+    (consensus params equal to the last byte).
+
+``--smoke`` (CI): the same four checks at toy scale (24 workers over 4
+regions, fixed step counts instead of time-to-target), plus the
+BENCH_hierarchy.json artifact the bench-regression job consumes —
+headlines ``hierarchy_speedup``, ``parity_ratio``, ``wan_bytes_frac``,
+``trace_count`` are all deterministic simulated-clock numbers.
+
+    PYTHONPATH=src python benchmarks/bench_hierarchy.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+N_FEAT = 48
+N_DATA = 4160
+T = 0.5                       # inner iteration budget (s)
+LR = 0.1
+FRAC = 0.25                   # intra-region top-k keep fraction
+N_REGIONS = 4
+N_WORKERS = 104               # 26 per region
+INNER_STEPS = 2               # H: inner reduces per outer gossip step
+GOSSIP_FRAC = 0.5             # WAN top-k keep fraction (smaller keeps
+                              # cannot track the inner drift at this lr:
+                              # the CHOCO consensus step needs the
+                              # channel to ship most of each delta)
+TARGET = 2.0                  # vector-mean train-loss EWMA target
+MAX_INNER = 160
+SPEEDUP_GATE = 2.0
+PARITY_TOL = 0.05
+
+SMOKE_WORKERS = 24
+SMOKE_OUTER = 5
+
+
+def _problem(seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(seed)
+    w_true = rng.randn(N_FEAT).astype(np.float32)
+    X = rng.randn(N_DATA, N_FEAT).astype(np.float32)
+    y = (X @ w_true).astype(np.float32)
+
+    @jax.jit
+    def _lg(params, Xb, yb):
+        def loss_fn(p):
+            r = Xb @ p["w"] - yb
+            return 0.5 * jnp.sum(r * r)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        return g, loss
+
+    def grad_fn(params, Xb, yb):
+        g, loss = _lg(params, jnp.asarray(Xb), jnp.asarray(yb))
+        return g, float(loss)
+
+    return {"w": jnp.zeros(N_FEAT)}, grad_fn, (X, y)
+
+
+def _region_loop(name: str, cluster, params, worker_ids, shard):
+    from repro.core import (DeadlineConfig, GradientCompressor, JoinEvent,
+                            MasterEventLoop, MasterReducer, TrainingConfig,
+                            UploadDataEvent)
+    from repro.core.scheduler import AdaptiveScheduler
+    from repro.core.simulation import DeviceProfile
+    from repro.optim import sgd
+
+    red = MasterReducer(params, sgd(lr=LR),
+                        compressor=GradientCompressor("topk", frac=FRAC),
+                        fused=True)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster,
+        scheduler=AdaptiveScheduler(T=T, prior_power=300.0,
+                                    min_budget=0.05),
+        training=TrainingConfig(T=T, deadline=DeadlineConfig()))
+    loop.submit(UploadDataEvent(shard))
+    for i, w in enumerate(worker_ids):
+        cluster.add_worker(w, DeviceProfile(f"dev{i}", 300.0, 0.010, 0.05,
+                                            uplink_bps=5e4),
+                           region=name if name else None)
+        loop.submit(JoinEvent(w, capacity=N_DATA))
+    return loop
+
+
+def build_flat(n_workers: int, seed: int = 0):
+    """One master, every worker congesting the same ingest queue."""
+    from repro.core.simulation import (RegionalNetworkModel,
+                                      SimulatedCluster)
+
+    params, grad_fn, (X, y) = _problem()
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=seed, network=RegionalNetworkModel())
+    loop = _region_loop("", cluster, params,
+                        [f"w{i}" for i in range(n_workers)],
+                        range(N_DATA))
+    return loop, cluster
+
+
+def build_hier(n_workers: int, n_regions: int, seed: int = 0, *,
+               gossip: bool = True, inner_steps: int = INNER_STEPS):
+    """n_regions sub-masters over one shared region-aware cluster."""
+    from repro.core import HierarchicalMaster, HierarchyConfig
+    from repro.core.simulation import (RegionalNetworkModel,
+                                      SimulatedCluster)
+
+    params, grad_fn, (X, y) = _problem()
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=seed, network=RegionalNetworkModel())
+    per = n_workers // n_regions
+    regions = {}
+    for ri in range(n_regions):
+        name = f"r{ri}"
+        # same global worker names as the flat arm, so the parity arm
+        # sees identical per-worker RNG streams
+        ids = [f"w{ri * per + i}" for i in range(per)]
+        regions[name] = _region_loop(
+            name, cluster, params, ids,
+            range(ri, N_DATA, n_regions) if n_regions > 1
+            else range(N_DATA))
+    cfg = HierarchyConfig(n_regions=n_regions, inner_steps=inner_steps,
+                          gossip=gossip, gossip_frac=GOSSIP_FRAC,
+                          gossip_seed=seed)
+    master = HierarchicalMaster(regions=regions, config=cfg,
+                                network=cluster.network)
+    return master, cluster
+
+
+# ---------------------------------------------------------------------------
+# time-to-target on the shared simulated clock
+# ---------------------------------------------------------------------------
+def _ewma(prev: Optional[float], loss: float) -> Optional[float]:
+    if not np.isfinite(loss):
+        return prev
+    return loss if prev is None else 0.7 * prev + 0.3 * loss
+
+
+def time_to_target_flat(n_workers: int) -> Tuple[float, int]:
+    loop, _ = build_flat(n_workers)
+    ew = None
+    for it in range(MAX_INNER):
+        ew = _ewma(ew, loop.iteration().loss)
+        if ew is not None and ew < TARGET:
+            return loop.clock, it + 1
+    return float("inf"), MAX_INNER
+
+
+def time_to_target_hier(n_workers: int, n_regions: int, *,
+                        gossip: bool = True) -> Tuple[float, int, Dict]:
+    """EWMA over per-INNER-step fleet losses (vector-weighted across
+    regions), so the crossing test sees exactly the same loss stream
+    cadence as the flat arm — on a single region the two are
+    bit-identical and parity is exactly 1.0."""
+    master, _ = build_hier(n_workers, n_regions, gossip=gossip)
+    ew = None
+    inner_done = 0
+    while inner_done < MAX_INNER:
+        live = master.live_regions
+        start = {r: master.regions[r].clock for r in live}
+        master.iteration()
+        hists = {r: master.regions[r].history[-INNER_STEPS:]
+                 for r in live}
+        for h in range(INNER_STEPS):
+            num = sum(hists[r][h].loss * hists[r][h].vectors
+                      for r in live if np.isfinite(hists[r][h].loss))
+            den = sum(hists[r][h].vectors for r in live
+                      if np.isfinite(hists[r][h].loss))
+            ew = _ewma(ew, num / den if den else float("nan"))
+            inner_done += 1
+            if ew is not None and ew < TARGET:
+                clock = max(
+                    start[r] + sum(lg.wall_time
+                                   for lg in hists[r][:h + 1])
+                    for r in live)
+                return clock, inner_done, master.summary()
+    return float("inf"), MAX_INNER, master.summary()
+
+
+# ---------------------------------------------------------------------------
+# the four checks, at either scale
+# ---------------------------------------------------------------------------
+def check_resume_bit_exact(n_workers: int, n_regions: int,
+                           outer_total: int = 4) -> int:
+    """Uninterrupted vs checkpoint-at-half resume: consensus params,
+    clocks and WAN accounting must agree to the last byte. Returns the
+    fleet-wide reducer trace count of the base run."""
+    from repro.checkpoint import (TrainState, load_train_state,
+                                  save_train_state)
+
+    cut = outer_total // 2
+    base, base_cluster = build_hier(n_workers, n_regions)
+    base.run(outer_total)
+
+    part, part_cluster = build_hier(n_workers, n_regions)
+    part.run(cut)
+    with tempfile.NamedTemporaryFile(suffix=".npz") as f:
+        save_train_state(f.name, TrainState.capture(part, part_cluster))
+        resumed, resumed_cluster = build_hier(n_workers, n_regions)
+        load_train_state(f.name).restore(resumed, resumed_cluster)
+    resumed.run(outer_total - cut)
+
+    assert np.array_equal(np.asarray(base.consensus_flat()),
+                          np.asarray(resumed.consensus_flat())), \
+        "two-tier resume diverged from the uninterrupted run"
+    assert base.clock == resumed.clock and \
+        base.wan_bytes == resumed.wan_bytes
+    return sum(lp.reducer.trace_count for lp in base.regions.values())
+
+
+def run_full() -> Dict:
+    flat_clock, flat_iters = time_to_target_flat(N_WORKERS)
+    hier_clock, hier_iters, hsum = time_to_target_hier(N_WORKERS,
+                                                       N_REGIONS)
+    speedup = flat_clock / hier_clock
+    print(f"flat   {N_WORKERS} workers: clock={flat_clock:8.2f}s "
+          f"iters={flat_iters}")
+    print(f"hier   {N_REGIONS}x{N_WORKERS // N_REGIONS}: "
+          f"clock={hier_clock:8.2f}s inner_iters={hier_iters} "
+          f"(speedup {speedup:.2f}x, wan_frac "
+          f"{hsum['wan_bytes_frac']:.4f})")
+
+    # parity: single region, gossip off, same 26-worker fleet
+    per = N_WORKERS // N_REGIONS
+    p_flat_clock, _ = time_to_target_flat(per)
+    p_hier_clock, _, _ = time_to_target_hier(per, 1, gossip=False)
+    parity = p_hier_clock / p_flat_clock
+    print(f"parity {per} workers single-region: hier={p_hier_clock:.2f}s "
+          f"flat={p_flat_clock:.2f}s (ratio {parity:.3f})")
+
+    trace_count = check_resume_bit_exact(SMOKE_WORKERS, N_REGIONS)
+    return {"flat_clock": flat_clock, "flat_iters": flat_iters,
+            "hier_clock": hier_clock, "hier_iters": hier_iters,
+            "hierarchy_speedup": speedup, "parity_ratio": parity,
+            "wan_bytes": hsum["wan_bytes"],
+            "intra_bytes": hsum["intra_bytes"],
+            "wan_bytes_frac": hsum["wan_bytes_frac"],
+            "trace_count": trace_count}
+
+
+def run_smoke() -> Dict:
+    """Toy scale, fixed step counts: every number is a deterministic
+    simulated-clock quantity, safe to gate against a committed
+    baseline on shared runners."""
+    n, R = SMOKE_WORKERS, N_REGIONS
+    inner_total = SMOKE_OUTER * INNER_STEPS
+
+    flat, _ = build_flat(n)
+    flat_logs = flat.run(inner_total)
+    hier, _ = build_hier(n, R)
+    hier_logs = hier.run(SMOKE_OUTER)
+    speedup = flat.clock / hier.clock
+    hsum = hier.summary()
+    assert np.isfinite(hier_logs[-1].loss)
+    assert hier_logs[-1].loss < hier_logs[0].loss, "hierarchy not learning"
+    assert flat_logs[-1].loss < flat_logs[0].loss, "flat arm not learning"
+    assert speedup > 1.0, (
+        f"regional congestion relief missing: hier clock {hier.clock:.2f}s "
+        f"not below flat {flat.clock:.2f}s at {n} workers")
+    assert 0.0 < hsum["wan_bytes_frac"] < 0.5, hsum
+
+    # parity at 1 region, gossip off: bit-exact, so the ratio is 1.0
+    per = n // R
+    pf, _ = build_flat(per)
+    pf.run(inner_total)
+    ph, _ = build_hier(per, 1, gossip=False)
+    ph.run(SMOKE_OUTER)
+    parity = ph.clock / pf.clock
+    assert np.array_equal(
+        np.asarray(ph.regions["r0"].reducer.flat_params),
+        np.asarray(pf.reducer.flat_params)), \
+        "single-region hierarchy != flat master bit-exact"
+
+    trace_count = check_resume_bit_exact(n, R)
+    print(f"OK (smoke): {R}x{n // R} hierarchy {speedup:.2f}x flat clock "
+          f"over {inner_total} inner steps, wan_frac "
+          f"{hsum['wan_bytes_frac']:.4f}, single-region parity "
+          f"{parity:.3f} (bit-exact), resume bit-exact, "
+          f"{trace_count} traces fleet-wide")
+    return {"n_workers": n, "n_regions": R,
+            "flat_clock": flat.clock, "hier_clock": hier.clock,
+            "hierarchy_speedup": speedup, "parity_ratio": parity,
+            "wan_bytes": hsum["wan_bytes"],
+            "intra_bytes": hsum["intra_bytes"],
+            "wan_bytes_frac": hsum["wan_bytes_frac"],
+            "trace_count": trace_count}
+
+
+def main(argv: List[str]) -> None:
+    from _bench_io import emit_bench_json
+
+    smoke = "--smoke" in argv
+    out = run_smoke() if smoke else run_full()
+    out["mode"] = "smoke" if smoke else "full"
+    # record the measured numbers BEFORE gating, so a regression still
+    # leaves its artifact to diagnose from
+    emit_bench_json("hierarchy", out)
+    if smoke:
+        return
+    assert out["hierarchy_speedup"] >= SPEEDUP_GATE, (
+        f"hierarchy {out['hierarchy_speedup']:.2f}x < {SPEEDUP_GATE}x "
+        f"flat at {N_WORKERS} workers / {N_REGIONS} regions")
+    assert abs(out["parity_ratio"] - 1.0) <= PARITY_TOL, (
+        f"single-region hierarchy {out['parity_ratio']:.3f}x off the "
+        f"flat master's time-to-target (gate +/-{PARITY_TOL:.0%})")
+    assert out["wan_bytes_frac"] < 0.5, out["wan_bytes_frac"]
+    print(f"OK: hierarchical reduce {out['hierarchy_speedup']:.2f}x "
+          f"faster to target than one flat master at {N_WORKERS} workers "
+          f"(gate {SPEEDUP_GATE}x); single-region parity "
+          f"{out['parity_ratio']:.3f} (gate +/-{PARITY_TOL:.0%}); WAN "
+          f"bytes {out['wan_bytes_frac']:.2%} of total wire; two-tier "
+          f"resume bit-exact")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

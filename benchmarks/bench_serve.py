@@ -100,7 +100,8 @@ def run(n_req: int, seed: int = 0) -> Dict:
 
     from repro.core.simulation import ServeCostModel, generate_requests
     from repro.models import transformer as tf
-    from repro.serving import ServingEngine, simulate_static_batches
+    from repro.serving import (ServingConfig, ServingEngine,
+                               simulate_static_batches)
 
     cfg = _tiny_cfg()
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
@@ -109,8 +110,9 @@ def run(n_req: int, seed: int = 0) -> Dict:
         prompt_rng=(8, 48), gen_short=(4, 12), gen_long=(96, 160),
         long_frac=0.3, seed=seed)
     cost = ServeCostModel()
-    engine = ServingEngine(params, cfg, max_batch=MAX_BATCH,
-                           max_seq=MAX_SEQ)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=MAX_BATCH,
+                                                           max_seq=MAX_SEQ))
     cont = engine.run_simulated(reqs, cost)
     stat = simulate_static_batches(reqs, MAX_BATCH, cost)
     assert cont.n_requests == len(reqs) == stat.n_requests
@@ -146,7 +148,8 @@ def run_paged(n_req: int, seed: int = 0) -> Dict:
 
     from repro.core.simulation import ServeCostModel, generate_requests
     from repro.models import transformer as tf
-    from repro.serving import ServeRequest, ServingEngine
+    from repro.serving import (ServeRequest, ServingConfig,
+                               ServingEngine)
 
     cfg = _tiny_cfg()
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
@@ -159,19 +162,24 @@ def run_paged(n_req: int, seed: int = 0) -> Dict:
         long_frac=0.3, shared_prefix=(3, 32, 0.75), seed=seed)
     cost = ServeCostModel()
 
-    dense = ServingEngine(params, cfg, max_batch=MAX_BATCH,
-                          max_seq=MAX_SEQ)
+    dense = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=MAX_BATCH,
+                                                          max_seq=MAX_SEQ))
     ds = dense.run_simulated(reqs, cost)
-    paged = ServingEngine(params, cfg, max_batch=PAGED_MAX_BATCH,
-                          max_seq=MAX_SEQ, page_size=PAGE_SIZE,
-                          n_pages=N_PAGES)
+    paged = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=PAGED_MAX_BATCH,
+                                                          max_seq=MAX_SEQ,
+                                                          page_size=PAGE_SIZE,
+                                                          n_pages=N_PAGES))
     ps = paged.run_simulated(reqs, cost)
     assert ds.n_requests == ps.n_requests == n_req
 
     # every paged completion must be bit-exact vs a SOLO replay under a
     # single-slot DENSE oracle — one request alone in the engine, no
     # paging, no co-batching, no sharing
-    oracle = ServingEngine(params, cfg, max_batch=1, max_seq=MAX_SEQ)
+    oracle = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=1,
+                                                           max_seq=MAX_SEQ))
     exact = 0
     for c in sorted(ps.completions, key=lambda c: c.rid):
         req = next(r for r in reqs if r.rid == c.rid)

@@ -73,7 +73,8 @@ def _requests(n: int, cfg, seed: int):
 def run(n_req: int, iters: int, seed: int = 0) -> Dict:
     from repro.core.simulation import ServeCostModel
     from repro.launch.train_serve import run_train_serve, tiny_cfg
-    from repro.serving import ServeRequest, ServingEngine
+    from repro.serving import (ServeRequest, ServingConfig,
+                               ServingEngine)
 
     cfg = tiny_cfg()
     reqs = _requests(n_req, cfg, seed + 1)
@@ -92,8 +93,10 @@ def run(n_req: int, iters: int, seed: int = 0) -> Dict:
     swap_engine = out["engine"]
 
     # ---- no-swap arm: identical engine config, frozen initial params ----
-    frozen = ServingEngine(versions[0], cfg, max_batch=MAX_BATCH,
-                           max_seq=MAX_SEQ, prompt_cap=PROMPT_CAP)
+    frozen = ServingEngine(versions[0], cfg,
+                           serving=ServingConfig.from_flat(max_batch=MAX_BATCH,
+                                                           max_seq=MAX_SEQ,
+                                                           prompt_cap=PROMPT_CAP))
     base = frozen.run_simulated(reqs, cost)
 
     # ---- integrity: completeness + solo replay under pinned version ----
@@ -111,8 +114,10 @@ def run(n_req: int, iters: int, seed: int = 0) -> Dict:
             # smaller batch shape: an INDEPENDENT decode trace, so the
             # replay does not silently share the co-batched path's bugs
             replayers[c.version] = ServingEngine(
-                versions[c.version], cfg, max_batch=2,
-                max_seq=MAX_SEQ, prompt_cap=PROMPT_CAP)
+                versions[c.version], cfg,
+                serving=ServingConfig.from_flat(max_batch=2,
+                                                max_seq=MAX_SEQ,
+                                                prompt_cap=PROMPT_CAP))
         r = by_rid[c.rid]
         solo = replayers[c.version].run_closed_loop(
             [ServeRequest(rid=r.rid, prompt=r.prompt,

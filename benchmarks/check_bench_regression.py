@@ -73,6 +73,14 @@ HEADLINES = {
         ("time_to_target_ratio", "lower", None),
         ("chaos.queue_peak", "lower", None),
     ],
+    "hierarchy": [
+        # two-tier sub-masters vs one flat master (docs/hierarchy.md);
+        # every number is a deterministic simulated-clock quantity
+        ("hierarchy_speedup", "higher", None),
+        ("parity_ratio", "lower", None),
+        ("wan_bytes_frac", "lower", None),
+        ("trace_count", "lower", None),
+    ],
     "reprolint": [
         # static-analysis debt (tools/reprolint baseline size): growth
         # past tolerance is a regression; shrinkage is burn-down progress

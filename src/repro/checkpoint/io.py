@@ -218,11 +218,26 @@ def serving_params_from_train_state(state: Any, template: PyTree
     params tree of the run's architecture (``tf.init_params`` output is
     fine) — the fused reducer snapshots ONE flat fp32 buffer, and the
     template's FlatSpec is what unflattens it back into model shapes
-    and dtypes."""
+    and dtypes.
+
+    For a two-tier ``HierarchicalMaster`` snapshot (docs/hierarchy.md)
+    the served model is the CONSENSUS — the mean of the live regions'
+    flat buffers — and the version is the deepest region's step."""
     from repro.core.flatbuf import flat_spec
 
     if isinstance(state, str):
         state = load_train_state(state)
+    if "regions" in state.loop and "reducer" not in state.loop:
+        import jax.numpy as jnp
+        live = [str(r) for r in state.loop["active"]]
+        flats = [np.asarray(state.loop["regions"][r]["reducer"]["flat"],
+                            np.float32) for r in sorted(live)]
+        consensus = np.mean(np.stack(flats, 0), axis=0)
+        params = flat_spec(template).unflatten(
+            jnp.asarray(consensus, jnp.float32))
+        step = max(int(state.loop["regions"][r]["step"])
+                   for r in sorted(live))
+        return params, step
     red = state.loop["reducer"]
     if red["fused"]:
         import jax.numpy as jnp

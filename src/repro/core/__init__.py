@@ -6,11 +6,15 @@ from repro.core.allocator import DataAllocator  # noqa: F401
 from repro.core.closure import ResearchClosure  # noqa: F401
 from repro.core.compression import (CompressedMessage,  # noqa: F401
                                     GradientCompressor, decompress_flat)
+from repro.core.config import (DeadlineConfig,  # noqa: F401
+                               HierarchyConfig, PublishConfig,
+                               TrainingConfig)
 from repro.core.elastic import (JoinEvent, LeaveEvent,  # noqa: F401
                                 UploadDataEvent)
 from repro.core.event_loop import MasterEventLoop  # noqa: F401
 from repro.core.flatbuf import FlatSpec, flat_spec  # noqa: F401
 from repro.core.guardrails import (CanaryGate,  # noqa: F401
                                    GuardrailConfig, TrainingGuardrails)
+from repro.core.hierarchy import HierarchicalMaster  # noqa: F401
 from repro.core.reducer import MasterReducer, weighted_reduce  # noqa: F401
 from repro.core.scheduler import AdaptiveScheduler  # noqa: F401

@@ -16,6 +16,7 @@ return gradient sums over however many vectors they managed.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import asdict, dataclass, field
 
 import jax
@@ -23,6 +24,7 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.adaptive_frac import AdaptiveFracController
 from repro.core.allocator import DataAllocator
+from repro.core.config import TrainingConfig
 from repro.core.elastic import (EventQueue, JoinEvent, LeaveEvent,
                                 UploadDataEvent, WorkerRegistry)
 from repro.core.guardrails import TrainingGuardrails
@@ -30,6 +32,10 @@ from repro.core.reducer import MasterReducer
 from repro.core.scheduler import AdaptiveScheduler
 
 PyTree = Any
+
+# distinguishes "caller passed nothing" from "caller passed the default":
+# only explicit flat kwargs trip the grouped-vs-flat mixing check
+_UNSET: Any = object()
 
 
 @dataclass
@@ -84,37 +90,61 @@ class MasterEventLoop:
                  scheduler: Optional[AdaptiveScheduler] = None,
                  allocator: Optional[DataAllocator] = None,
                  frac_controller: Optional["AdaptiveFracController"] = None,
-                 guardrails: Optional["TrainingGuardrails"] = None,
-                 T: float = 4.0,
-                 deadline_quantile: Optional[float] = None,
-                 deadline_slack: float = 1.5,
-                 publish_every: int = 0,
-                 publish_fn: Optional[Callable[[PyTree, int, float],
-                                               None]] = None):
+                 training: Optional[TrainingConfig] = None,
+                 guardrails: Any = _UNSET,
+                 T: Any = _UNSET,
+                 deadline_quantile: Any = _UNSET,
+                 deadline_slack: Any = _UNSET,
+                 publish_every: Any = _UNSET,
+                 publish_fn: Any = _UNSET):
+        # grouped-vs-flat construction (docs/hierarchy.md §1, mirroring
+        # ServingEngine): ``training=TrainingConfig(...)`` is the API;
+        # explicit flat kwargs still work for one deprecation cycle via
+        # TrainingConfig.from_flat, and mixing both forms is an error.
+        flat = {k: v for k, v in [
+            ("guardrails", guardrails), ("T", T),
+            ("deadline_quantile", deadline_quantile),
+            ("deadline_slack", deadline_slack),
+            ("publish_every", publish_every), ("publish_fn", publish_fn),
+        ] if v is not _UNSET}
+        if training is not None and flat:
+            raise ValueError(
+                "pass training=TrainingConfig(...) OR the flat kwargs, "
+                f"not both (got flat {sorted(flat)})")
+        if training is None:
+            if flat:
+                warnings.warn(
+                    "MasterEventLoop flat kwargs "
+                    f"({sorted(flat)}) are deprecated; pass "
+                    "training=TrainingConfig(...) (see docs/hierarchy.md "
+                    "§1 for the migration table)",
+                    DeprecationWarning, stacklevel=2)
+            training = TrainingConfig.from_flat(**flat)
+        self.training = training
         self.reducer = reducer
         self.cluster = cluster
-        self.scheduler = scheduler or AdaptiveScheduler(T=T)
+        self.scheduler = scheduler or AdaptiveScheduler(T=training.T)
         self.allocator = allocator or DataAllocator()
         # NaN/divergence watchdog (docs/robustness.md): screens worker
         # messages for finite-ness before the reduce, detects loss
         # divergence, and rolls the reducer back to its last-good
         # snapshot. None = trust every message (the paper's behavior).
-        self.guardrails = guardrails
+        self.guardrails = training.resolve_guardrails()
         # deadline-based partial participation (docs/elastic_training.md):
         # when set, each iteration closes at scheduler.deadline(live,
         # quantile, slack); replies landing later are excluded from the
         # reduce and their mass parks in the worker's error-feedback
         # residual. None = stall-on-slowest (the paper's behavior).
-        self.deadline_quantile = deadline_quantile
-        self.deadline_slack = deadline_slack
+        self.deadline_quantile = training.deadline.quantile
+        self.deadline_slack = training.deadline.slack
         # live train->serve publish path (docs/serving.md §6): every
         # ``publish_every`` iterations the loop hands its post-step
         # params to ``publish_fn(params, version, clock)`` — the serving
         # engine's ``swap_params`` rides this to hot-swap the model the
         # public queries while the fleet keeps training it (the MLitB
         # "single live system"). 0 disables publishing.
-        self.publish_every = int(publish_every)
-        self.publish_fn = publish_fn
+        self.publish_every = training.publish.every
+        self.publish_fn = training.publish.fn
         # measurement -> controller -> per-worker channel: scales each
         # worker's keep-fraction to its measured uplink (needs the fused
         # compressed channel; ignored otherwise)

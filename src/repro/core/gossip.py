@@ -36,6 +36,12 @@ def gossip_round(replicas: List[PyTree], rng: np.random.RandomState,
     for a, b in random_matching(len(replicas), rng):
         wa, wb = w[a], w[b]
         z = wa + wb
+        if z <= 1e-12:
+            # two idle replicas (e.g. regions that processed zero vectors
+            # this outer step) carry no sample mass to weight by — fall
+            # back to the unweighted average instead of dividing by ~0
+            wa = wb = 1.0
+            z = 2.0
         avg = jax.tree.map(
             lambda x, y: (wa * x.astype(jnp.float32)
                           + wb * y.astype(jnp.float32)) / z,

@@ -17,6 +17,13 @@ Properties (tested in tests/test_local_sgd.py):
 
 Implementation is vmap-over-workers so it runs identically on one device
 (tests) and under shard_map/pjit with the worker axis mapped to `data`.
+
+The same H-steps-between-syncs math powers the OUTER tier of the
+two-tier topology (core/hierarchy.py, docs/hierarchy.md): each regional
+sub-master is the "worker", H inner reduces play the local steps, and
+the sync is a compressed gossip round instead of a global average —
+``communication_ratio(H)`` is exactly the cross-region traffic ratio
+before compression.
 """
 from __future__ import annotations
 

@@ -146,6 +146,18 @@ class MasterReducer:
     def drop_worker(self, worker: str) -> None:
         self._residuals.pop(worker, None)
 
+    def apply_outer_delta(self, delta: jnp.ndarray) -> None:
+        """Shift the flat parameter buffer by ``delta`` WITHOUT an
+        optimizer step — the hierarchy's outer gossip correction
+        (core/hierarchy.py): the sub-master's inner AdaGrad trajectory
+        keeps its accumulator; only the point it continues from moves
+        toward the cross-region consensus."""
+        if not self.fused:
+            raise ValueError("apply_outer_delta needs the fused flat "
+                             "buffer (fused=True)")
+        self._flat = self._flat + jnp.asarray(delta, jnp.float32)
+        self._params_cache = None
+
     # ------------------------------------------------------------------
     # churn support: capacity bucketing + deadline deferral
     # ------------------------------------------------------------------

@@ -122,6 +122,25 @@ class NetworkModel:
         return n_workers * self.grad_bytes / self.master_bw * 0.25
 
 
+@dataclass(frozen=True)
+class RegionalNetworkModel(NetworkModel):
+    """Region-structured bandwidth (docs/hierarchy.md): the base
+    ``NetworkModel`` fields describe the INTRA-region fast path (each
+    regional sub-master ingests only its own fleet, so congestion queues
+    are region-scoped), while ``wan_bw``/``wan_latency`` price the slow
+    cross-region links that only the H-step gossip deltas traverse.
+    Calibrated to a ~10x intra/inter asymmetry (continental backbone vs
+    LAN/metro), which is what makes a flat master at planet scale pay WAN
+    prices for EVERY gradient message."""
+    wan_bw: float = 4e6              # bytes/sec on a cross-region link
+    wan_latency: float = 0.080       # one-way cross-region latency (s)
+
+    def wan_time(self, nbytes: float) -> float:
+        """Seconds one gossip message of ``nbytes`` spends crossing the
+        WAN (transfer + propagation)."""
+        return float(nbytes) / self.wan_bw + self.wan_latency
+
+
 @dataclass
 class SimWorker:
     worker: str
@@ -163,9 +182,15 @@ class SimulatedCluster:
         self._faults: Dict[str, FaultProfile] = {}
         self._poison: Dict[str, List[Any]] = {}
         self._last_reply: Dict[str, Tuple[PyTree, int, float]] = {}  # reprolint: exempt[RL005]
+        # two-tier topology (docs/hierarchy.md): worker -> region label.
+        # Unassigned workers congest globally (the historical flat-master
+        # behavior, bit-exact); assigned workers queue only behind their
+        # own region's fleet at the regional sub-master.
+        self._regions: Dict[str, str] = {}
 
     # ------------------------------------------------------------------
-    def add_worker(self, worker: str, profile: DeviceProfile) -> None:
+    def add_worker(self, worker: str, profile: DeviceProfile,
+                   region: Optional[str] = None) -> None:
         # a rejoining tab starts clean: scripted stalls/kills/poison
         # aimed at a previous incarnation of this name must not leak
         # onto it
@@ -176,6 +201,10 @@ class SimulatedCluster:
         self.workers[worker] = SimWorker(
             worker, profile,
             np.random.RandomState(self._rng.randint(2 ** 31)))
+        if region is None:
+            self._regions.pop(worker, None)
+        else:
+            self._regions[worker] = region
 
     def set_faults(self, worker: str,
                    faults: Optional[FaultProfile]) -> None:
@@ -212,6 +241,22 @@ class SimulatedCluster:
         if kind not in ("nan", "inf", "garbage", "stale", "drop"):
             raise ValueError(f"unknown poison kind {kind!r}")
         self._poison[worker] = [kind, int(iters)]
+
+    # ------------------------------------------------------------------
+    def _congestion_peers(self, worker: str) -> int:
+        """How many simultaneous reduce-step messages queue with this
+        worker's: the whole fleet at a flat master (the paper's Fig. 4
+        congestion), but only the SAME-REGION fleet once the worker
+        reports to a regional sub-master (docs/hierarchy.md) — the
+        intra-region fast path the two-tier topology buys."""
+        region = self._regions.get(worker)
+        if region is None:
+            return sum(1 for _ in self.workers)
+        return sum(1 for w in self.workers
+                   if self._regions.get(w) == region)
+
+    def region_of(self, worker: str) -> Optional[str]:
+        return self._regions.get(worker)
 
     # ------------------------------------------------------------------
     def _sample_latency(self, sw: SimWorker, n_live: int) -> float:
@@ -288,7 +333,7 @@ class SimulatedCluster:
             return None                                   # scripted death
         if sw.rng.rand() > sw.profile.reliability:
             return None                                   # tab closed mid-run
-        n_live = sum(1 for _ in self.workers)
+        n_live = self._congestion_peers(worker)
         n_possible = int(sw.profile.power_vps * budget)
         n = min(n_possible, len(indices)) if indices else 0
         latency = self._sample_latency(sw, n_live)
@@ -372,6 +417,7 @@ class SimulatedCluster:
             "faults": {w: dataclasses.asdict(fp)
                        for w, fp in self._faults.items()},
             "poison": {w: list(v) for w, v in self._poison.items()},
+            "regions": dict(self._regions),
             "workers": {w: {"profile": dataclasses.asdict(sw.profile),
                             "rng": self._rng_state(sw.rng)}
                         for w, sw in self.workers.items()},
@@ -391,6 +437,9 @@ class SimulatedCluster:
                         for w, d in st.get("faults", {}).items()}
         self._poison = {w: [str(v[0]), int(v[1])]
                         for w, v in st.get("poison", {}).items()}
+        # lenient for pre-hierarchy snapshots: no map = flat topology
+        self._regions = {w: str(r)
+                         for w, r in st.get("regions", {}).items()}
         self._last_reply = {}
         self.workers = {}
         for w, d in st["workers"].items():

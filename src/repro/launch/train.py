@@ -15,6 +15,11 @@ Examples:
 
   # with simulated worker churn (paper scenario)
   ... --churn "10:leave:1,15:join:1"
+
+  # discrete-event simulated fleet instead of the mesh engine, flat or
+  # hierarchical (docs/hierarchy.md; grouped TrainingConfig surface)
+  PYTHONPATH=src python -m repro.launch.train --reduced --simulate \
+      --steps 8 --regions 4
 """
 from __future__ import annotations
 
@@ -55,6 +60,39 @@ def parse_churn(spec: str):
     return out
 
 
+def run_simulated(cfg, *, steps: int, regions: int, T: float,
+                  seed: int) -> int:
+    """The discrete-event path behind ``--simulate``: the grouped
+    ``TrainingConfig`` construction surface end-to-end, flat
+    (``regions=1``) or two-tier (docs/hierarchy.md)."""
+    from repro.core import HierarchyConfig, TrainingConfig
+    from repro.core.config import DeadlineConfig
+    from repro.launch.train_serve import build_training
+
+    hier = None if regions <= 1 else HierarchyConfig(
+        n_regions=regions, inner_steps=4, gossip=True, gossip_frac=0.25)
+    training = TrainingConfig(T=T, deadline=DeadlineConfig(quantile=0.5),
+                              hierarchy=hier)
+    master, cluster, _ = build_training(cfg, training=training, seed=seed)
+    if hier is None:
+        logs = master.run(steps)
+        losses = [lg.loss for lg in logs if lg.loss == lg.loss]
+        print(f"flat: {len(logs)} iterations, clock={master.clock:.2f}s, "
+              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+        return 0
+    outer = max(1, steps // hier.inner_steps)
+    logs = master.run(outer)
+    losses = [lg.loss for lg in logs if lg.loss == lg.loss]
+    s = master.summary()
+    print(f"hierarchy: {regions} regions x {hier.inner_steps} inner, "
+          f"{outer} outer steps, clock={master.clock:.2f}s, "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    print(f"wan: {s['wan_bytes']} bytes "
+          f"({100 * s['wan_bytes_frac']:.2f}% of gradient traffic), "
+          f"comm ratio {s['communication_ratio']:.3f}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="mlitb-lm-100m")
@@ -72,11 +110,22 @@ def main(argv=None):
     ap.add_argument("--closure-out", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--simulate", action="store_true",
+                    help="drive the discrete-event simulated fleet "
+                         "(build_training) instead of the mesh engine")
+    ap.add_argument("--regions", type=int, default=1,
+                    help="with --simulate: >1 builds the two-tier "
+                         "hierarchy (docs/hierarchy.md)")
+    ap.add_argument("--T", type=float, default=0.5,
+                    help="with --simulate: iteration budget (s)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.simulate:
+        return run_simulated(cfg, steps=args.steps, regions=args.regions,
+                             T=args.T, seed=args.seed)
     lr = args.lr if args.lr is not None else \
         {"adagrad": 0.05, "adam": 3e-4, "sgd": 0.1}[args.optimizer]
     opt = get_optimizer(args.optimizer, lr=lr)

@@ -28,9 +28,12 @@ version histogram reads as "how stale was the model each client saw".
 from __future__ import annotations
 
 import argparse
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 PyTree = Any
+
+_UNSET: Any = object()
 
 # tiny default LM: big enough to have real train/serve dynamics, small
 # enough that CI runs the whole live loop in seconds
@@ -45,59 +48,130 @@ def tiny_cfg():
     return ArchConfig(**TINY_SERVE_LM)
 
 
-def build_training(cfg, *, T: float = 0.5, seed: int = 0,
-                   n_data: int = 512, seq_len: int = 16,
-                   lr: float = 0.1, frac: float = 0.1,
-                   churny: bool = True, publish_every: int = 0,
-                   publish_fn=None, guardrails=None,
-                   fault_profiles: Optional[Dict[str, Any]] = None,
-                   optimizer=None):
-    """An elastic training stack over ``cfg``'s LM: fused top-k
-    compressed reduce, deadline partial participation, and (when
-    ``churny``) a heterogeneous fleet with a probabilistic straggler —
-    the regime the hot-swap bench publishes from."""
-    import jax
-
-    from repro.core import (GradientCompressor, JoinEvent, MasterEventLoop,
-                            MasterReducer, UploadDataEvent)
-    from repro.core.scheduler import AdaptiveScheduler
-    from repro.core.simulation import (DeviceProfile, SimulatedCluster,
-                                       make_lm_problem)
-    from repro.models import transformer as tf
-    from repro.optim import adagrad
-
-    (X, y), grad_fn = make_lm_problem(cfg, n_data=n_data, seq_len=seq_len,
-                                      seed=seed)
-    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
-    # adagrad's per-coordinate normalization makes the step nearly
-    # scale-invariant — robust by default, but chaos harnesses that
-    # need a garbage gradient to ACTUALLY diverge the params override
-    # with plain sgd (tests/test_guardrails.py, bench_chaos.py)
-    red = MasterReducer(params, optimizer or adagrad(lr=lr),
-                        compressor=GradientCompressor("topk", frac=frac),
-                        fused=True)
-    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
-                               seed=seed)
-    loop = MasterEventLoop(
-        reducer=red, cluster=cluster,
-        scheduler=AdaptiveScheduler(T=T, prior_power=300.0,
-                                    min_budget=0.05),
-        deadline_quantile=0.5 if churny else None, deadline_slack=1.5,
-        publish_every=publish_every, publish_fn=publish_fn,
-        guardrails=guardrails)
-    loop.submit(UploadDataEvent(range(n_data)))
+def _fleet_profiles(churny: bool):
+    from repro.core.simulation import DeviceProfile
     profiles = [DeviceProfile("ws0", 300.0, 0.010, 0.20),
                 DeviceProfile("ws1", 300.0, 0.012, 0.20),
                 DeviceProfile("lap", 150.0, 0.030, 0.40)]
     if churny:
         profiles.append(DeviceProfile("strag", 200.0, 0.050, 0.40,
                                       straggle_p=0.3, straggle_factor=8.0))
-    for i, prof in enumerate(profiles):
-        cluster.add_worker(f"w{i}", prof)
-        loop.submit(JoinEvent(f"w{i}", capacity=n_data))
+    return profiles
+
+
+def build_training(cfg, *, training=None, seed: int = 0,
+                   n_data: int = 512, seq_len: int = 16,
+                   lr: float = 0.1, frac: float = 0.1,
+                   churny: bool = True,
+                   fault_profiles: Optional[Dict[str, Any]] = None,
+                   optimizer=None,
+                   T: Any = _UNSET, publish_every: Any = _UNSET,
+                   publish_fn: Any = _UNSET, guardrails: Any = _UNSET):
+    """An elastic training stack over ``cfg``'s LM: fused top-k
+    compressed reduce, deadline partial participation, and (when
+    ``churny``) a heterogeneous fleet with a probabilistic straggler —
+    the regime the hot-swap bench publishes from.
+
+    ``training=TrainingConfig(...)`` is the construction surface
+    (docs/hierarchy.md §1); the historical flat kwargs (T/publish_every/
+    publish_fn/guardrails) still work for one deprecation cycle, and
+    mixing both forms raises. With no explicit deadline the fleet gets
+    the churny default (quantile 0.5 when ``churny``, stall-on-slowest
+    otherwise).
+
+    When ``training.hierarchy`` is set, returns ``(HierarchicalMaster,
+    cluster, params)``: ``n_regions`` sub-masters over one shared
+    region-aware cluster, each region running this same fleet on its own
+     1/R shard of the data; otherwise ``(MasterEventLoop, cluster,
+    params)`` exactly as before."""
+    import jax
+
+    from repro.core import (GradientCompressor, HierarchicalMaster,
+                            JoinEvent, MasterEventLoop, MasterReducer,
+                            TrainingConfig, UploadDataEvent)
+    from repro.core.scheduler import AdaptiveScheduler
+    from repro.core.simulation import (RegionalNetworkModel,
+                                       SimulatedCluster, make_lm_problem)
+    from repro.models import transformer as tf
+    from repro.optim import adagrad
+
+    flat = {k: v for k, v in [
+        ("T", T), ("publish_every", publish_every),
+        ("publish_fn", publish_fn), ("guardrails", guardrails),
+    ] if v is not _UNSET}
+    if training is not None and flat:
+        raise ValueError(
+            "pass training=TrainingConfig(...) OR the flat kwargs, "
+            f"not both (got flat {sorted(flat)})")
+    if training is None:
+        if flat:
+            warnings.warn(
+                f"build_training flat kwargs ({sorted(flat)}) are "
+                "deprecated; pass training=TrainingConfig(...) (see "
+                "docs/hierarchy.md §1)", DeprecationWarning, stacklevel=2)
+        flat.setdefault("T", 0.5)
+        training = TrainingConfig.from_flat(
+            deadline_quantile=0.5 if churny else None, **flat)
+
+    (X, y), grad_fn = make_lm_problem(cfg, n_data=n_data, seq_len=seq_len,
+                                      seed=seed)
+    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
+    hier = training.hierarchy
+
+    # adagrad's per-coordinate normalization makes the step nearly
+    # scale-invariant — robust by default, but chaos harnesses that
+    # need a garbage gradient to ACTUALLY diverge the params override
+    # with plain sgd (tests/test_guardrails.py, bench_chaos.py)
+    def make_reducer():
+        return MasterReducer(params, optimizer or adagrad(lr=lr),
+                             compressor=GradientCompressor("topk",
+                                                           frac=frac),
+                             fused=True)
+
+    network = RegionalNetworkModel() if hier is not None else None
+    cluster = SimulatedCluster(
+        grad_fn=grad_fn, data=(X, y), mode="real", seed=seed,
+        **({"network": network} if network is not None else {}))
+    profiles = _fleet_profiles(churny)
+
+    if hier is None:
+        loop = MasterEventLoop(
+            reducer=make_reducer(), cluster=cluster,
+            scheduler=AdaptiveScheduler(T=training.T, prior_power=300.0,
+                                        min_budget=0.05),
+            training=training)
+        loop.submit(UploadDataEvent(range(n_data)))
+        for i, prof in enumerate(profiles):
+            cluster.add_worker(f"w{i}", prof)
+            loop.submit(JoinEvent(f"w{i}", capacity=n_data))
+        for w, fp in (fault_profiles or {}).items():
+            cluster.set_faults(w, fp)
+        return loop, cluster, params
+
+    # two-tier branch (docs/hierarchy.md): publish moves to the OUTER
+    # tier (the consensus is what serving should see), each sub-master
+    # runs the same deadline/guardrail config over its own fleet + shard
+    inner = TrainingConfig(T=training.T, deadline=training.deadline,
+                           guardrails=training.guardrails)
+    regions = {}
+    for ri in range(hier.n_regions):
+        name = f"r{ri}"
+        loop = MasterEventLoop(
+            reducer=make_reducer(), cluster=cluster,
+            scheduler=AdaptiveScheduler(T=training.T, prior_power=300.0,
+                                        min_budget=0.05),
+            training=inner)
+        loop.submit(UploadDataEvent(range(ri, n_data, hier.n_regions)))
+        for i, prof in enumerate(profiles):
+            w = f"{name}:w{i}"
+            cluster.add_worker(w, prof, region=name)
+            loop.submit(JoinEvent(w, capacity=n_data))
+        regions[name] = loop
     for w, fp in (fault_profiles or {}).items():
         cluster.set_faults(w, fp)
-    return loop, cluster, params
+    master = HierarchicalMaster(regions=regions, config=hier,
+                                publish=training.publish, network=network)
+    return master, cluster, params
 
 
 def run_train_serve(cfg, requests: Sequence[Any], *,
@@ -142,6 +216,8 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
     {version: params} — every tree the engine served under, kept so
     callers can replay any completion solo under its pinned version
     (the corruption oracle in tests/ and the bench)."""
+    from repro.core.config import (DeadlineConfig, PublishConfig,
+                                   TrainingConfig)
     from repro.core.simulation import ServeCostModel
     from repro.serving import (ServingConfig, ServingEngine,
                                SimulatedServeSession)
@@ -163,10 +239,14 @@ def run_train_serve(cfg, requests: Sequence[Any], *,
         published.append((clock, version))
 
     loop, cluster, _ = build_training(
-        cfg, T=T, seed=seed, churny=churny, lr=lr,
-        publish_every=publish_every,
-        publish_fn=publish if publish_every > 0 else None,
-        guardrails=guardrails, fault_profiles=fault_profiles,
+        cfg, training=TrainingConfig(
+            T=T,
+            deadline=DeadlineConfig(quantile=0.5 if churny else None),
+            publish=PublishConfig(
+                every=publish_every,
+                fn=publish if publish_every > 0 else None),
+            guardrails=guardrails),
+        seed=seed, churny=churny, lr=lr, fault_profiles=fault_profiles,
         optimizer=optimizer)
     if resume_state is not None:
         resume_state.restore(loop, cluster)

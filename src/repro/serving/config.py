@@ -8,9 +8,11 @@ Four concerns, four small frozen dataclasses under one ``ServingConfig``:
   PagingConfig         page_size / n_pages / prefix_reuse
   SpeculativeConfig    draft model + k / window (greedy-only)
 
-``ServingEngine(params, cfg, serving=ServingConfig(...))`` is the new
-entry point; the flat kwargs still work for one deprecation cycle via
-``ServingConfig.from_flat`` (tested in tests/test_kernels_flash_decode).
+``ServingEngine(params, cfg, serving=ServingConfig(...))`` is the ONLY
+entry point — the flat-kwarg constructor finished its one deprecation
+cycle and was removed (tests/test_kernels_flash_decode pins the
+TypeError). ``ServingConfig.from_flat`` remains as the kwargs-shaped
+builder for callers that prefer that spelling.
 
 ALL constructor validation lives here, at construction time — including
 the speculative/paged interactions that used to surface mid-flight:
@@ -161,7 +163,8 @@ class ServingConfig:
                   speculative: Optional[SpeculativeConfig] = None
                   ) -> "ServingConfig":
         """Build a grouped config from the historical flat kwargs — the
-        one-deprecation-cycle bridge for existing callers."""
+        kwargs-shaped builder (the engine itself no longer accepts
+        flat kwargs; docs/serving.md §1 has the migration table)."""
         if page_size is not None:
             paging = PagingConfig(page_size=int(page_size), n_pages=n_pages,
                                   prefix_reuse=prefix_reuse)

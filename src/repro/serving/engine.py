@@ -89,9 +89,6 @@ PyTree = Any
 
 NEG_INF = -1e30
 
-_UNSET = object()   # flat-kwarg sentinel: distinguishes "not passed" from
-                    # an explicit None during the deprecation cycle
-
 
 def pow2_bucket(n: int, lo: int = 1, hi: Optional[int] = None) -> int:
     """Smallest power of two >= max(n, lo), clamped to ``hi`` (which the
@@ -211,40 +208,11 @@ class ServingEngine:
     with in-flight param hot-swap and temperature/top-k sampling."""
 
     def __init__(self, params: PyTree, cfg: ArchConfig, *,
-                 serving: Optional[ServingConfig] = None,
-                 max_batch: Any = _UNSET, max_seq: Any = _UNSET,
-                 prompt_bucket_min: Any = _UNSET, unroll: Any = _UNSET,
-                 prompt_cap: Any = _UNSET,
-                 temperature: Any = _UNSET, top_k: Any = _UNSET,
-                 sample_seed: Any = _UNSET, start_version: Any = _UNSET,
-                 max_queue: Any = _UNSET,
-                 shed_policy: Any = _UNSET,
-                 admission_deadline: Any = _UNSET,
-                 page_size: Any = _UNSET,
-                 n_pages: Any = _UNSET,
-                 prefix_reuse: Any = _UNSET,
-                 decode_kernel: Any = _UNSET,
-                 speculative: Any = _UNSET):
-        # grouped config is the entry point (docs/serving.md §1); the flat
-        # kwargs remain for one deprecation cycle and build the same
-        # ServingConfig — mixing both forms is ambiguous and rejected
-        flat = {k: v for k, v in dict(
-            max_batch=max_batch, max_seq=max_seq,
-            prompt_bucket_min=prompt_bucket_min, unroll=unroll,
-            prompt_cap=prompt_cap, temperature=temperature, top_k=top_k,
-            sample_seed=sample_seed, start_version=start_version,
-            max_queue=max_queue, shed_policy=shed_policy,
-            admission_deadline=admission_deadline, page_size=page_size,
-            n_pages=n_pages, prefix_reuse=prefix_reuse,
-            decode_kernel=decode_kernel,
-            speculative=speculative).items() if v is not _UNSET}
-        if serving is not None:
-            if flat:
-                raise ValueError(
-                    f"ServingEngine: pass serving=ServingConfig(...) OR "
-                    f"the flat kwargs, not both (got flat {sorted(flat)})")
-        else:
-            serving = ServingConfig.from_flat(**flat)
+                 serving: ServingConfig):
+        # grouped config is the ONLY entry point (docs/serving.md §1);
+        # the flat-kwarg constructor completed its one deprecation cycle
+        # and is gone — ``ServingConfig.from_flat(...)`` remains as the
+        # kwargs-shaped builder for callers migrating mechanically
         if cfg.arch_type not in ("dense", "moe"):
             raise ValueError(
                 f"ServingEngine supports attention-cached LM archs "

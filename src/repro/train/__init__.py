@@ -1,5 +1,3 @@
 from repro.train.step import (ServePrograms,  # noqa: F401
                               build_serve_programs, build_train_step,
                               make_train_state)
-from repro.train.step import (build_decode_step,  # noqa: F401  (deprecated)
-                              build_prefill_step)

@@ -12,7 +12,6 @@ zeroes per-worker row ranges without recompiling (see core/mesh_engine).
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -108,8 +107,9 @@ def build_serve_programs(cfg: ArchConfig, *, paged: bool,
     pool directly with no gather). ``prefill_cache_len`` pins the
     single-shot prefill's cache length (bucketed shapes).
 
-    Replaces the five historical ``build_*_step`` factories, which
-    remain as thin deprecated wrappers."""
+    Replaces the five historical ``build_*_step`` factories (removed
+    after their one deprecation cycle — docs/serving.md §1 has the
+    migration table)."""
     if decode_kernel not in ("xla", "flash"):
         raise ValueError(f"decode_kernel={decode_kernel!r}: expected "
                          f"'xla' or 'flash'")
@@ -202,48 +202,3 @@ def build_draft_program(cfg: ArchConfig, *, k: int, window: int):
             toks = toks.at[rows, wcol].set(nxt)
         return jnp.stack(outs, axis=1)
     return draft
-
-
-def _deprecated(old: str) -> None:
-    warnings.warn(
-        f"{old} is deprecated; use build_serve_programs(cfg, paged=...) "
-        f"and pick the program off the returned ServePrograms",
-        DeprecationWarning, stacklevel=3)
-
-
-def build_prefill_step(cfg: ArchConfig, unroll: bool = False,
-                       cache_len: Optional[int] = None):
-    """DEPRECATED: use ``build_serve_programs(...).prefill``."""
-    _deprecated("build_prefill_step")
-    return build_serve_programs(cfg, paged=False, unroll=unroll,
-                                prefill_cache_len=cache_len).prefill
-
-
-def build_prefill_chunk_step(cfg: ArchConfig, unroll: bool = False):
-    """DEPRECATED: use ``build_serve_programs(...).prefill_chunk``."""
-    _deprecated("build_prefill_chunk_step")
-    return build_serve_programs(cfg, paged=False,
-                                unroll=unroll).prefill_chunk
-
-
-def build_paged_prefill_chunk_step(cfg: ArchConfig, unroll: bool = False):
-    """DEPRECATED: use ``build_serve_programs(..., paged=True)
-    .prefill_chunk``."""
-    _deprecated("build_paged_prefill_chunk_step")
-    return build_serve_programs(cfg, paged=True,
-                                unroll=unroll).prefill_chunk
-
-
-def build_paged_decode_step(cfg: ArchConfig, unroll: bool = False):
-    """DEPRECATED: use ``build_serve_programs(..., paged=True).decode``."""
-    _deprecated("build_paged_decode_step")
-    return build_serve_programs(cfg, paged=True, unroll=unroll).decode
-
-
-def build_decode_step(cfg: ArchConfig, unroll: bool = False,
-                      ragged: bool = False):
-    """DEPRECATED: use ``build_serve_programs(...).decode`` (ragged) or
-    ``.decode_lockstep``."""
-    _deprecated("build_decode_step")
-    progs = build_serve_programs(cfg, paged=False, unroll=unroll)
-    return progs.decode if ragged else progs.decode_lockstep

@@ -9,7 +9,7 @@ import pytest
 from repro.core.simulation import ServeCostModel, generate_requests
 from repro.launch.train_serve import tiny_cfg
 from repro.models import transformer as tf
-from repro.serving import (ServeRequest, ServingEngine,
+from repro.serving import (ServeRequest, ServingConfig, ServingEngine,
                            SimulatedServeSession)
 
 import jax
@@ -31,14 +31,18 @@ def _req(rid, plen=4, max_new=4, seed=None, **kw):
 # duplicate rid: protocol error, not silent corruption
 # ---------------------------------------------------------------------------
 def test_duplicate_rid_rejected_while_queued():
-    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     engine.submit(_req(7))
     with pytest.raises(ValueError, match="duplicate rid"):
         engine.submit(_req(7))
 
 
 def test_duplicate_rid_rejected_while_in_flight():
-    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     engine.submit(_req(7, max_new=6))
     engine.step()                              # rid 7 now holds a slot
     assert engine.n_queued == 0
@@ -50,7 +54,9 @@ def test_duplicate_rid_rejected_while_in_flight():
 
 
 def test_rid_reusable_across_runs():
-    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     engine.run_closed_loop([_req(0)])
     stats = engine.run_closed_loop([_req(0)])  # replay: same rid is fine
     assert stats.n_requests == 1
@@ -60,8 +66,11 @@ def test_rid_reusable_across_runs():
 # bounded queue + shed policies
 # ---------------------------------------------------------------------------
 def test_reject_policy_sheds_newcomer():
-    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
-                           max_queue=2, shed_policy="reject")
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=1,
+                                                           max_seq=32,
+                                                           max_queue=2,
+                                                           shed_policy="reject"))
     assert engine.submit(_req(0))
     assert engine.submit(_req(1))
     assert not engine.submit(_req(2), now=3.5)
@@ -74,8 +83,11 @@ def test_reject_policy_sheds_newcomer():
 
 
 def test_drop_oldest_policy_displaces_stalest_wait():
-    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
-                           max_queue=2, shed_policy="drop_oldest")
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=1,
+                                                           max_seq=32,
+                                                           max_queue=2,
+                                                           shed_policy="drop_oldest"))
     for rid in range(3):
         assert engine.submit(_req(rid), now=float(rid))
     assert [r.rid for r in engine._queue] == [1, 2]
@@ -86,18 +98,24 @@ def test_drop_oldest_policy_displaces_stalest_wait():
 
 def test_shed_policy_validated():
     with pytest.raises(ValueError, match="shed_policy"):
-        ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
-                      max_queue=1, shed_policy="explode")
+        ServingEngine(_params(), CFG,
+                      serving=ServingConfig.from_flat(max_batch=1, max_seq=32,
+                                                      max_queue=1,
+                                                      shed_policy="explode"))
     with pytest.raises(ValueError, match="max_queue"):
-        ServingEngine(_params(), CFG, max_batch=1, max_seq=32, max_queue=0)
+        ServingEngine(_params(), CFG,
+                      serving=ServingConfig.from_flat(max_batch=1, max_seq=32,
+                                                      max_queue=0))
 
 
 # ---------------------------------------------------------------------------
 # admission deadlines: stale queued requests shed, in-flight never
 # ---------------------------------------------------------------------------
 def test_queued_request_sheds_past_deadline():
-    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
-                           admission_deadline=1.0)
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=1,
+                                                           max_seq=32,
+                                                           admission_deadline=1.0))
     engine.submit(_req(0, max_new=8, arrival=0.0))
     engine.submit(_req(1, arrival=0.0))
     engine.step(now=0.5)                       # rid 0 admitted; 1 queued
@@ -111,8 +129,10 @@ def test_queued_request_sheds_past_deadline():
 
 
 def test_per_request_deadline_overrides_engine_default():
-    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
-                           admission_deadline=10.0)
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=1,
+                                                           max_seq=32,
+                                                           admission_deadline=10.0))
     engine.submit(_req(0, max_new=8, arrival=0.0))
     engine.submit(_req(1, arrival=0.0, deadline=0.5))   # impatient client
     engine.submit(_req(2, arrival=0.0))                 # patient default
@@ -123,8 +143,10 @@ def test_per_request_deadline_overrides_engine_default():
 
 
 def test_step_without_now_never_deadline_sheds():
-    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
-                           admission_deadline=0.001)
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=1,
+                                                           max_seq=32,
+                                                           admission_deadline=0.001))
     engine.submit(_req(0))
     engine.submit(_req(1))
     while engine.has_work:                     # closed-loop: no clock, no
@@ -140,9 +162,12 @@ def test_session_overload_burst_sheds_are_accounted_and_bounded():
         40, rate_rps=30.0, vocab_size=CFG.vocab_size, prompt_rng=(4, 20),
         gen_short=(2, 6), gen_long=(8, 12), long_frac=0.3,
         burst=(0.2, 0.5, 8.0), seed=9)
-    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=64,
-                           prompt_cap=16, max_queue=3,
-                           shed_policy="reject")
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=64,
+                                                           prompt_cap=16,
+                                                           max_queue=3,
+                                                           shed_policy="reject"))
     session = SimulatedServeSession(engine, ServeCostModel(), reqs)
     session.drain()
     stats = session.stats()
@@ -154,8 +179,10 @@ def test_session_overload_burst_sheds_are_accounted_and_bounded():
     assert done | shed == {r.rid for r in reqs}
     # survivors are uncorrupted: bit-equal to a solo replay
     by_rid = {r.rid: r for r in reqs}
-    solo = ServingEngine(_params(), CFG, max_batch=2, max_seq=64,
-                         prompt_cap=16)
+    solo = ServingEngine(_params(), CFG,
+                         serving=ServingConfig.from_flat(max_batch=2,
+                                                         max_seq=64,
+                                                         prompt_cap=16))
     for c in stats.completions[:5]:
         ref = solo.run_closed_loop([ServeRequest(
             rid=c.rid, prompt=by_rid[c.rid].prompt,
@@ -169,7 +196,9 @@ def test_session_unbounded_queue_unchanged():
     reqs = generate_requests(
         12, rate_rps=50.0, vocab_size=CFG.vocab_size, prompt_rng=(4, 16),
         gen_short=(2, 5), gen_long=(6, 8), long_frac=0.2, seed=3)
-    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     stats = engine.run_simulated(reqs, ServeCostModel())
     assert stats.n_shed == 0 and len(stats.completions) == len(reqs)
     assert stats.queue_peak >= 1
@@ -184,9 +213,12 @@ def test_shed_timestamps_monotone_on_simulated_clock():
         40, rate_rps=30.0, vocab_size=CFG.vocab_size, prompt_rng=(4, 20),
         gen_short=(2, 6), gen_long=(8, 12), long_frac=0.3,
         burst=(0.2, 0.5, 8.0), seed=9)
-    engine = ServingEngine(_params(), CFG, max_batch=2, max_seq=64,
-                           prompt_cap=16, max_queue=3,
-                           shed_policy="reject")
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=64,
+                                                           prompt_cap=16,
+                                                           max_queue=3,
+                                                           shed_policy="reject"))
     session = SimulatedServeSession(engine, ServeCostModel(), reqs)
     session.drain()
     sheds = session.stats().shed
@@ -203,8 +235,11 @@ def test_shed_timestamps_monotone_on_simulated_clock():
 
 
 def test_submit_without_now_stamps_request_arrival():
-    engine = ServingEngine(_params(), CFG, max_batch=1, max_seq=32,
-                           max_queue=1, shed_policy="reject")
+    engine = ServingEngine(_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=1,
+                                                           max_seq=32,
+                                                           max_queue=1,
+                                                           shed_policy="reject"))
     assert engine.submit(_req(0))
     assert not engine.submit(_req(1, arrival=2.5))   # no now= given
     (shed,) = engine.shed_log

@@ -63,10 +63,11 @@ def test_torn_npz_gives_clean_error_not_traceback(tmp_path):
 def test_torn_train_state_gives_clean_error(tmp_path):
     from repro.checkpoint.io import (TrainState, load_train_state,
                                      save_train_state)
+    from repro.core import TrainingConfig
     from repro.launch.train_serve import build_training, tiny_cfg
 
-    loop, cluster, _ = build_training(tiny_cfg(), T=0.2, seed=0,
-                                      churny=False)
+    loop, cluster, _ = build_training(
+        tiny_cfg(), training=TrainingConfig(T=0.2), seed=0, churny=False)
     loop.iteration()
     path = str(tmp_path / "ts.npz")
     save_train_state(path, TrainState.capture(loop, cluster))

@@ -22,9 +22,10 @@ import pytest
 
 from repro.checkpoint import (TrainState, load_train_state,
                               save_train_state)
-from repro.core import (AdaptiveFracController, GradientCompressor,
-                        JoinEvent, LeaveEvent, MasterEventLoop,
-                        MasterReducer, UploadDataEvent)
+from repro.core import (AdaptiveFracController, DeadlineConfig,
+                        GradientCompressor, JoinEvent, LeaveEvent,
+                        MasterEventLoop, MasterReducer, TrainingConfig,
+                        UploadDataEvent)
 from repro.core.elastic import LeaveEvent as _Leave
 from repro.core.scheduler import AdaptiveScheduler
 from repro.core.simulation import (DeviceProfile, SimulatedCluster,
@@ -100,7 +101,8 @@ def _run_fuzz(seed, iters):
         reducer=red, cluster=cluster, frac_controller=ctl,
         scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0,
                                     prior_bandwidth=5e4),
-        deadline_quantile=0.6, deadline_slack=2.0)
+        training=TrainingConfig(
+            deadline=DeadlineConfig(quantile=0.6, slack=2.0)))
     loop.submit(UploadDataEvent(range(len(X))))
     rng = np.random.RandomState(seed)
     next_id = 0
@@ -165,7 +167,8 @@ def _straggler_loop(deadline_quantile, seed=0):
     loop = MasterEventLoop(
         reducer=red, cluster=cluster,
         scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0),
-        deadline_quantile=deadline_quantile, deadline_slack=1.5)
+        training=TrainingConfig(
+            deadline=DeadlineConfig(quantile=deadline_quantile, slack=1.5)))
     loop.submit(UploadDataEvent(range(len(X))))
     for i in range(3):
         cluster.add_worker(f"w{i}", _profile(i))
@@ -214,7 +217,8 @@ def test_upload_bound_fleet_does_not_livelock():
     loop = MasterEventLoop(
         reducer=red, cluster=cluster,
         scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0),
-        deadline_quantile=0.5, deadline_slack=1.5)
+        training=TrainingConfig(
+            deadline=DeadlineConfig(quantile=0.5, slack=1.5)))
     loop.submit(UploadDataEvent(range(len(X))))
     for i in range(3):
         # 200 B/s uplink: the 128 B message takes ~0.64s, 3x the
@@ -240,7 +244,8 @@ def test_all_late_round_defers_everything_without_a_step():
     loop = MasterEventLoop(
         reducer=red, cluster=cluster,
         scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0),
-        deadline_quantile=0.5, deadline_slack=1.2)
+        training=TrainingConfig(
+            deadline=DeadlineConfig(quantile=0.5, slack=1.2)))
     loop.submit(UploadDataEvent(range(len(X))))
     for i in range(2):
         cluster.add_worker(f"w{i}", _profile(i))
@@ -281,7 +286,8 @@ def _build_cnn_loop(populate, seed=0):
         reducer=red, cluster=cluster, frac_controller=ctl,
         scheduler=AdaptiveScheduler(T=0.25, prior_power=113,
                                     prior_bandwidth=2e4),
-        deadline_quantile=0.75, deadline_slack=2.0)
+        training=TrainingConfig(
+            deadline=DeadlineConfig(quantile=0.75, slack=2.0)))
     if populate:
         loop.submit(UploadDataEvent(range(N_DATA)))
         for i, bw in enumerate([6e4, 2e4, 6e3]):

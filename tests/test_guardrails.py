@@ -23,6 +23,7 @@ import pytest
 
 import jax
 
+from repro.core import DeadlineConfig, PublishConfig, TrainingConfig
 from repro.core.guardrails import (CanaryGate, GuardrailConfig,
                                    TrainingGuardrails, make_lm_probe,
                                    tree_finite)
@@ -31,7 +32,7 @@ from repro.launch.train_serve import (build_training, run_train_serve,
                                       tiny_cfg)
 from repro.models import transformer as tf
 from repro.optim import sgd
-from repro.serving import ServeRequest, ServingEngine
+from repro.serving import ServeRequest, ServingConfig, ServingEngine
 
 CFG = tiny_cfg()
 
@@ -110,8 +111,9 @@ def test_rollback_without_snapshot_refuses():
 # ---------------------------------------------------------------------------
 def test_nan_worker_quarantined_then_evicted():
     g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=2))
-    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
-                                      guardrails=g)
+    loop, cluster, _ = build_training(
+        CFG, training=TrainingConfig(T=0.3, guardrails=g),
+        seed=0, churny=False)
     for _ in range(2):
         loop.iteration()
     cluster.poison("w0", "nan", iters=2)
@@ -131,8 +133,9 @@ def test_nan_worker_quarantined_then_evicted():
 
 def test_all_workers_nan_round_no_step_residuals_intact():
     g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=99))
-    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
-                                      guardrails=g)
+    loop, cluster, _ = build_training(
+        CFG, training=TrainingConfig(T=0.3, guardrails=g),
+        seed=0, churny=False)
     for _ in range(3):
         loop.iteration()
     before = loop.reducer.state_dict()     # params + residuals + step
@@ -154,9 +157,9 @@ def test_all_workers_nan_round_no_step_residuals_intact():
 # ---------------------------------------------------------------------------
 def test_garbage_step_rolls_back_to_last_good_bit_exactly():
     g = TrainingGuardrails()
-    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
-                                      guardrails=g,
-                                      optimizer=sgd(lr=0.05))
+    loop, cluster, _ = build_training(
+        CFG, training=TrainingConfig(T=0.3, guardrails=g),
+        seed=0, churny=False, optimizer=sgd(lr=0.05))
     for _ in range(4):
         lg = loop.iteration()
         assert not lg.rolled_back
@@ -177,7 +180,8 @@ def test_garbage_step_rolls_back_to_last_good_bit_exactly():
 def test_probabilistic_nan_fault_profile_quarantines():
     g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=99))
     loop, cluster, _ = build_training(
-        CFG, T=0.3, seed=0, churny=False, guardrails=g,
+        CFG, training=TrainingConfig(T=0.3, guardrails=g),
+        seed=0, churny=False,
         fault_profiles={"w1": FaultProfile(nan_p=1.0)})
     for _ in range(3):
         lg = loop.iteration()
@@ -195,7 +199,10 @@ def test_fault_free_run_bit_identical_with_zero_profile():
     no profile at all (protects every pre-existing seeded test)."""
     runs = []
     for profiled in (False, True):
-        loop, cluster, _ = build_training(CFG, T=0.3, seed=3, churny=True)
+        loop, cluster, _ = build_training(
+            CFG, training=TrainingConfig(
+                T=0.3, deadline=DeadlineConfig(quantile=0.5)),
+            seed=3, churny=True)
         if profiled:
             cluster.set_faults("w0", FaultProfile())
         runs.append([loop.iteration().loss for _ in range(5)])
@@ -204,7 +211,7 @@ def test_fault_free_run_bit_identical_with_zero_profile():
 
 def test_flaky_uplink_drops_reply_but_worker_survives():
     loop, cluster, _ = build_training(
-        CFG, T=0.3, seed=0, churny=False,
+        CFG, training=TrainingConfig(T=0.3), seed=0, churny=False,
         fault_profiles={"w2": FaultProfile(drop_p=1.0, max_retries=2,
                                            retry_backoff=0.25)})
     for _ in range(3):
@@ -226,8 +233,8 @@ def test_scripted_drop_charges_backoff_to_latency():
     the dropped round's mean latency carries exactly the retry backoff
     (0.25 + 0.5 over 3 workers) and the lost vectors leave the round."""
     def run(drop):
-        loop, cluster, _ = build_training(CFG, T=0.3, seed=0,
-                                          churny=False)
+        loop, cluster, _ = build_training(
+            CFG, training=TrainingConfig(T=0.3), seed=0, churny=False)
         loop.iteration()
         if drop:
             cluster.poison("w0", "drop", iters=1)
@@ -239,7 +246,8 @@ def test_scripted_drop_charges_backoff_to_latency():
 
 
 def test_stale_reply_resends_last_clean_message():
-    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False)
+    loop, cluster, _ = build_training(
+        CFG, training=TrainingConfig(T=0.3), seed=0, churny=False)
     loop.iteration()                       # seeds w0's stale cache
     cached_grad, cached_n, cached_loss = cluster._last_reply["w0"]
     cluster.poison("w0", "stale", iters=1)
@@ -253,7 +261,8 @@ def test_stale_reply_resends_last_clean_message():
 
 
 def test_poison_validates_kind():
-    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False)
+    loop, cluster, _ = build_training(
+        CFG, training=TrainingConfig(T=0.3), seed=0, churny=False)
     with pytest.raises(ValueError, match="kind"):
         cluster.poison("w0", "meteor")
 
@@ -301,7 +310,10 @@ def test_refused_publish_never_reaches_engine_mid_chunked_prefill():
     the completion is bit-equal to a solo replay."""
     gate = CanaryGate(_probe())
     p0 = _params(0)
-    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=64, prompt_cap=8)
+    engine = ServingEngine(p0, CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=64,
+                                                           prompt_cap=8))
     rng = np.random.RandomState(7)
     req = ServeRequest(rid=0, prompt=rng.randint(
         0, CFG.vocab_size, 30).astype(np.int32), max_new=5)
@@ -319,7 +331,10 @@ def test_refused_publish_never_reaches_engine_mid_chunked_prefill():
     while engine.has_work:
         done += engine.step().completed
     assert done[0].version == 0
-    solo = ServingEngine(p0, CFG, max_batch=2, max_seq=64, prompt_cap=8)
+    solo = ServingEngine(p0, CFG,
+                         serving=ServingConfig.from_flat(max_batch=2,
+                                                         max_seq=64,
+                                                         prompt_cap=8))
     ref = solo.run_closed_loop([req]).completions[0]
     assert done[0].tokens.tolist() == ref.tokens.tolist()
 
@@ -336,9 +351,10 @@ def test_rollback_then_publish_ships_rolled_back_params():
         if gate.check(params, version):
             published.append((version, params))
 
-    loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
-                                      guardrails=g, optimizer=sgd(lr=0.05),
-                                      publish_every=1, publish_fn=publish)
+    loop, cluster, _ = build_training(
+        CFG, training=TrainingConfig(
+            T=0.3, guardrails=g, publish=PublishConfig(every=1, fn=publish)),
+        seed=0, churny=False, optimizer=sgd(lr=0.05))
     for _ in range(3):
         loop.iteration()
     cluster.poison("w1", "garbage", iters=1)
@@ -362,8 +378,9 @@ def test_guardrail_state_survives_train_state_roundtrip(tmp_path):
 
     def fresh():
         g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=99))
-        loop, cluster, _ = build_training(CFG, T=0.3, seed=0, churny=False,
-                                          guardrails=g)
+        loop, cluster, _ = build_training(
+            CFG, training=TrainingConfig(T=0.3, guardrails=g),
+            seed=0, churny=False)
         return g, loop, cluster
 
     g, loop, cluster = fresh()
@@ -420,8 +437,9 @@ def test_end_to_end_chaos_run_train_serve():
     for c in stats.completions:
         if c.version not in replayers:
             replayers[c.version] = ServingEngine(
-                out["versions"][c.version], CFG, max_batch=4, max_seq=64,
-                prompt_cap=16)
+                out["versions"][c.version], CFG,
+                serving=ServingConfig.from_flat(max_batch=4, max_seq=64,
+                                                prompt_cap=16))
         solo = replayers[c.version].run_closed_loop(
             [ServeRequest(rid=c.rid, prompt=by_rid[c.rid].prompt,
                           max_new=by_rid[c.rid].max_new)]).completions[0]

@@ -1,0 +1,366 @@
+"""Two-tier hierarchical training (core/hierarchy.py, docs/hierarchy.md):
+regional sub-masters run the existing deadline/compressed fused reduce,
+an outer CHOCO-style step gossips compressed model deltas between them.
+
+Pinned contracts:
+
+  - a single-region gossip-off hierarchy is BIT-IDENTICAL to driving
+    the same flat ``MasterEventLoop`` directly (the outer tier adds no
+    arithmetic of its own);
+  - with ``gossip_frac=1.0`` the outer step is EXACT pairwise weighted
+    averaging: the matched pair lands on its weighted mean, spread
+    contracts, and an equal-weight full matching conserves the mean;
+  - WAN accounting: only compressed H-step deltas cross the WAN —
+    ``wan_bytes`` matches the top-k message size times the peer fan-out
+    and stays far below the intra-region total;
+  - regional churn: a region can leave mid-run and rejoin re-seeded to
+    the live consensus with its clock fast-forwarded;
+  - the whole two-tier stack round-trips ``checkpoint/io.py``
+    bit-exactly (resume == uninterrupted, to the last byte);
+  - construction errors name the offending value.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import (TrainState, load_train_state,
+                                 save_train_state,
+                                 serving_params_from_train_state)
+from repro.core import (DeadlineConfig, GradientCompressor,
+                        HierarchicalMaster, HierarchyConfig, JoinEvent,
+                        MasterEventLoop, MasterReducer, TrainingConfig,
+                        UploadDataEvent)
+from repro.core.config import PublishConfig
+from repro.core.scheduler import AdaptiveScheduler
+from repro.core.simulation import (DeviceProfile, RegionalNetworkModel,
+                                   SimulatedCluster)
+from repro.optim import sgd
+
+N_FEAT = 24
+N_DATA = 240
+
+
+def _problem(seed=0):
+    rng = np.random.RandomState(seed)
+    w_true = rng.randn(N_FEAT).astype(np.float32)
+    X = rng.randn(N_DATA, N_FEAT).astype(np.float32)
+    y = (X @ w_true).astype(np.float32)
+
+    @jax.jit
+    def _lg(params, Xb, yb):
+        def loss_fn(p):
+            r = Xb @ p["w"] - yb
+            return 0.5 * jnp.sum(r * r)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        return g, loss
+
+    def grad_fn(params, Xb, yb):
+        g, loss = _lg(params, jnp.asarray(Xb), jnp.asarray(yb))
+        return g, float(loss)
+
+    return {"w": jnp.zeros(N_FEAT)}, grad_fn, (X, y)
+
+
+def _profile(i, power=300.0, latency=0.01):
+    return DeviceProfile(f"dev{i}", power, latency, 0.05, uplink_bps=5e4)
+
+
+def _region_loop(name, cluster, params, n_workers=2, frac=0.5, T=0.2,
+                 shard=None):
+    red = MasterReducer(params, sgd(lr=0.005),
+                        compressor=GradientCompressor("topk", frac=frac),
+                        fused=True)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster,
+        scheduler=AdaptiveScheduler(T=T, prior_power=300.0),
+        training=TrainingConfig(
+            T=T, deadline=DeadlineConfig(quantile=0.9, slack=2.0)))
+    loop.submit(UploadDataEvent(shard if shard is not None
+                                else range(N_DATA)))
+    for i in range(n_workers):
+        w = f"{name}:w{i}"
+        cluster.add_worker(w, _profile(i), region=name)
+        loop.submit(JoinEvent(w, capacity=N_DATA))
+    return loop
+
+
+def _build_hierarchy(n_regions=3, seed=0, gossip_frac=1.0, inner_steps=2,
+                     gossip=True, gossip_lr=1.0):
+    params, grad_fn, (X, y) = _problem(seed=0)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=seed, network=RegionalNetworkModel())
+    regions = {
+        f"r{i}": _region_loop(f"r{i}", cluster, params,
+                              shard=range(i, N_DATA, n_regions))
+        for i in range(n_regions)}
+    cfg = HierarchyConfig(n_regions=n_regions, inner_steps=inner_steps,
+                          gossip=gossip, gossip_frac=gossip_frac,
+                          gossip_lr=gossip_lr, gossip_seed=seed)
+    master = HierarchicalMaster(regions=regions, config=cfg,
+                                network=RegionalNetworkModel())
+    return master, cluster, params
+
+
+# ---------------------------------------------------------------------------
+# the degenerate case: one region, no gossip == the flat loop, bit-exact
+# ---------------------------------------------------------------------------
+def test_single_region_no_gossip_is_bit_identical_to_flat_loop():
+    H, outer = 2, 3
+
+    def flat_run():
+        params, grad_fn, (X, y) = _problem(seed=0)
+        cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y),
+                                   mode="real", seed=0,
+                                   network=RegionalNetworkModel())
+        loop = _region_loop("r0", cluster, params)
+        loop.run(H * outer)
+        return np.asarray(loop.reducer.flat_params)
+
+    master, _, _ = _build_hierarchy(n_regions=1, gossip=False,
+                                    inner_steps=H)
+    master.run(outer)
+    hier_flat = np.asarray(master.regions["r0"].reducer.flat_params)
+    np.testing.assert_array_equal(hier_flat, flat_run())
+    np.testing.assert_array_equal(np.asarray(master.consensus_flat()),
+                                  hier_flat)
+    assert master.wan_bytes == 0              # nothing ever crossed a WAN
+    assert master.summary()["wan_bytes_frac"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# gossip_frac=1.0: the outer step degenerates to exact weighted averaging
+# ---------------------------------------------------------------------------
+def test_full_frac_gossip_is_exact_weighted_pairwise_average():
+    master, _, _ = _build_hierarchy(n_regions=2, gossip_frac=1.0,
+                                    inner_steps=1)
+    master.iteration()     # 2 regions: the matching always pairs them
+    a = np.asarray(master.regions["r0"].reducer.flat_params)
+    b = np.asarray(master.regions["r1"].reducer.flat_params)
+    # after an exact pairwise average both land on the same point
+    np.testing.assert_allclose(a, b, rtol=0, atol=1e-6)
+    assert master.history[-1].spread <= 1e-6
+
+
+def test_gossip_contracts_spread_and_loss_decreases():
+    master, _, _ = _build_hierarchy(n_regions=4, gossip_frac=1.0,
+                                    inner_steps=2)
+    logs = master.run(8)
+    losses = [lg.loss for lg in logs]
+    assert all(b < a for a, b in zip(losses, losses[1:])), losses
+    assert losses[-1] < losses[0] * 0.9, losses
+    # regions drift during inner steps; gossip keeps the drift bounded
+    # instead of letting regions diverge monotonically
+    assert logs[-1].spread < 10.0 * max(logs[0].spread, 1e-9)
+    assert all(np.isfinite(lg.loss) for lg in logs)
+
+
+def test_no_gossip_regions_drift_apart():
+    """Ablation: without the outer exchange the regional shards pull
+    their replicas apart — the gossip is what holds consensus."""
+    g, _, _ = _build_hierarchy(n_regions=3, gossip_frac=1.0, inner_steps=2)
+    ng, _, _ = _build_hierarchy(n_regions=3, gossip=False, inner_steps=2)
+    g.run(5)
+    ng.run(5)
+    assert ng.history[-1].spread > g.history[-1].spread
+
+
+# ---------------------------------------------------------------------------
+# WAN accounting: only compressed deltas cross regions
+# ---------------------------------------------------------------------------
+def test_wan_bytes_match_compressed_fanout_and_stay_minor():
+    R, frac = 3, 0.25
+    master, _, _ = _build_hierarchy(n_regions=R, gossip_frac=frac,
+                                    inner_steps=2)
+    logs = master.run(4)
+    per_msg = 8 * master.compressor.flat_k(N_FEAT)   # 4B value + 4B index
+    expect_round = per_msg * (R - 1) * R
+    for lg in logs:
+        assert lg.wan_bytes == expect_round, (lg.wan_bytes, expect_round)
+        assert lg.wan_time > 0.0        # the WAN barrier costs wall time
+    s = master.summary()
+    assert s["wan_bytes"] == expect_round * len(logs)
+    assert s["intra_bytes"] > 0
+    assert s["wan_bytes_frac"] < 0.5    # WAN stays the minor channel
+    assert s["communication_ratio"] == 0.5      # H=2 -> 1/H
+
+
+def test_compressed_gossip_tracks_full_frac_gossip():
+    """Error feedback: the top-k WAN channel ships the missing mass over
+    later rounds, so heavy compression still contracts toward the
+    full-exchange trajectory instead of stalling."""
+    full, _, _ = _build_hierarchy(n_regions=2, gossip_frac=1.0,
+                                  inner_steps=1)
+    comp, _, _ = _build_hierarchy(n_regions=2, gossip_frac=0.25,
+                                  inner_steps=1)
+    full.run(8)
+    comp.run(8)
+    assert comp.wan_bytes < full.wan_bytes
+    d = float(jnp.abs(full.consensus_flat()
+                      - comp.consensus_flat()).max())
+    assert d < 1.0, d
+    assert np.isfinite(comp.history[-1].loss)
+
+
+# ---------------------------------------------------------------------------
+# regional churn: leave mid-run, rejoin re-seeded to consensus
+# ---------------------------------------------------------------------------
+def test_region_leave_and_rejoin_reseeds_to_consensus():
+    master, _, _ = _build_hierarchy(n_regions=3, gossip_frac=1.0,
+                                    inner_steps=2)
+    master.run(2)
+    master.leave_region("r1")
+    assert master.live_regions == ["r0", "r2"]
+    stale = np.asarray(master.regions["r1"].reducer.flat_params)
+    logs = master.run(2)                   # survivors keep training
+    assert "region-leave:r1" in logs[0].events
+    assert sorted(logs[-1].region_steps) == ["r0", "r2"]
+
+    master.join_region("r1")
+    consensus_at_join = np.asarray(master.consensus_flat())
+    back = np.asarray(master.regions["r1"].reducer.flat_params)
+    assert not np.array_equal(back, stale), "rejoin kept stale params"
+    # the rejoiner arrives ON the survivors' consensus and at the clock
+    np.testing.assert_allclose(back,  consensus_at_join, atol=1e-5)
+    assert master.regions["r1"].clock >= master.clock - 1e-9
+    log = master.iteration()
+    assert "region-join:r1" in log.events
+    assert sorted(log.region_steps) == ["r0", "r1", "r2"]
+    assert np.isfinite(log.loss)
+
+
+def test_leaving_all_but_one_region_still_iterates():
+    master, _, _ = _build_hierarchy(n_regions=2, gossip_frac=1.0,
+                                    inner_steps=1)
+    master.leave_region("r1")
+    log = master.iteration()     # gossip needs >=2 live: skipped, no step
+    assert log.wan_bytes == 0 and log.spread == 0.0
+    assert master.live_regions == ["r0"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: the whole two-tier stack round-trips bit-exactly
+# ---------------------------------------------------------------------------
+def test_two_tier_checkpoint_resume_is_bit_exact(tmp_path):
+    total, cut = 6, 3
+    base, base_cluster, _ = _build_hierarchy(n_regions=3, gossip_frac=0.5,
+                                             inner_steps=2)
+    base.run(total)
+
+    part, part_cluster, _ = _build_hierarchy(n_regions=3, gossip_frac=0.5,
+                                             inner_steps=2)
+    part.run(cut)
+    path = str(tmp_path / "hier.npz")
+    save_train_state(path, TrainState.capture(part, part_cluster))
+
+    resumed, resumed_cluster, _ = _build_hierarchy(
+        n_regions=3, gossip_frac=0.5, inner_steps=2)
+    st = load_train_state(path)
+    st.restore(resumed, resumed_cluster)
+    assert resumed.outer_step == cut
+    resumed.run(total - cut)
+
+    np.testing.assert_array_equal(np.asarray(base.consensus_flat()),
+                                  np.asarray(resumed.consensus_flat()))
+    for r in base.regions:
+        np.testing.assert_array_equal(
+            np.asarray(base.regions[r].reducer.flat_params),
+            np.asarray(resumed.regions[r].reducer.flat_params))
+        assert base.regions[r].step == resumed.regions[r].step
+    assert base.clock == resumed.clock
+    assert base.wan_bytes == resumed.wan_bytes
+    assert [lg.spread for lg in base.history] == \
+        [lg.spread for lg in resumed.history]
+
+
+def test_serving_params_reads_two_tier_snapshot(tmp_path):
+    master, cluster, params = _build_hierarchy(n_regions=2,
+                                               gossip_frac=1.0,
+                                               inner_steps=1)
+    master.run(2)
+    path = str(tmp_path / "hier.npz")
+    save_train_state(path, TrainState.capture(master, cluster))
+    got, version = serving_params_from_train_state(
+        load_train_state(path), params)
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               np.asarray(master.params["w"]), atol=0)
+    assert version == max(lp.step for lp in master.regions.values())
+
+
+def test_resume_refuses_region_mismatch(tmp_path):
+    master, cluster, _ = _build_hierarchy(n_regions=2, gossip_frac=1.0)
+    master.run(1)
+    other, _, _ = _build_hierarchy(n_regions=3, gossip_frac=1.0)
+    with pytest.raises(ValueError, match="region mismatch"):
+        other.load_state_dict(master.state_dict())
+
+
+# ---------------------------------------------------------------------------
+# construction validation names the offending value
+# ---------------------------------------------------------------------------
+def test_constructor_validation():
+    params, grad_fn, (X, y) = _problem()
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=0, network=RegionalNetworkModel())
+    with pytest.raises(ValueError, match="at least one"):
+        HierarchicalMaster(regions={},
+                           config=HierarchyConfig(gossip=False))
+    loop = _region_loop("r0", cluster, params)
+    with pytest.raises(ValueError, match="needs >= 2"):
+        HierarchicalMaster(regions={"r0": loop},
+                           config=HierarchyConfig(n_regions=2))
+    unfused = MasterReducer(params, sgd(lr=0.01),
+                            compressor=GradientCompressor("topk",
+                                                          frac=0.5),
+                            fused=False)
+    bad = MasterEventLoop(reducer=unfused, cluster=cluster,
+                          scheduler=AdaptiveScheduler(T=0.2))
+    with pytest.raises(ValueError, match="fused"):
+        HierarchicalMaster(regions={"r0": bad},
+                           config=HierarchyConfig(gossip=False))
+
+
+def test_join_unknown_region_requires_loop():
+    master, _, _ = _build_hierarchy(n_regions=2, gossip_frac=1.0)
+    with pytest.raises(ValueError, match="unknown region"):
+        master.join_region("r9")
+
+
+def test_build_training_two_tier_branch():
+    """launch/train_serve.py returns a HierarchicalMaster when
+    training.hierarchy is set, wired to a region-aware cluster."""
+    from repro.launch.train_serve import build_training, tiny_cfg
+
+    master, cluster, params = build_training(
+        tiny_cfg(),
+        training=TrainingConfig(
+            T=0.2, hierarchy=HierarchyConfig(n_regions=2, inner_steps=2,
+                                             gossip_frac=0.5)),
+        seed=0, churny=False, n_data=64)
+    assert isinstance(master, HierarchicalMaster)
+    assert master.live_regions == ["r0", "r1"]
+    assert cluster.region_of("r0:w0") == "r0"
+    log = master.iteration()
+    assert np.isfinite(log.loss) and log.wan_bytes > 0
+
+
+def test_outer_publish_hook_fires_on_consensus():
+    published = []
+    params, grad_fn, (X, y) = _problem()
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=0, network=RegionalNetworkModel())
+    regions = {f"r{i}": _region_loop(f"r{i}", cluster, params,
+                                     shard=range(i, N_DATA, 2))
+               for i in range(2)}
+    master = HierarchicalMaster(
+        regions=regions,
+        config=HierarchyConfig(n_regions=2, inner_steps=1,
+                               gossip_frac=1.0),
+        publish=PublishConfig(every=2,
+                              fn=lambda p, v, t: published.append((v, t))),
+        network=RegionalNetworkModel())
+    master.run(5)
+    assert [v for v, _ in published] == [2, 4]
+    clocks = [t for _, t in published]
+    assert clocks == sorted(clocks) and clocks[0] > 0.0

@@ -13,10 +13,11 @@ Three layers of guarantees:
     the EXACT greedy stream of the non-speculative engine while keeping
     the trace discipline (one draft trace + prefill buckets + ONE verify
     bucket);
-  - API: ``ServingConfig`` and the flat kwargs build identical engines,
-    mixing both forms is rejected, invalid configs fail AT CONSTRUCTION
-    with messages naming the offending values, and the five deprecated
-    ``build_*_step`` factories still work under a DeprecationWarning.
+  - API: ``serving=ServingConfig(...)`` is the engine's only
+    construction form (the flat kwargs and the five historical
+    ``build_*_step`` factories finished their deprecation cycle and are
+    gone — both removals pinned here), and invalid configs fail AT
+    CONSTRUCTION with messages naming the offending values.
 """
 import numpy as np
 import pytest
@@ -28,7 +29,8 @@ from repro.configs.base import ArchConfig, MoEConfig
 from repro.kernels.flash_decode import flash_decode, flash_decode_ref
 from repro.models import transformer as tf
 from repro.serving import (PagingConfig, SamplingConfig, ServeRequest,
-                           ServingConfig, ServingEngine, SpeculativeConfig)
+                           ServingConfig, ServingEngine,
+                           SpeculativeConfig)
 from repro.train.step import build_serve_programs
 
 TINY_DENSE = ArchConfig(
@@ -177,8 +179,10 @@ def test_engine_flash_dense_matches_oracle_bit_exact(cfg):
     params = _params(cfg)
     rng = np.random.RandomState(21)
     reqs = _mk_requests(cfg, rng, 12, max_prompt=12, max_new=6)
-    base = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                         prompt_cap=8)
+    base = ServingEngine(params, cfg,
+                         serving=ServingConfig.from_flat(max_batch=4,
+                                                         max_seq=32,
+                                                         prompt_cap=8))
     flash = ServingEngine(params, cfg, serving=ServingConfig(
         max_batch=4, max_seq=32, prompt_cap=8, decode_kernel="flash"))
     ref = _tokens_by_rid(base.run_closed_loop(reqs))
@@ -196,8 +200,10 @@ def test_engine_flash_paged_matches_oracle_bit_exact(cfg):
     params = _params(cfg)
     rng = np.random.RandomState(22)
     reqs = _mk_requests(cfg, rng, 12, max_prompt=12, max_new=6)
-    base = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                         prompt_cap=8)
+    base = ServingEngine(params, cfg,
+                         serving=ServingConfig.from_flat(max_batch=4,
+                                                         max_seq=32,
+                                                         prompt_cap=8))
     flash = ServingEngine(params, cfg, serving=ServingConfig(
         max_batch=4, max_seq=32, prompt_cap=8, decode_kernel="flash",
         paging=PagingConfig(page_size=8)))
@@ -216,7 +222,9 @@ def test_engine_flash_paged_prefix_reuse_still_exact():
         14, rate_rps=200.0, vocab_size=cfg.vocab_size, prompt_rng=(4, 8),
         gen_short=(2, 4), gen_long=(4, 6), long_frac=0.3,
         shared_prefix=(2, 16, 0.8), seed=9)
-    base = ServingEngine(params, cfg, max_batch=4, max_seq=64)
+    base = ServingEngine(params, cfg,
+                         serving=ServingConfig.from_flat(max_batch=4,
+                                                         max_seq=64))
     flash = ServingEngine(params, cfg, serving=ServingConfig(
         max_batch=4, max_seq=64, decode_kernel="flash",
         paging=PagingConfig(page_size=8)))
@@ -235,7 +243,9 @@ def test_speculative_emits_exact_greedy_stream(paged):
     params = _params(cfg)
     rng = np.random.RandomState(31)
     reqs = _mk_requests(cfg, rng, 10, max_prompt=10, max_new=8)
-    base = ServingEngine(params, cfg, max_batch=4, max_seq=64)
+    base = ServingEngine(params, cfg,
+                         serving=ServingConfig.from_flat(max_batch=4,
+                                                         max_seq=64))
     ref = _tokens_by_rid(base.run_closed_loop(reqs))
     # a DIFFERENT-SEED draft: disagrees with the target often, so the
     # accept rule is exercised on real rejections — output must not move
@@ -262,7 +272,9 @@ def test_speculative_perfect_draft_accepts_everything():
     params = _params(cfg)
     rng = np.random.RandomState(32)
     reqs = _mk_requests(cfg, rng, 8, max_prompt=8, max_new=8)
-    base = ServingEngine(params, cfg, max_batch=4, max_seq=64)
+    base = ServingEngine(params, cfg,
+                         serving=ServingConfig.from_flat(max_batch=4,
+                                                         max_seq=64))
     ref = _tokens_by_rid(base.run_closed_loop(reqs))
     spec = SpeculativeConfig(draft_params=params, draft_cfg=cfg, k=4,
                              window=32)
@@ -283,7 +295,9 @@ def test_speculative_moe_and_cross_arch_draft():
     params = _params(cfg)
     rng = np.random.RandomState(33)
     reqs = _mk_requests(cfg, rng, 8, max_prompt=8, max_new=6)
-    base = ServingEngine(params, cfg, max_batch=4, max_seq=64)
+    base = ServingEngine(params, cfg,
+                         serving=ServingConfig.from_flat(max_batch=4,
+                                                         max_seq=64))
     ref = _tokens_by_rid(base.run_closed_loop(reqs))
     spec = SpeculativeConfig(draft_params=_params(TINY_DENSE, seed=5),
                              draft_cfg=TINY_DENSE, k=2, window=16)
@@ -300,9 +314,14 @@ def test_serving_config_equals_flat_kwargs():
     params = _params(cfg)
     rng = np.random.RandomState(41)
     reqs = _mk_requests(cfg, rng, 8)
-    flat = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                         prompt_cap=8, temperature=0.7, top_k=5,
-                         sample_seed=3, page_size=8)
+    flat = ServingEngine(params, cfg,
+                         serving=ServingConfig.from_flat(max_batch=4,
+                                                         max_seq=32,
+                                                         prompt_cap=8,
+                                                         temperature=0.7,
+                                                         top_k=5,
+                                                         sample_seed=3,
+                                                         page_size=8))
     grouped = ServingEngine(params, cfg, serving=ServingConfig(
         max_batch=4, max_seq=32, prompt_cap=8,
         sampling=SamplingConfig(temperature=0.7, top_k=5, sample_seed=3),
@@ -312,9 +331,12 @@ def test_serving_config_equals_flat_kwargs():
 
 
 def test_mixing_serving_and_flat_kwargs_rejected():
+    # the flat kwargs finished their deprecation cycle, so "mixing" is
+    # no longer a ValueError at the disambiguation layer — the engine's
+    # signature simply has no flat kwargs left to mix in
     cfg = TINY_DENSE
     params = _params(cfg)
-    with pytest.raises(ValueError, match="not both.*max_batch"):
+    with pytest.raises(TypeError):
         ServingEngine(params, cfg,
                       serving=ServingConfig(max_batch=4, max_seq=32),
                       max_batch=4)
@@ -353,37 +375,20 @@ def test_more_construction_rejections():
 
 
 # ---------------------------------------------------------------------------
-# deprecated factories: warn, but still serve
+# the one-cycle deprecations are GONE: grouped construction is the API
 # ---------------------------------------------------------------------------
-def test_deprecated_step_factories_warn_and_work():
-    from repro.train.step import (build_decode_step,
-                                  build_paged_decode_step,
-                                  build_paged_prefill_chunk_step,
-                                  build_prefill_chunk_step,
-                                  build_prefill_step)
+def test_flat_constructions_removed():
+    # the five build_*_step wrappers completed their deprecation cycle
+    # (docs/serving.md §1 maps each to build_serve_programs)
+    import repro.train.step as step_mod
+    for old in ("build_prefill_step", "build_prefill_chunk_step",
+                "build_paged_prefill_chunk_step", "build_paged_decode_step",
+                "build_decode_step"):
+        assert not hasattr(step_mod, old)
+    # ...and so did the ServingEngine flat-kwarg constructor: the grouped
+    # config is now required, flat kwargs are a TypeError
     cfg = TINY_DENSE
-    params = _params(cfg)
-    with pytest.warns(DeprecationWarning):
-        prefill = build_prefill_step(cfg)
-    with pytest.warns(DeprecationWarning):
-        decode = build_decode_step(cfg, ragged=True)
-    with pytest.warns(DeprecationWarning):
-        build_prefill_chunk_step(cfg)
-    with pytest.warns(DeprecationWarning):
-        build_paged_prefill_chunk_step(cfg)
-    with pytest.warns(DeprecationWarning):
-        build_paged_decode_step(cfg)
-    # the wrappers return the SAME programs the consolidated factory
-    # builds: run one prefill+decode step and check against it
-    toks = jnp.asarray(np.random.RandomState(0).randint(
-        0, cfg.vocab_size, size=(2, 6)), jnp.int32)
-    logits, cache = prefill(params, {"tokens": toks})
-    pos = jnp.asarray([5, 5], jnp.int32)
-    live = jnp.asarray([True, True])
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    old_logits, _ = decode(params, tok, pos + 1, cache, live)
-    progs = build_serve_programs(cfg, paged=False)
-    ref_logits, ref_cache = progs.prefill(params, {"tokens": toks})
-    new_logits, _ = progs.decode(params, tok, pos + 1, ref_cache, live)
-    assert jnp.array_equal(logits, ref_logits)
-    assert jnp.array_equal(old_logits, new_logits)
+    with pytest.raises(TypeError):
+        ServingEngine(_params(cfg), cfg, max_batch=4, max_seq=32)
+    with pytest.raises(TypeError):
+        ServingEngine(_params(cfg), cfg)

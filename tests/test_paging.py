@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, MoEConfig
 from repro.core.simulation import ServeCostModel, generate_requests
 from repro.models import transformer as tf
-from repro.serving import ServeRequest, ServingEngine
+from repro.serving import ServeRequest, ServingConfig, ServingEngine
 
 TINY_DENSE = ArchConfig(
     name="tiny-dense", arch_type="dense", n_layers=2, d_model=32,
@@ -71,10 +71,15 @@ def test_paged_matches_dense_bit_exact(cfg):
     params = _params(cfg)
     rng = np.random.RandomState(11)
     reqs = _mk_requests(cfg, rng, 12, max_prompt=12, max_new=6)
-    dense = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                          prompt_cap=8)
-    paged = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                          prompt_cap=8, page_size=8)
+    dense = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=4,
+                                                          max_seq=32,
+                                                          prompt_cap=8))
+    paged = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=4,
+                                                          max_seq=32,
+                                                          prompt_cap=8,
+                                                          page_size=8))
     ref = _tokens_by_rid(dense.run_closed_loop(reqs))
     got = _tokens_by_rid(paged.run_closed_loop(reqs))
     assert got == ref
@@ -90,9 +95,13 @@ def test_prefix_reuse_is_bit_exact_and_actually_fires():
         16, rate_rps=200.0, vocab_size=cfg.vocab_size, prompt_rng=(4, 8),
         gen_short=(2, 4), gen_long=(4, 6), long_frac=0.3,
         shared_prefix=(2, 16, 0.8), seed=5)
-    dense = ServingEngine(params, cfg, max_batch=4, max_seq=64)
-    paged = ServingEngine(params, cfg, max_batch=4, max_seq=64,
-                          page_size=8)
+    dense = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=4,
+                                                          max_seq=64))
+    paged = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=4,
+                                                          max_seq=64,
+                                                          page_size=8))
     ref = _tokens_by_rid(dense.run_closed_loop(reqs))
     stats = paged.run_closed_loop(reqs)
     assert _tokens_by_rid(stats) == ref
@@ -108,9 +117,14 @@ def test_no_reuse_mode_is_still_bit_exact():
         10, rate_rps=200.0, vocab_size=cfg.vocab_size, prompt_rng=(4, 8),
         gen_short=(2, 4), gen_long=(4, 6), long_frac=0.3,
         shared_prefix=(2, 16, 0.8), seed=6)
-    dense = ServingEngine(params, cfg, max_batch=4, max_seq=64)
-    paged = ServingEngine(params, cfg, max_batch=4, max_seq=64,
-                          page_size=8, prefix_reuse=False)
+    dense = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=4,
+                                                          max_seq=64))
+    paged = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=4,
+                                                          max_seq=64,
+                                                          page_size=8,
+                                                          prefix_reuse=False))
     ref = _tokens_by_rid(dense.run_closed_loop(reqs))
     stats = paged.run_closed_loop(reqs)
     assert _tokens_by_rid(stats) == ref
@@ -127,8 +141,10 @@ def test_pages_freed_on_drain_and_engine_reuse_exact():
         12, rate_rps=200.0, vocab_size=cfg.vocab_size, prompt_rng=(4, 8),
         gen_short=(2, 4), gen_long=(4, 6), long_frac=0.3,
         shared_prefix=(2, 16, 0.8), seed=7)
-    engine = ServingEngine(params, cfg, max_batch=4, max_seq=64,
-                           page_size=8)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=64,
+                                                           page_size=8))
     first = _tokens_by_rid(engine.run_closed_loop(reqs))
     # mirror of the dense slot-reuse test: every slot-held page was
     # released at completion — residual pages are all trie-held prefixes
@@ -147,8 +163,11 @@ def test_pages_freed_on_drain_and_engine_reuse_exact():
 
 def test_request_too_big_for_pool_raises_at_submit():
     cfg = TINY_DENSE
-    engine = ServingEngine(_params(cfg), cfg, max_batch=2, max_seq=32,
-                           page_size=8, n_pages=2)
+    engine = ServingEngine(_params(cfg), cfg,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32,
+                                                           page_size=8,
+                                                           n_pages=2))
     rng = np.random.RandomState(0)
     big = ServeRequest(rid=0, prompt=rng.randint(
         0, cfg.vocab_size, 20).astype(np.int32), max_new=8)
@@ -160,14 +179,21 @@ def test_paged_ctor_validation():
     cfg = TINY_DENSE
     params = _params(cfg)
     with pytest.raises(ValueError, match="whole pages"):
-        ServingEngine(params, cfg, max_batch=2, max_seq=40, page_size=16)
+        ServingEngine(params, cfg,
+                      serving=ServingConfig.from_flat(max_batch=2, max_seq=40,
+                                                      page_size=16))
     with pytest.raises(ValueError, match="page_size"):
-        ServingEngine(params, cfg, max_batch=2, max_seq=32, page_size=0)
+        ServingEngine(params, cfg,
+                      serving=ServingConfig.from_flat(max_batch=2, max_seq=32,
+                                                      page_size=0))
     with pytest.raises(ValueError, match="n_pages"):
-        ServingEngine(params, cfg, max_batch=2, max_seq=32, page_size=8,
-                      n_pages=0)
+        ServingEngine(params, cfg,
+                      serving=ServingConfig.from_flat(max_batch=2, max_seq=32,
+                                                      page_size=8, n_pages=0))
     with pytest.raises(ValueError, match="page_size"):
-        ServingEngine(params, cfg, max_batch=2, max_seq=32, n_pages=4)
+        ServingEngine(params, cfg,
+                      serving=ServingConfig.from_flat(max_batch=2, max_seq=32,
+                                                      n_pages=4))
 
 
 # ---------------------------------------------------------------------------
@@ -182,8 +208,10 @@ def test_cow_fork_never_mutates_shared_pages():
     tail = rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
     child = ServeRequest(rid=1,
                          prompt=np.concatenate([prefix, tail]), max_new=6)
-    engine = ServingEngine(params, cfg, max_batch=2, max_seq=64,
-                           page_size=8)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=64,
+                                                           page_size=8))
     engine.submit(parent)
     while engine.has_work:
         engine.step()
@@ -205,7 +233,9 @@ def test_cow_fork_never_mutates_shared_pages():
     np.testing.assert_array_equal(
         np.asarray(engine.cache["layers"]["v"][:, frozen]), snap_v)
     # and the fork's output is bit-equal to a solo dense run
-    solo = ServingEngine(params, cfg, max_batch=1, max_seq=64)
+    solo = ServingEngine(params, cfg,
+                         serving=ServingConfig.from_flat(max_batch=1,
+                                                         max_seq=64))
     ref = solo.run_closed_loop([ServeRequest(
         rid=1, prompt=child.prompt, max_new=child.max_new)])
     assert done[0].tokens.tolist() == ref.completions[0].tokens.tolist()
@@ -221,7 +251,10 @@ def test_trie_generations_follow_the_version_ring():
         14, rate_rps=40.0, vocab_size=cfg.vocab_size, prompt_rng=(4, 8),
         gen_short=(2, 4), gen_long=(4, 6), long_frac=0.3,
         shared_prefix=(2, 16, 0.8), seed=9)
-    engine = ServingEngine(p0, cfg, max_batch=4, max_seq=64, page_size=8)
+    engine = ServingEngine(p0, cfg,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=64,
+                                                           page_size=8))
     t_mid = sorted(r.arrival for r in reqs)[len(reqs) // 2]
     stats = engine.run_simulated(reqs, ServeCostModel(),
                                  swaps=[(t_mid, p1, 1)])
@@ -230,8 +263,12 @@ def test_trie_generations_follow_the_version_ring():
     # — pages written under v0 stayed valid for v0-pinned slots after
     # the swap, and v1 admissions never read a v0 prefix
     by_rid = {r.rid: r for r in reqs}
-    solos = {0: ServingEngine(p0, cfg, max_batch=1, max_seq=64),
-             1: ServingEngine(p1, cfg, max_batch=1, max_seq=64)}
+    solos = {0: ServingEngine(p0, cfg,
+                              serving=ServingConfig.from_flat(max_batch=1,
+                                                              max_seq=64)),
+             1: ServingEngine(p1, cfg,
+                              serving=ServingConfig.from_flat(max_batch=1,
+                                                              max_seq=64))}
     for c in stats.completions:
         ref = solos[c.version].run_closed_loop([ServeRequest(
             rid=c.rid, prompt=by_rid[c.rid].prompt,

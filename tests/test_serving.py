@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, MoEConfig
 from repro.core.simulation import ServeCostModel, generate_requests
 from repro.models import transformer as tf
-from repro.serving import ServeRequest, ServingEngine, pow2_bucket
+from repro.serving import (ServeRequest, ServingConfig, ServingEngine,
+                           pow2_bucket)
 
 TINY_DENSE = ArchConfig(
     name="tiny-dense", arch_type="dense", n_layers=2, d_model=32,
@@ -159,7 +160,9 @@ def test_engine_matches_full_forward_oracle(cfg):
     rng = np.random.RandomState(3)
     reqs = _mk_requests(cfg, rng, n=5)
     # every prompt length distinct -> genuinely ragged co-batching
-    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=32))
     stats = engine.run_closed_loop(reqs)
     assert stats.n_requests == len(reqs)
     for c in stats.completions:
@@ -181,7 +184,9 @@ def test_engine_fuzz_no_leaks_and_neighbor_independence():
     reqs = generate_requests(
         30, rate_rps=400.0, vocab_size=cfg.vocab_size, prompt_rng=(1, 12),
         gen_short=(1, 6), gen_long=(8, 16), long_frac=0.25, seed=7)
-    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=32))
     stats = engine.run_simulated(reqs, ServeCostModel())
 
     # every request completes exactly once, with exactly max_new tokens
@@ -222,8 +227,10 @@ def test_engine_chunked_prefill_matches_oracle():
     reqs = [ServeRequest(rid=i, prompt=rng.randint(
         0, cfg.vocab_size, L).astype(np.int32), max_new=4)
         for i, L in enumerate(lens)]
-    engine = ServingEngine(params, cfg, max_batch=3, max_seq=64,
-                           prompt_cap=8)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=3,
+                                                           max_seq=64,
+                                                           prompt_cap=8))
     stats = engine.run_closed_loop(reqs)
     assert stats.n_requests == len(reqs)
     # chunking really happened: more chunk dispatches than admissions
@@ -249,8 +256,11 @@ def test_temperature_zero_matches_greedy_oracle(cfg):
     params = _params(cfg)
     rng = np.random.RandomState(13)
     reqs = _mk_requests(cfg, rng, n=4)
-    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                           temperature=0.0, sample_seed=123)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=32,
+                                                           temperature=0.0,
+                                                           sample_seed=123))
     stats = engine.run_closed_loop(reqs)
     for c in stats.completions:
         req = reqs[c.rid]
@@ -266,8 +276,12 @@ def test_top_k_one_matches_greedy_oracle():
     params = _params(cfg)
     rng = np.random.RandomState(17)
     reqs = _mk_requests(cfg, rng, n=4)
-    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                           temperature=1.7, top_k=1, sample_seed=5)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=32,
+                                                           temperature=1.7,
+                                                           top_k=1,
+                                                           sample_seed=5))
     stats = engine.run_closed_loop(reqs)
     for c in stats.completions:
         req = reqs[c.rid]
@@ -283,8 +297,12 @@ def test_top_k_tied_logits_keep_exactly_k(cfg):
     ties broken by LOWEST index), so a 3-way tie under top_k=2 samples
     only the two lowest tied indices — a ``lg < kth`` threshold would
     keep all three."""
-    engine = ServingEngine(_params(cfg), cfg, max_batch=2, max_seq=32,
-                           temperature=1.0, top_k=2, sample_seed=7)
+    engine = ServingEngine(_params(cfg), cfg,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32,
+                                                           temperature=1.0,
+                                                           top_k=2,
+                                                           sample_seed=7))
     logits = np.full((1, cfg.vocab_size), -5.0, np.float32)
     logits[0, [3, 10, 17]] = 2.0            # 3-way tie for the top value
     lg = jnp.asarray(logits)
@@ -302,8 +320,12 @@ def test_top_k_one_tied_argmax_matches_greedy():
     greedy path: argmax and top_k both resolve ties to the FIRST
     occurrence, so the sampled stream is pinned to it."""
     cfg = TINY_DENSE
-    engine = ServingEngine(_params(cfg), cfg, max_batch=2, max_seq=32,
-                           temperature=2.3, top_k=1, sample_seed=9)
+    engine = ServingEngine(_params(cfg), cfg,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32,
+                                                           temperature=2.3,
+                                                           top_k=1,
+                                                           sample_seed=9))
     logits = np.zeros((2, cfg.vocab_size), np.float32)
     logits[0, [5, 20]] = 3.0                # tied argmax, row 0
     logits[1, [0, 1, 60]] = 1.5             # 3-way tie incl. index 0
@@ -328,15 +350,23 @@ def test_sampling_deterministic_solo_vs_cobatched():
         return {c.rid: c.tokens.tolist()
                 for c in engine.run_closed_loop(rs).completions}
 
-    engine = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                           temperature=0.8, top_k=7, sample_seed=42)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=32,
+                                                           temperature=0.8,
+                                                           top_k=7,
+                                                           sample_seed=42))
     together = run(engine, reqs)
     solo = {}
     for r in reqs:
         solo.update(run(engine, [r]))       # same engine: traces shared
     assert together == solo
-    other = ServingEngine(params, cfg, max_batch=4, max_seq=32,
-                          temperature=0.8, top_k=7, sample_seed=43)
+    other = ServingEngine(params, cfg,
+                          serving=ServingConfig.from_flat(max_batch=4,
+                                                          max_seq=32,
+                                                          temperature=0.8,
+                                                          top_k=7,
+                                                          sample_seed=43))
     assert run(other, reqs) != together, "seed does not reach sampling"
 
 
@@ -351,7 +381,9 @@ def test_engine_reuses_freed_slots_without_scrubbing():
     shorts = [ServeRequest(rid=1 + i, prompt=rng.randint(0, 61, int(
         rng.randint(1, 10))).astype(np.int32), max_new=3)
         for i in range(6)]
-    engine = ServingEngine(params, cfg, max_batch=2, max_seq=32)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     stats = engine.run_closed_loop([long_req] + shorts)
     assert stats.n_requests == 7
     for c in stats.completions:
@@ -366,8 +398,10 @@ def test_engine_reuses_freed_slots_without_scrubbing():
 def test_trace_count_bounded_by_buckets():
     cfg = TINY_DENSE
     params = _params(cfg)
-    engine = ServingEngine(params, cfg, max_batch=4, max_seq=64,
-                           prompt_bucket_min=8)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=64,
+                                                           prompt_bucket_min=8))
     rng = np.random.RandomState(5)
 
     def schedule(n, seed):
@@ -409,7 +443,9 @@ def test_trace_count_bounded_by_buckets():
 def test_engine_validation():
     cfg = TINY_DENSE
     params = _params(cfg)
-    engine = ServingEngine(params, cfg, max_batch=2, max_seq=16)
+    engine = ServingEngine(params, cfg,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=16))
     with pytest.raises(ValueError, match="exceeds max_seq"):
         engine.submit(ServeRequest(rid=0, prompt=np.zeros(10, np.int32),
                                    max_new=7))
@@ -420,12 +456,14 @@ def test_engine_validation():
     from repro.configs import get_config
     ssm_cfg = get_config("mamba2-780m").reduced()
     with pytest.raises(ValueError, match="attention-cached"):
-        ServingEngine(_params(ssm_cfg), ssm_cfg, max_batch=2, max_seq=16)
+        ServingEngine(_params(ssm_cfg), ssm_cfg,
+                      serving=ServingConfig.from_flat(max_batch=2, max_seq=16))
 
     import dataclasses
     win_cfg = dataclasses.replace(cfg, sliding_window=8)
     with pytest.raises(ValueError, match="sliding_window"):
-        ServingEngine(params, win_cfg, max_batch=2, max_seq=16)
+        ServingEngine(params, win_cfg,
+                      serving=ServingConfig.from_flat(max_batch=2, max_seq=16))
     # a window that COVERS the whole slot cache is fine (linear == ring)
     ServingEngine(params, dataclasses.replace(cfg, sliding_window=16),
-                  max_batch=2, max_seq=16)
+                  serving=ServingConfig.from_flat(max_batch=2, max_seq=16))

@@ -20,13 +20,14 @@ import pytest
 
 import jax
 
+from repro.core import TrainingConfig
 from repro.core.guardrails import (CanaryGate, GuardrailConfig,
                                    TrainingGuardrails, make_lm_probe,
                                    tree_finite)
 from repro.core.simulation import FaultProfile, generate_requests
 from repro.launch.train_serve import build_training, tiny_cfg
 from repro.optim import sgd
-from repro.serving import ServeRequest, ServingEngine
+from repro.serving import ServeRequest, ServingConfig, ServingEngine
 
 CFG = tiny_cfg()
 pytestmark = pytest.mark.slow
@@ -52,8 +53,8 @@ def test_soak_hot_swaps_under_faults_threads_real_clock():
     def trainer():
         try:
             loop, cluster, _ = build_training(
-                CFG, T=0.2, seed=0, churny=False, guardrails=guardrails,
-                optimizer=sgd(lr=0.05),
+                CFG, training=TrainingConfig(T=0.2, guardrails=guardrails),
+                seed=0, churny=False, optimizer=sgd(lr=0.05),
                 fault_profiles={"w1": FaultProfile(nan_p=0.4)})
             for it in range(1, iterations + 1):
                 loop.iteration()
@@ -70,9 +71,13 @@ def test_soak_hot_swaps_under_faults_threads_real_clock():
             trainer_err.append(e)
 
     # ---- serving side: real engine, bounded queue, real-clock deadlines
-    engine = ServingEngine(tiny_params(), CFG, max_batch=4, max_seq=64,
-                           prompt_cap=16, max_queue=max_queue,
-                           shed_policy="reject", admission_deadline=30.0)
+    engine = ServingEngine(tiny_params(), CFG,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=64,
+                                                           prompt_cap=16,
+                                                           max_queue=max_queue,
+                                                           shed_policy="reject",
+                                                           admission_deadline=30.0))
     versions[0] = engine.params
     reqs = generate_requests(
         n_req, rate_rps=120.0, vocab_size=CFG.vocab_size,
@@ -125,8 +130,9 @@ def test_soak_hot_swaps_under_faults_threads_real_clock():
     for c in completions:
         if c.version not in replayers:
             replayers[c.version] = ServingEngine(
-                versions[c.version], CFG, max_batch=4, max_seq=64,
-                prompt_cap=16)
+                versions[c.version], CFG,
+                serving=ServingConfig.from_flat(max_batch=4, max_seq=64,
+                                                prompt_cap=16))
         solo = replayers[c.version].run_closed_loop(
             [ServeRequest(rid=c.rid, prompt=by_rid[c.rid].prompt,
                           max_new=by_rid[c.rid].max_new)]).completions[0]

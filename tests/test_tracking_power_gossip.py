@@ -94,6 +94,44 @@ def test_gossip_preserves_mean_and_contracts_spread():
     assert replica_spread(reps) < 0.05 * spread0        # consensus
 
 
+def test_gossip_odd_count_leaves_exactly_one_replica_untouched():
+    """A random matching over 2k+1 replicas pairs 2k of them; the odd
+    one out must come through the round bit-identical, every round."""
+    rng = np.random.RandomState(4)
+    reps = [{"w": jnp.asarray(rng.randn(8).astype(np.float32))}
+            for _ in range(5)]
+    before = [np.asarray(r["w"]).copy() for r in reps]
+    out = gossip_round(reps, np.random.RandomState(7))
+    untouched = [i for i in range(5)
+                 if np.array_equal(np.asarray(out[i]["w"]), before[i])]
+    assert len(untouched) == 1, untouched
+    # and mean conservation still holds with the odd replica sitting out
+    m0 = np.mean(before, axis=0)
+    m1 = np.mean([np.asarray(r["w"]) for r in out], axis=0)
+    assert np.abs(m0 - m1).max() < 1e-6
+
+
+def test_gossip_near_zero_weights_fall_back_to_unweighted_average():
+    """Two idle replicas (zero sample mass) must average 50/50 instead
+    of dividing by ~0 — the hierarchy hits this when every region's
+    inner steps processed no vectors (core/hierarchy.py)."""
+    a = {"w": jnp.asarray(np.float32([2.0, 4.0]))}
+    b = {"w": jnp.asarray(np.float32([4.0, 8.0]))}
+    out = gossip_round([a, b], np.random.RandomState(0),
+                       weights=[0.0, 0.0])
+    for r in out:
+        np.testing.assert_allclose(np.asarray(r["w"]), [3.0, 6.0],
+                                   rtol=0, atol=0)
+    assert np.isfinite(np.asarray(out[0]["w"])).all()
+    # asymmetric near-zero: one live weight still dominates cleanly
+    out = gossip_round([a, b], np.random.RandomState(0),
+                       weights=[1e-13, 3.0])
+    np.testing.assert_allclose(np.asarray(out[0]["w"]),
+                               np.asarray(out[1]["w"]))
+    np.testing.assert_allclose(np.asarray(out[0]["w"]), [4.0, 8.0],
+                               rtol=1e-6)
+
+
 def test_gossip_sgd_converges_decentralized():
     target = jnp.asarray(np.random.RandomState(2).randn(8))
     reps = [{"w": jnp.zeros(8)} for _ in range(6)]

@@ -21,11 +21,12 @@ import pytest
 
 import jax
 
+from repro.core import PublishConfig, TrainingConfig
 from repro.core.simulation import ServeCostModel, generate_requests
 from repro.launch.train_serve import (build_training, run_train_serve,
                                       tiny_cfg)
 from repro.models import transformer as tf
-from repro.serving import (ServeRequest, ServingEngine,
+from repro.serving import (ServeRequest, ServingConfig, ServingEngine,
                            SimulatedServeSession)
 
 CFG = tiny_cfg()
@@ -36,8 +37,10 @@ def _params(seed=0):
 
 
 def _solo_replay(params, req, **engine_kw):
-    engine = ServingEngine(params, CFG, max_batch=2, max_seq=64,
-                           **engine_kw)
+    engine = ServingEngine(params, CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=64,
+                                                           **engine_kw))
     c = engine.run_closed_loop([ServeRequest(
         rid=req.rid, prompt=req.prompt, max_new=req.max_new)])
     return c.completions[0].tokens.tolist()
@@ -47,7 +50,9 @@ def _solo_replay(params, req, **engine_kw):
 # swap_params validation + ring lifecycle
 # ---------------------------------------------------------------------------
 def test_swap_params_validation_and_ring():
-    engine = ServingEngine(_params(0), CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(_params(0), CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     assert engine.live_versions == [0]
     with pytest.raises(ValueError, match="structure"):
         engine.swap_params({"not": "a model"})
@@ -65,7 +70,9 @@ def test_swap_params_validation_and_ring():
 
 def test_versions_retire_when_last_pinned_slot_completes():
     p0, p1 = _params(0), _params(1)
-    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(p0, CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     rng = np.random.RandomState(0)
     engine.submit(ServeRequest(rid=0, prompt=rng.randint(
         0, CFG.vocab_size, 4).astype(np.int32), max_new=6))
@@ -84,7 +91,9 @@ def test_version_retires_on_chunk_path_completion():
     the ring must still shrink at that exact step, with no further
     swap_params call to sweep up after it."""
     p0, p1 = _params(0), _params(1)
-    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(p0, CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     rng = np.random.RandomState(5)
     engine.submit(ServeRequest(rid=0, prompt=rng.randint(
         0, CFG.vocab_size, 4).astype(np.int32), max_new=1))
@@ -115,7 +124,9 @@ def test_in_flight_requests_finish_under_pinned_version():
         0, CFG.vocab_size, 6).astype(np.int32), max_new=10)
     new = ServeRequest(rid=1, prompt=rng.randint(
         0, CFG.vocab_size, 5).astype(np.int32), max_new=6)
-    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=64)
+    engine = ServingEngine(p0, CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=64))
     engine.submit(old)
     rep = engine.step()                        # old admitted+prefilled @v0
     assert rep.admitted == 1
@@ -139,7 +150,10 @@ def test_swap_mid_chunked_prefill_stays_pinned():
     rng = np.random.RandomState(5)
     req = ServeRequest(rid=0, prompt=rng.randint(
         0, CFG.vocab_size, 30).astype(np.int32), max_new=5)
-    engine = ServingEngine(p0, CFG, max_batch=2, max_seq=64, prompt_cap=8)
+    engine = ServingEngine(p0, CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=64,
+                                                           prompt_cap=8))
     engine.submit(req)
     engine.step()                              # chunk 1 of 4 @v0
     engine.swap_params(p1)
@@ -147,14 +161,19 @@ def test_swap_mid_chunked_prefill_stays_pinned():
     while engine.has_work:
         done += engine.step().completed
     assert done[0].version == 0
-    solo = ServingEngine(p0, CFG, max_batch=2, max_seq=64, prompt_cap=8)
+    solo = ServingEngine(p0, CFG,
+                         serving=ServingConfig.from_flat(max_batch=2,
+                                                         max_seq=64,
+                                                         prompt_cap=8))
     ref = solo.run_closed_loop([req]).completions[0]
     assert done[0].tokens.tolist() == ref.tokens.tolist()
 
 
 def test_trace_count_invariant_under_swaps():
-    engine = ServingEngine(_params(0), CFG, max_batch=4, max_seq=64,
-                           prompt_cap=16)
+    engine = ServingEngine(_params(0), CFG,
+                           serving=ServingConfig.from_flat(max_batch=4,
+                                                           max_seq=64,
+                                                           prompt_cap=16))
     reqs = generate_requests(
         16, rate_rps=200.0, vocab_size=CFG.vocab_size, prompt_rng=(1, 24),
         gen_short=(1, 5), gen_long=(6, 10), long_frac=0.3, seed=2)
@@ -179,8 +198,10 @@ def test_trace_count_invariant_under_swaps():
 def test_event_loop_publishes_every_n_iterations():
     published = []
     loop, cluster, _ = build_training(
-        CFG, T=0.2, seed=0, churny=False, publish_every=3,
-        publish_fn=lambda p, v, t: published.append((v, t)))
+        CFG, training=TrainingConfig(
+            T=0.2, publish=PublishConfig(
+                every=3, fn=lambda p, v, t: published.append((v, t)))),
+        seed=0, churny=False)
     for _ in range(7):
         loop.iteration()
     assert [v for v, _ in published] == [3, 6]
@@ -218,8 +239,9 @@ def test_train_serve_fuzz_every_completion_replays_under_pinned_version():
         assert c.tokens.size == by_rid[c.rid].max_new
         if c.version not in replayers:
             replayers[c.version] = ServingEngine(
-                versions[c.version], CFG, max_batch=4, max_seq=64,
-                prompt_cap=16)
+                versions[c.version], CFG,
+                serving=ServingConfig.from_flat(max_batch=4, max_seq=64,
+                                                prompt_cap=16))
         solo = replayers[c.version].run_closed_loop(
             [ServeRequest(rid=c.rid, prompt=by_rid[c.rid].prompt,
                           max_new=by_rid[c.rid].max_new)]).completions[0]
@@ -228,7 +250,9 @@ def test_train_serve_fuzz_every_completion_replays_under_pinned_version():
 
 
 def test_session_clock_monotone_and_swap_ordering():
-    engine = ServingEngine(_params(0), CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(_params(0), CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     session = SimulatedServeSession(engine, ServeCostModel(), [])
     session.push_swap(1.0, _params(1), 1)
     with pytest.raises(ValueError, match="time order"):
@@ -245,7 +269,8 @@ def test_train_state_snapshot_seeds_engine(tmp_path):
                                      save_train_state,
                                      serving_params_from_train_state)
 
-    loop, cluster, _ = build_training(CFG, T=0.2, seed=0, churny=False)
+    loop, cluster, _ = build_training(
+        CFG, training=TrainingConfig(T=0.2), seed=0, churny=False)
     for _ in range(3):
         loop.iteration()
     path = str(tmp_path / "ts.npz")
@@ -258,7 +283,9 @@ def test_train_state_snapshot_seeds_engine(tmp_path):
                     jax.tree.leaves(loop.reducer.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # the recovered tree drives the engine directly
-    engine = ServingEngine(params, CFG, max_batch=2, max_seq=32)
+    engine = ServingEngine(params, CFG,
+                           serving=ServingConfig.from_flat(max_batch=2,
+                                                           max_seq=32))
     rng = np.random.RandomState(1)
     req = ServeRequest(rid=0, prompt=rng.randint(
         0, CFG.vocab_size, 5).astype(np.int32), max_new=4)

@@ -1,0 +1,186 @@
+"""TrainingConfig (core/config.py, docs/hierarchy.md §1): the grouped
+replacement for MasterEventLoop's flat kwargs, mirroring ServingConfig.
+
+Pinned contracts:
+
+  - grouped construction and ``TrainingConfig.from_flat`` drive
+    BIT-IDENTICAL training runs (the consolidation changes the calling
+    convention, never the arithmetic);
+  - the flat MasterEventLoop kwargs still work for one deprecation
+    cycle under DeprecationWarning, and produce the same run;
+  - mixing ``training=`` with flat kwargs raises, naming the flat keys;
+  - every invalid field fails AT CONSTRUCTION naming the offending
+    value.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DeadlineConfig, GradientCompressor,
+                        HierarchyConfig, JoinEvent, MasterEventLoop,
+                        MasterReducer, PublishConfig, TrainingConfig,
+                        UploadDataEvent)
+from repro.core.guardrails import GuardrailConfig, TrainingGuardrails
+from repro.core.scheduler import AdaptiveScheduler
+from repro.core.simulation import DeviceProfile, SimulatedCluster
+from repro.optim import sgd
+
+N, D = 96, 12
+
+
+def _problem():
+    rng = np.random.RandomState(0)
+    X = rng.randn(N, D).astype(np.float32)
+    y = (X @ rng.randn(D).astype(np.float32)).astype(np.float32)
+
+    @jax.jit
+    def _lg(params, Xb, yb):
+        def loss_fn(p):
+            r = Xb @ p["w"] - yb
+            return 0.5 * jnp.sum(r * r)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        return g, loss
+
+    def grad_fn(params, Xb, yb):
+        g, loss = _lg(params, jnp.asarray(Xb), jnp.asarray(yb))
+        return g, float(loss)
+
+    return {"w": jnp.zeros(D)}, grad_fn, (X, y)
+
+
+def _run(training=None, iters=4, **flat):
+    """Build one small fleet and run it; returns the final flat params."""
+    params, grad_fn, (X, y) = _problem()
+    red = MasterReducer(params, sgd(lr=0.01),
+                        compressor=GradientCompressor("topk", frac=0.5),
+                        fused=True)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=0)
+    loop = MasterEventLoop(
+        reducer=red, cluster=cluster,
+        scheduler=AdaptiveScheduler(T=0.2, prior_power=300.0),
+        **({"training": training} if training is not None else flat))
+    loop.submit(UploadDataEvent(range(N)))
+    for i in range(3):
+        cluster.add_worker(f"w{i}", DeviceProfile(f"d{i}", 300.0, 0.01,
+                                                  0.05, uplink_bps=5e4))
+        loop.submit(JoinEvent(f"w{i}", capacity=N))
+    loop.run(iters)
+    return np.asarray(red.flat_params), loop
+
+
+# ---------------------------------------------------------------------------
+# equivalence: grouped == from_flat == deprecated flat kwargs, bit-exact
+# ---------------------------------------------------------------------------
+def test_grouped_and_from_flat_runs_are_bit_identical():
+    grouped, _ = _run(training=TrainingConfig(
+        T=0.2, deadline=DeadlineConfig(quantile=0.75, slack=2.0)))
+    flat, _ = _run(training=TrainingConfig.from_flat(
+        T=0.2, deadline_quantile=0.75, deadline_slack=2.0))
+    np.testing.assert_array_equal(grouped, flat)
+
+
+def test_deprecated_flat_kwargs_warn_and_match_grouped_bit_exactly():
+    grouped, gl = _run(training=TrainingConfig(
+        T=0.2, deadline=DeadlineConfig(quantile=0.75, slack=2.0)))
+    with pytest.warns(DeprecationWarning, match="deadline_quantile"):
+        flat, fl = _run(deadline_quantile=0.75, deadline_slack=2.0,
+                        T=0.2)
+    np.testing.assert_array_equal(grouped, flat)
+    assert gl.deadline_quantile == fl.deadline_quantile == 0.75
+    assert gl.deadline_slack == fl.deadline_slack == 2.0
+
+
+def test_mixing_grouped_and_flat_raises_naming_the_flat_keys():
+    params, grad_fn, (X, y) = _problem()
+    red = MasterReducer(params, sgd(lr=0.01),
+                        compressor=GradientCompressor("topk", frac=0.5),
+                        fused=True)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=0)
+    with pytest.raises(ValueError, match="deadline_quantile"):
+        MasterEventLoop(reducer=red, cluster=cluster,
+                        training=TrainingConfig(T=0.2),
+                        deadline_quantile=0.5)
+
+
+def test_build_training_mixing_raises_and_flat_warns():
+    from repro.launch.train_serve import build_training, tiny_cfg
+    with pytest.raises(ValueError, match="not both"):
+        build_training(tiny_cfg(), training=TrainingConfig(T=0.2), T=0.2)
+    with pytest.warns(DeprecationWarning, match="build_training"):
+        loop, _, _ = build_training(tiny_cfg(), T=0.2, churny=False,
+                                    n_data=64)
+    assert loop.training.T == 0.2
+
+
+def test_publish_and_guardrails_ride_the_grouped_config():
+    published = []
+    g = TrainingGuardrails(GuardrailConfig(strikes_to_evict=99))
+    _, loop = _run(training=TrainingConfig(
+        T=0.2,
+        publish=PublishConfig(every=2,
+                              fn=lambda p, v, t: published.append(v)),
+        guardrails=g))
+    assert published == [2, 4]
+    assert loop.guardrails is g                   # instance kept, not copied
+    # GuardrailConfig knobs also accepted: the loop builds the watchdog
+    cfg = TrainingConfig(T=0.2,
+                         guardrails=GuardrailConfig(strikes_to_evict=7))
+    live = cfg.resolve_guardrails()
+    assert isinstance(live, TrainingGuardrails)
+    assert live.cfg.strikes_to_evict == 7
+
+
+# ---------------------------------------------------------------------------
+# construction validation names the offending value
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("build, msg", [
+    (lambda: TrainingConfig(T=0.0), r"T=0\.0 must be positive"),
+    (lambda: DeadlineConfig(quantile=1.5),
+     r"deadline_quantile=1\.5 must lie in \(0, 1\]"),
+    (lambda: DeadlineConfig(quantile=0.5, slack=0.0),
+     r"deadline_slack=0\.0 must be positive"),
+    (lambda: PublishConfig(every=-1), r"publish_every=-1"),
+    (lambda: HierarchyConfig(n_regions=0), r"n_regions=0"),
+    (lambda: HierarchyConfig(n_regions=1, gossip=True),
+     r"n_regions=1 with gossip enabled"),
+    (lambda: HierarchyConfig(n_regions=2, inner_steps=0),
+     r"inner_steps=0"),
+    (lambda: HierarchyConfig(n_regions=2, gossip_frac=0.0),
+     r"gossip_frac=0\.0"),
+    (lambda: HierarchyConfig(n_regions=2, gossip_lr=1.5),
+     r"gossip_lr=1\.5"),
+    (lambda: TrainingConfig(guardrails="nope"), r"guardrails="),
+])
+def test_validation_names_offending_value(build, msg):
+    with pytest.raises(ValueError, match=msg):
+        build()
+
+
+def test_configs_are_frozen():
+    cfg = TrainingConfig(T=0.2)
+    with pytest.raises(Exception):
+        cfg.T = 1.0
+    with pytest.raises(Exception):
+        cfg.deadline.quantile = 0.5
+
+
+def test_no_warning_on_pure_grouped_or_default_construction():
+    params, grad_fn, (X, y) = _problem()
+    red = MasterReducer(params, sgd(lr=0.01),
+                        compressor=GradientCompressor("topk", frac=0.5),
+                        fused=True)
+    cluster = SimulatedCluster(grad_fn=grad_fn, data=(X, y), mode="real",
+                               seed=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        MasterEventLoop(reducer=red, cluster=cluster,
+                        scheduler=AdaptiveScheduler(T=0.2),
+                        training=TrainingConfig(T=0.2))
+        MasterEventLoop(reducer=red, cluster=cluster,
+                        scheduler=AdaptiveScheduler(T=0.2))
